@@ -1,0 +1,114 @@
+"""Fig. 5 analogue: cache-hit-ratio / DMA-locality proxy, with vs without AIA.
+
+The paper measures L1 hit ratio on the GPU (allocation 64.66→88.15 %,
+accumulation 64.41→75.14 %).  TPUs have no comparable L1, so we measure the
+same *phenomenon* — how AIA turns scattered accesses into locality-friendly
+streams — with two hardware-independent metrics over the actual SpGEMM
+access trace (the sequence of B-rows touched while producing C):
+
+1. **Simulated cache hit ratio**: an LRU over B-row cache lines replays the
+   trace.  "Without AIA": rows of A processed in natural order, each B-row
+   element access is an independent transaction.  "With AIA": rows processed
+   in the row-grouping Map order (the paper's load-balanced mapping, §IV-D)
+   and each B-row arrives as ONE ranged transaction (R = row length).
+2. **Memory round trips**: the paper's Fig. 2 count — 2N request/response
+   pairs without AIA vs 1 bulk request per row stream with AIA.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.apps.graphs import table_ii_matrix
+from repro.core.grouping import group_rows
+from repro.sparse.formats import CSR
+
+LINE_BYTES = 128  # cache line / DMA granule
+ROW_BYTES = 8     # one CSR (col, val) element
+
+
+class LRU:
+    def __init__(self, n_lines: int):
+        self.n = n_lines
+        self.stamp = 0
+        self.lines: Dict[int, int] = {}
+
+    def access(self, line: int) -> bool:
+        self.stamp += 1
+        hit = line in self.lines
+        self.lines[line] = self.stamp
+        if len(self.lines) > self.n:
+            victim = min(self.lines, key=self.lines.get)
+            del self.lines[victim]
+        return hit
+
+
+def access_trace(a: CSR, order: np.ndarray):
+    """Yield (b_row, b_row_len) accesses in the given A-row order."""
+    indptr = np.asarray(a.indptr)
+    indices = np.asarray(a.indices)
+    row_len = indptr[1:] - indptr[:-1]
+    for i in order:
+        for p in range(indptr[i], indptr[i + 1]):
+            yield int(indices[p]), int(row_len[indices[p]])
+
+
+def simulate(a: CSR, cache_kib: int = 128) -> Dict[str, float]:
+    n_lines = cache_kib * 1024 // LINE_BYTES
+    natural = np.arange(a.n_rows)
+    plan = group_rows(a, a)
+    grouped = plan.map_rows
+
+    results = {}
+    for label, order, ranged in (("without_aia", natural, False),
+                                 ("with_aia", grouped, True)):
+        lru = LRU(n_lines)
+        hits = total = 0
+        round_trips = 0
+        for brow, blen in access_trace(a, order):
+            nbytes = max(blen, 1) * ROW_BYTES
+            first_line = brow * 64  # line id space per row (synthetic layout)
+            lines = range(first_line, first_line + (nbytes + LINE_BYTES - 1)
+                          // LINE_BYTES)
+            if ranged:
+                # one bulk ranged transaction: a single "access" covering the
+                # whole row; hit iff the row's lead line is resident
+                total += 1
+                hits += lru.access(first_line)
+                for ln in lines:
+                    lru.lines[ln] = lru.stamp  # prefetched by the bulk stream
+                round_trips += 1  # one request/response pair
+            else:
+                # element-by-element: indptr lookup + per-line accesses
+                for ln in lines:
+                    total += 1
+                    hits += lru.access(ln)
+                round_trips += 2 * max(blen, 1)  # Fig. 2: 2 trips per element
+        results[f"{label}_hit_pct"] = 100.0 * hits / max(total, 1)
+        results[f"{label}_round_trips"] = round_trips
+    results["round_trip_reduction"] = (
+        results["without_aia_round_trips"] / max(results["with_aia_round_trips"], 1))
+    return results
+
+
+def run(names=("scircuit", "cage15"), n_override=None) -> List[Dict]:
+    out = []
+    for name in names:
+        a = table_ii_matrix(name, n_override=n_override)
+        r = {"workload": name}
+        r.update(simulate(a))
+        out.append(r)
+    return out
+
+
+def main():
+    for r in run():
+        print(f"locality_{r['workload']},0,"
+              f"hit_without={r['without_aia_hit_pct']:.1f}%;"
+              f"hit_with={r['with_aia_hit_pct']:.1f}%;"
+              f"round_trip_x={r['round_trip_reduction']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

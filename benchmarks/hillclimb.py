@@ -1,0 +1,104 @@
+"""§Perf hillclimbing harness: measure a cell under config variants.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch granite-3-2b \
+        --shape train_4k --variant baseline
+    ... --variant seq_parallel --set sequence_parallel=True
+
+Each run appends a record to results/perf_log.json with the three roofline
+terms, so EXPERIMENTS.md §Perf can show hypothesis → change → before/after.
+Variants are applied as ArchConfig field overrides and/or Shardings flags.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import get_config, SHAPE_SETS
+from repro.launch.dryrun import measure_cell, lower_cell
+from repro.launch.mesh import make_production_mesh
+from benchmarks.roofline import roofline_from_record
+
+LOG = "results/perf_log.json"
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "False"):
+        return k, v == "True"
+    return k, v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig field override, e.g. topk_k=1024")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--note", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    overrides = dict(parse_override(s) for s in args.set)
+    nested = {k: v for k, v in overrides.items() if "." in k}
+    flat = {k: v for k, v in overrides.items() if "." not in k}
+    by_outer = {}
+    for k, v in nested.items():
+        outer, inner = k.split(".", 1)
+        by_outer.setdefault(outer, {})[inner] = v
+    for outer, kw in by_outer.items():
+        flat[outer] = dataclasses.replace(getattr(cfg, outer), **kw)
+    if flat:
+        cfg = dataclasses.replace(cfg, **flat)
+    shape = {s.name: s for s in SHAPE_SETS}[args.shape]
+    mesh = make_production_mesh()
+
+    if args.seq_parallel:
+        import repro.launch.sharding as shmod
+        orig = shmod.make_shardings
+
+        def patched(mesh, sequence_parallel=False):
+            return orig(mesh, sequence_parallel=True)
+        shmod.make_shardings = patched
+        import repro.launch.dryrun as dr
+        dr.make_shardings = patched
+
+    rec = measure_cell(cfg, shape, mesh)
+    rl = roofline_from_record(rec, cfg, shape)
+    entry = {
+        "variant": args.variant,
+        "arch": args.arch,
+        "shape": args.shape,
+        "overrides": overrides,
+        "seq_parallel": args.seq_parallel,
+        "note": args.note,
+        "t_compute": rl.t_compute,
+        "t_memory": rl.t_memory,
+        "t_collective": rl.t_collective,
+        "dominant": rl.dominant,
+        "roofline_fraction": rl.roofline_fraction,
+        "useful_ratio": rl.useful_ratio,
+        "flops_per_device": rec["flops_per_device"],
+        "bytes_per_device": rec["bytes_accessed_per_device"],
+        "collective_bytes": rec["collective_bytes"],
+    }
+    log = []
+    if os.path.exists(LOG):
+        log = json.load(open(LOG))
+    log.append(entry)
+    os.makedirs("results", exist_ok=True)
+    with open(LOG, "w") as f:
+        json.dump(log, f, indent=1)
+    print(json.dumps(entry, indent=1))
+
+
+if __name__ == "__main__":
+    main()

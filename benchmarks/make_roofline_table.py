@@ -1,0 +1,71 @@
+"""Generate the EXPERIMENTS.md §Roofline table from dry-run JSON records.
+
+    PYTHONPATH=src python -m benchmarks.make_roofline_table \
+        results/measure_single.json results/dryrun_single.json
+
+First file: measurement-mode records (trip-count-corrected flops/bytes/
+collectives — see DESIGN.md §7).  Second (optional): production scan-graph
+records supplying memory_analysis and compile times.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.roofline import roofline_from_record, format_table
+from repro.configs import get_config, SHAPE_SETS
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    meas_path = sys.argv[1] if len(sys.argv) > 1 else "results/measure_single.json"
+    prod_path = sys.argv[2] if len(sys.argv) > 2 else "results/dryrun_single.json"
+    meas = load(meas_path)
+    prod = {(r["arch"], r["shape"]): r for r in load(prod_path)
+            if "skipped" not in r}
+    shapes = {s.name: s for s in SHAPE_SETS}
+    rows, skips, errors = [], [], []
+    for rec in meas:
+        if "skipped" in rec:
+            skips.append(rec)
+            continue
+        if "error" in rec:
+            errors.append(rec)
+            continue
+        cfg = get_config(rec["arch"])
+        rl = roofline_from_record(rec, cfg, shapes[rec["shape"]])
+        rows.append((rec, rl))
+
+    print("### Roofline terms (single-pod 16×16, measurement-mode corrected)\n")
+    print(format_table([r for _, r in rows]))
+    print()
+    if skips:
+        print("Skipped cells (DESIGN.md §5):\n")
+        for s in skips:
+            print(f"* {s['arch']} × {s['shape']} — {s['skipped']}")
+        print()
+    if errors:
+        print("MEASUREMENT ERRORS (fix before finalizing):\n")
+        for e in errors:
+            print(f"* {e['arch']} × {e['shape']} — {e['error']}")
+        print()
+    print("### Production-graph memory & compile (scan graphs, per device)\n")
+    print("| arch | shape | args GiB | temps GiB | out GiB | compile s |")
+    print("|---|---|---|---|---|---|")
+    for (rec, _) in rows:
+        p = prod.get((rec["arch"], rec["shape"]))
+        if not p:
+            continue
+        m = p["memory"]
+        print(f"| {p['arch']} | {p['shape']} "
+              f"| {m['argument_bytes']/2**30:.2f} "
+              f"| {m['temp_bytes']/2**30:.2f} "
+              f"| {m['output_bytes']/2**30:.2f} | {p['compile_s']:.0f} |")
+
+
+if __name__ == "__main__":
+    main()

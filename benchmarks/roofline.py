@@ -1,0 +1,143 @@
+"""Roofline analysis from the compiled dry-run (deliverable g).
+
+Three terms per (arch × shape × mesh), TPU v5e constants:
+
+    T_compute    = HLO_FLOPs_per_chip / 197e12            (bf16 MXU peak)
+    T_memory     = HLO_bytes_per_chip / 819e9             (HBM bandwidth)
+    T_collective = wire_bytes_per_chip / (n_links · 50e9) (ICI)
+
+Sources: ``compiled.cost_analysis()`` (flops / bytes accessed are already
+per-partition post-SPMD), and the post-SPMD HLO text for collective operand
+bytes.  Wire-cost weights (ring algorithms over the ICI torus):
+all-reduce 2(n−1)/n, all-gather & reduce-scatter (n−1)/n, all-to-all
+(n−1)/n, collective-permute 1.  n_links: v5e has 4 ICI links per chip
+(2D torus); collectives on one mesh axis use 2 of them concurrently.
+
+MODEL_FLOPS: 6·N·D for train (N = params incl. embeddings, D = tokens);
+6·N_active·D for MoE; 2·N·B for a decode step (forward only, 1 token);
+the ratio MODEL_FLOPS/HLO_FLOPs measures useful compute (remat/redundancy
+shows up as ratio < its theoretical ceiling: 1.0 for fwd-only, ~0.75 with
+full remat since HLO executes 4 passes of the 3-pass fwd+bwd budget).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+# --- hardware constants (TPU v5e, per chip) ---
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_LINK_BW = 50e9            # B/s per link
+ICI_LINKS_USED = 2            # links engaged per mesh-axis collective
+
+WIRE_WEIGHT = {
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: Dict[str, int]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops_per_chip: float
+    hlo_flops_per_chip: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_seconds(self) -> float:
+        """Lower bound on step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self) -> float:
+        return (self.model_flops_per_chip / self.hlo_flops_per_chip
+                if self.hlo_flops_per_chip else 0.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the ideal: useful-FLOPs time / bound time.
+
+        = (MODEL_FLOPS/chip / peak) / max-term.  This is the MFU the step
+        would achieve if it ran exactly at the dominant-term bound.
+        """
+        ideal = self.model_flops_per_chip / PEAK_FLOPS_BF16
+        return ideal / self.bound_seconds if self.bound_seconds else 0.0
+
+
+def model_flops(cfg, shape) -> float:
+    """Whole-step analytic FLOPs (global, all chips)."""
+    tokens = shape.global_batch * shape.seq_len
+    n_active = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention over the cache
+    flops = 2.0 * n_active * shape.global_batch
+    # attention reads: 2 (QK^T) + 2 (PV) flops per cached element per head-dim
+    if cfg.attention != "none":
+        kv_dim = (cfg.mla.kv_lora + cfg.mla.qk_rope_dim) if cfg.attention == "mla" \
+            else cfg.n_heads * cfg.hd * 2
+        n_attn_layers = cfg.n_layers if cfg.family != "hybrid" else \
+            cfg.n_layers // max(cfg.shared_attn_every, 1)
+        flops += 2.0 * shape.global_batch * shape.seq_len * kv_dim * n_attn_layers
+    return flops
+
+
+def wire_bytes_per_chip(collective_bytes: Dict[str, float],
+                        mesh_shape: Dict[str, int]) -> float:
+    """Apply ring wire weights.  cost figures are per-partition already;
+    weight by the largest mesh axis (conservative: collectives span one
+    axis; cross-pod ARs span pod×data which the max also covers)."""
+    n = max(mesh_shape.values()) if mesh_shape else 1
+    total = 0.0
+    for kind, b in collective_bytes.items():
+        w = WIRE_WEIGHT.get(kind, lambda n: 1.0)(max(n, 2))
+        total += w * b
+    return total
+
+
+def roofline_from_record(rec: Dict, cfg, shape) -> Optional[Roofline]:
+    if "skipped" in rec:
+        return None
+    n_chips = 1
+    for v in rec["mesh"].values():
+        n_chips *= v
+    mf = model_flops(cfg, shape) / n_chips
+    wire = wire_bytes_per_chip(rec["collective_bytes"], rec["mesh"])
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        t_compute=rec["flops_per_device"] / PEAK_FLOPS_BF16,
+        t_memory=rec["bytes_accessed_per_device"] / HBM_BW,
+        t_collective=wire / (ICI_LINKS_USED * ICI_LINK_BW),
+        model_flops_per_chip=mf,
+        hlo_flops_per_chip=rec["flops_per_device"],
+    )
+
+
+def format_table(rows) -> str:
+    hdr = ("| arch | shape | T_comp (s) | T_mem (s) | T_coll (s) | dominant "
+           "| MODEL/HLO | roofline frac |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        if r is None:
+            continue
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.t_compute:.3e} | {r.t_memory:.3e} "
+            f"| {r.t_collective:.3e} | **{r.dominant}** "
+            f"| {r.useful_ratio:.2f} | {r.roofline_fraction:.1%} |")
+    return "\n".join(lines)

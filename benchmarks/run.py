@@ -1,0 +1,87 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Fast-mode defaults keep the whole
+suite under a few minutes on CPU; pass --full for the larger workloads used
+in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _emit(name, us, derived):
+    print(f"{name},{us:.0f},{derived}")
+    sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import bench_self_product, bench_locality, \
+        bench_graph_apps, bench_gnn
+
+    # --- Table II / Fig 6: matrix self-product ---
+    names = list(bench_self_product.run(
+        names=None if args.full else ["scircuit", "p2p-Gnutella04",
+                                      "Economics", "Protein"],
+        n_override=None if args.full else 1024,
+        methods=("sort",) if not args.full else ("sort", "hash")))
+    for r in names:
+        _emit(f"selfprod_{r['workload']}", r["sort_ms"] * 1e3,
+              f"gflops={r['sort_gflops']:.3f};ip={r['intermediate_products']};"
+              f"nnz_c={r['nnz_c']};vs_dense_pct={r['sort_vs_dense_reduction_pct']:.1f};"
+              f"group_sched_pct={r['group_sched_reduction_pct']:.1f}")
+
+    # --- Fig 5: locality / cache-hit proxy ---
+    loc_names = ("scircuit", "cage15") if not args.full else \
+        ("scircuit", "cage15", "web-Google")
+    for r in bench_locality.run(names=loc_names,
+                                n_override=None if args.full else 2048):
+        _emit(f"locality_{r['workload']}", 0,
+              f"hit_without_pct={r['without_aia_hit_pct']:.1f};"
+              f"hit_with_pct={r['with_aia_hit_pct']:.1f};"
+              f"round_trip_x={r['round_trip_reduction']:.1f}")
+
+    # --- Fig 7/8: graph applications ---
+    for r in bench_graph_apps.bench_contraction(
+            names=("Economics", "Protein") if not args.full else
+            ("RoadTX", "web-Google", "Economics", "amazon0601",
+             "WindTunnel", "Protein"),
+            n_override=None if args.full else 1024):
+        _emit(f"contraction_{r['workload']}", r["spgemm_ms"] * 1e3,
+              f"vs_dense_pct={r['reduction_vs_dense_pct']:.1f};ip={r['total_ip']}")
+    for r in bench_graph_apps.bench_mcl(
+            names=("Economics",) if not args.full else
+            ("web-Google", "Economics", "Protein"),
+            max_iters=2 if not args.full else 3,
+            n_override=None if args.full else 1024):
+        _emit(f"mcl_{r['workload']}", r["spgemm_ms"] * 1e3,
+              f"vs_dense_pct={r['reduction_vs_dense_pct']:.1f};"
+              f"clusters={r['n_clusters']}")
+
+    # --- Fig 10/11: GNN training ---
+    for r in bench_gnn.run(
+            datasets=("Flickr",) if not args.full else
+            ("Flickr", "ogbn-arxiv", "Yelp"),
+            archs=("gcn",) if not args.full else ("gcn", "gin", "sage"),
+            n_steps=3 if not args.full else 8):
+        _emit(f"gnn_{r['dataset']}_{r['arch']}", r["topk_s"] * 1e6,
+              f"reduction_pct={r['reduction_pct']:.1f};"
+              f"topk_loss={r['topk_final_loss']:.3f};"
+              f"dense_loss={r['dense_final_loss']:.3f}")
+
+    # --- Fig 9: scaling study ---
+    s = bench_gnn.scaling_study(
+        sizes=(512, 1024, 2048) if not args.full else (512, 1024, 2048, 4096))
+    _emit("gnn_scaling", 0,
+          "pearson_r={:.2f};reductions={}".format(
+              s["pearson_r"],
+              "/".join(f"{r['reduction_pct']:.0f}%" for r in s["rows"])))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""GNN training with TopK structured pruning (paper §V-C, Eq. 1–3).
+
+    PYTHONPATH=src python examples/gnn_training.py
+
+Trains GCN/GIN/GraphSAGE with the pruning layer that turns SpMM into
+SpGEMM, and compares against the dense baseline — the paper's Fig. 10
+experiment at example scale.
+"""
+import time
+
+import numpy as np
+
+from repro.apps import GNNConfig, train_gnn, rmat_graph
+from repro.apps.gnn import normalize_adjacency
+
+
+def main():
+    n = 1024
+    g = rmat_graph(n, 16.0, seed=0)
+    a = normalize_adjacency(g)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, 64)).astype(np.float32)
+    labels = rng.integers(0, 8, n)
+
+    for arch in ("gcn", "gin", "sage"):
+        row = [arch]
+        for mode in ("topk", "dense"):
+            cfg = GNNConfig(arch=arch, d_in=64, d_hidden=64, n_classes=8,
+                            topk=16, sparse_mode=mode)
+            t0 = time.perf_counter()
+            _, hist = train_gnn(cfg, a, x, labels, n_steps=15)
+            dt = time.perf_counter() - t0
+            row.append(f"{mode}: {dt:.2f}s loss {hist[0]:.3f}->{hist[-1]:.3f}")
+        print(" | ".join(row))
+    print("(TopK keeps 16/64 features per node -> aggregation is the")
+    print(" paper's SpGEMM; backward uses the Eq. 3 winner-take-all mask)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: the paper's SpGEMM pipeline end-to-end in 60 seconds.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the three phases (Algorithm 1 → Table-I grouping → allocation →
+accumulation) on a small power-law graph, checks the result against the
+dense oracle, and shows the AIA kernel serving the same gather pattern.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.apps.graphs import rmat_graph
+from repro.core import intermediate_products, group_rows, spgemm
+from repro.core.ref import spgemm_dense
+from repro.kernels import ops
+from repro.sparse.formats import csr_to_dense
+
+
+def main():
+    # A power-law graph like the paper's Table II workloads
+    a = rmat_graph(512, 8.0, seed=0)
+    print(f"A: {a.shape}, nnz={int(np.asarray(a.nnz))}")
+
+    # Phase 1 — Algorithm 1: intermediate products + Table-I grouping
+    ip = intermediate_products(a, a)
+    plan = group_rows(a, a)
+    print(f"total IP = {plan.total_ip} (paper FLOPs = {2*plan.total_ip})")
+    print(f"Table-I groups: sizes={plan.group_sizes} "
+          f"capacities={plan.table_capacities}")
+
+    # Phases 2+3 — allocation + accumulation (both engines agree)
+    res_sort = spgemm(a, a, method="sort")
+    res_hash = spgemm(a, a, method="hash")
+    c_dense = np.asarray(spgemm_dense(a, a))
+    got = np.asarray(csr_to_dense(res_sort.c))
+    np.testing.assert_allclose(got, c_dense, rtol=1e-4, atol=1e-4)
+    got_h = np.asarray(csr_to_dense(res_hash.c))
+    np.testing.assert_allclose(got_h, c_dense, rtol=1e-4, atol=1e-4)
+    print(f"C = A·A: nnz={res_sort.info['nnz_c']}, "
+          f"compression={res_sort.info['compression_ratio']:.2f} "
+          f"(hash & sort engines verified vs dense oracle)")
+
+    # The AIA primitive: ranged indirect gather via scalar-prefetch DMA
+    x = jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)
+    idx = jnp.asarray([3, 0, 7, 7, 1], jnp.int32)
+    out = ops.aia_ranged_gather(x, idx, r=1, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x)[[3, 0, 7, 7, 1]])
+    print("AIA ranged gather (Pallas, interpret mode): OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end LM training driver: ~100M-param model, a few hundred steps,
+with checkpoints, fault-tolerant trainer, and the paper's TopK-SpGEMM FFN.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 [--ffn-mode topk]
+
+This is deliverable (b)'s end-to-end driver at CPU-feasible scale; the same
+stack (configs → train_step → trainer) is what launch/train.py runs on the
+production mesh.
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import TokenPipeline
+from repro.optim import adamw, linear_warmup_cosine
+from repro.train import Trainer, TrainerConfig, init_train_state, make_train_step
+
+
+def model_100m(ffn_mode="dense") -> ArchConfig:
+    # ~100M params: 20L × d512 × ff2048, vocab 8192  (≈92M)
+    return ArchConfig(
+        name="repro-100m", family="dense", n_layers=20, d_model=512,
+        n_heads=8, n_kv_heads=8, d_ff=2048, vocab=8192, head_dim=64,
+        ffn_mode=ffn_mode, topk_k=256 if ffn_mode != "dense" else 0,
+        dtype="float32", remat="none", loss_chunks=4,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ffn-mode", default="dense",
+                    choices=["dense", "topk", "block_topk"])
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = model_100m(args.ffn_mode)
+    n_params = cfg.n_params()
+    print(f"model: {cfg.name} ffn={cfg.ffn_mode} ~{n_params/1e6:.0f}M params")
+
+    opt = adamw(linear_warmup_cosine(3e-4, 20, args.steps))
+    state = init_train_state(cfg, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch, seed=0)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="repro_lm_")
+    tcfg = TrainerConfig(total_steps=args.steps, checkpoint_every=100,
+                         checkpoint_dir=ckpt_dir)
+    trainer = Trainer(tcfg, step, state, pipe)
+    trainer.run()
+    losses = [m["loss"] for m in trainer.history]
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({len(losses)} steps; ckpts in {ckpt_dir})")
+    if trainer.monitor.flagged:
+        print(f"straggler steps flagged: {trainer.monitor.flagged}")
+    assert losses[-1] < losses[0], "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

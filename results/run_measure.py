@@ -1,0 +1,26 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.configs import ARCH_IDS, SHAPE_SETS, get_config
+from repro.launch import specs as sp
+from repro.launch.dryrun import measure_cell
+from repro.launch.mesh import make_production_mesh
+
+mesh = make_production_mesh()
+records = []
+for arch in ARCH_IDS:
+    cfg = get_config(arch)
+    for shape in SHAPE_SETS:
+        ok, why = sp.cell_is_runnable(cfg, shape)
+        if not ok:
+            records.append({"arch": arch, "shape": shape.name, "skipped": why})
+            continue
+        try:
+            records.append(measure_cell(cfg, shape, mesh))
+        except Exception as e:  # record and continue; fix later
+            print(f"[measure] FAIL {arch} x {shape.name}: {type(e).__name__}: {e}")
+            records.append({"arch": arch, "shape": shape.name,
+                            "error": f"{type(e).__name__}: {e}"})
+        with open("/root/repo/results/measure_single.json", "w") as f:
+            json.dump(records, f, indent=1, default=str)
+print("DONE", len(records))

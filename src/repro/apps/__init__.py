@@ -1,0 +1,16 @@
+"""Paper applications (§V): Markov Clustering, Graph Contraction, GNN+TopK."""
+from repro.apps.graphs import (
+    rmat_graph, uniform_graph, table_ii_matrix, TABLE_II_SCALED, TABLE_III_SCALED,
+)
+from repro.apps.markov_clustering import mcl, MCLResult
+from repro.apps.graph_contraction import graph_contraction
+from repro.apps.gnn import GNNConfig, init_gnn, gnn_forward, train_gnn
+from repro.apps.sampling import bulk_sample
+
+__all__ = [
+    "rmat_graph", "uniform_graph", "table_ii_matrix",
+    "TABLE_II_SCALED", "TABLE_III_SCALED",
+    "mcl", "MCLResult", "graph_contraction",
+    "GNNConfig", "init_gnn", "gnn_forward", "train_gnn",
+    "bulk_sample",
+]

@@ -1,0 +1,7 @@
+"""Mesh-independent sharded checkpointing with async save + elastic restore."""
+from repro.checkpoint.ckpt import (
+    save_checkpoint, restore_checkpoint, latest_step, AsyncCheckpointer,
+)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]

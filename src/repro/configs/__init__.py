@@ -1,0 +1,9 @@
+"""Architecture configs: one module per assigned architecture + the paper's
+own GNN workloads.  ``get_config(name)`` returns the full published config;
+``smoke_config(name)`` returns the reduced same-family config used by CPU
+smoke tests (the full configs are exercised only via the dry-run)."""
+from repro.configs.base import ArchConfig, SHAPE_SETS, ShapeSpec
+from repro.configs.registry import ARCH_IDS, get_config, smoke_config
+
+__all__ = ["ArchConfig", "ARCH_IDS", "get_config", "smoke_config",
+           "SHAPE_SETS", "ShapeSpec"]

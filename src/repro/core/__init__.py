@@ -1,0 +1,24 @@
+"""The paper's primary contribution: hash-based multi-phase SpGEMM + AIA.
+
+Phases (paper §III):
+  1. Row-grouping  — Algorithm 1 intermediate-product counting + Table I
+                     logarithmic binning (``repro.core.grouping``).
+  2. Allocation    — symbolic phase: unique output columns per row
+                     (``repro.core.allocation``; hash + sort variants).
+  3. Accumulation  — numeric phase: value accumulation + gather + sort
+                     (``repro.core.accumulation``).
+
+``repro.core.spgemm.spgemm`` is the public API; ``spgemm_bsr`` is the
+MXU-native block variant used by the LM integration.
+"""
+from repro.core.ip_count import intermediate_products, ip_histogram
+from repro.core.grouping import group_rows, GroupPlan, TABLE_I
+from repro.core.spgemm import spgemm, spgemm_info, SpGEMMResult
+from repro.core.spgemm_bsr import bsr_spgemm_dense_rhs
+
+__all__ = [
+    "intermediate_products", "ip_histogram",
+    "group_rows", "GroupPlan", "TABLE_I",
+    "spgemm", "spgemm_info", "SpGEMMResult",
+    "bsr_spgemm_dense_rhs",
+]

@@ -1,0 +1,113 @@
+"""Row-grouping phase (paper §III-B, Table I).
+
+Rows of A are classified into four groups by intermediate-product count
+using logarithmic binning, then *logically* reordered (the ``Map`` array —
+no physical data movement, exactly as in the paper).  Each group gets its
+own GPU-resource analogue: on TPU that is a (rows-per-program, hash/table
+capacity, memory space) tuple instead of a (thread-assignment, block-size,
+shared-memory) tuple.
+
+Table I (paper) → TPU analogue used here:
+
+| Group | IP range   | paper: threads  | here: rows/program | table capacity |
+|-------|------------|-----------------|--------------------|----------------|
+| 0     | 0–31       | PWPR, block 512 | 8 (VPU sublanes)   | 64   (VMEM)    |
+| 1     | 32–511     | TBPR, block 256 | 1                  | 1024 (VMEM)    |
+| 2     | 512–8191   | TBPR, block 1024| 1                  | 8192 (VMEM)    |
+| 3     | ≥8192      | TBPR, global HT | 1                  | next_pow2(max IP) (HBM) |
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ip_count import intermediate_products
+from repro.sparse.formats import CSR
+
+# (ip_lo, ip_hi_exclusive, table_capacity); group 3 capacity resolved at plan
+# time from the actual max IP (the paper falls back to global memory).
+TABLE_I = (
+    (0, 32, 64),
+    (32, 512, 1024),
+    (512, 8192, 8192),
+    (8192, None, None),
+)
+
+GROUP_BOUNDARIES = (32, 512, 8192)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupPlan:
+    """Host-side schedule produced by the row-grouping phase.
+
+    ``map_rows`` is the paper's ``Map``: ``map_rows[i]`` = original row id of
+    the i-th row in group-sorted order.  ``group_offsets`` delimits groups in
+    that order; ``group_sizes_padded`` are the static per-group row counts
+    each group's kernel is compiled for (padded up so recompilation is rare).
+    """
+
+    map_rows: np.ndarray  # (n_rows,) int32
+    group_id: np.ndarray  # (n_rows,) int32 per original row
+    group_offsets: np.ndarray  # (5,) int32 cumulative
+    group_sizes: Tuple[int, int, int, int]
+    group_sizes_padded: Tuple[int, int, int, int]
+    table_capacities: Tuple[int, int, int, int]
+    max_ip: int
+    total_ip: int
+
+    def rows_of_group(self, g: int) -> np.ndarray:
+        return self.map_rows[self.group_offsets[g]: self.group_offsets[g + 1]]
+
+
+def assign_groups(ip: jax.Array) -> jax.Array:
+    """Group id per row (0..3) from IP, log-binned per Table I."""
+    b = jnp.asarray(GROUP_BOUNDARIES)
+    return jnp.searchsorted(b, ip, side="right").astype(jnp.int32)
+
+
+def build_map(ip: jax.Array) -> jax.Array:
+    """The paper's Map: stable argsort of rows by group id (pure JAX)."""
+    return jnp.argsort(assign_groups(ip), stable=True).astype(jnp.int32)
+
+
+def _pad_size(n: int, quantum: int = 64) -> int:
+    if n == 0:
+        return 0
+    return int(np.ceil(n / quantum) * quantum)
+
+
+def group_rows(a: CSR, b: CSR, pad_quantum: int = 64) -> GroupPlan:
+    """Run the row-grouping phase and return the host-side schedule.
+
+    Like the paper's implementation (which reads group sizes back to the
+    host to configure kernel launches/streams), this is the one intentional
+    host sync in the pipeline.
+    """
+    ip = np.asarray(intermediate_products(a, b))
+    gid = np.searchsorted(np.asarray(GROUP_BOUNDARIES), ip, side="right").astype(np.int32)
+    map_rows = np.argsort(gid, kind="stable").astype(np.int32)
+    sizes = tuple(int((gid == g).sum()) for g in range(4))
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    max_ip = int(ip.max(initial=0))
+    caps = []
+    for g, (_, _, cap) in enumerate(TABLE_I):
+        if cap is None:
+            # group 3: global-memory table sized to the next pow2 ≥ max IP
+            c = 1 << int(np.ceil(np.log2(max(max_ip, 2))))
+            caps.append(int(c))
+        else:
+            caps.append(cap)
+    return GroupPlan(
+        map_rows=map_rows,
+        group_id=gid,
+        group_offsets=offsets,
+        group_sizes=sizes,
+        group_sizes_padded=tuple(_pad_size(s, pad_quantum) for s in sizes),
+        table_capacities=tuple(caps),
+        max_ip=max_ip,
+        total_ip=int(ip.sum()),
+    )

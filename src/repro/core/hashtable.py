@@ -1,0 +1,112 @@
+"""Algorithm 4 — InsertIntoTable / AddInTable, adapted to TPU semantics.
+
+The paper's hash table uses linear probing with ``atomicCAS`` because many
+GPU threads insert into one row's table concurrently.  Pallas/TPU has no
+VMEM atomics, so concurrency is restructured (DESIGN.md §2): *across* rows
+we parallelize with ``vmap``/the Pallas grid; *within* a row the insert
+stream is sequential, which makes Algorithm 4's CAS a plain read-test-write
+and — unlike the GPU version — makes accumulation order deterministic.
+
+Hash function: ``(key * 2654435761) mod tableSize`` (Knuth multiplicative,
+the paper's "multiplication and modulo"), linear probe stride 1.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+MULTIPLIER = jnp.uint32(2654435761)
+EMPTY = jnp.int32(-1)
+
+
+class HashTable(NamedTuple):
+    keys: jax.Array  # (cap,) int32, EMPTY where unused
+    vals: jax.Array  # (cap,) float
+    count: jax.Array  # () int32 — uniqueCount of Algorithm 2/3
+
+
+def make_table(capacity: int, dtype=jnp.float32) -> HashTable:
+    return HashTable(
+        keys=jnp.full((capacity,), EMPTY, jnp.int32),
+        vals=jnp.zeros((capacity,), dtype),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def _hash(key: jax.Array, capacity: int) -> jax.Array:
+    h = key.astype(jnp.uint32) * MULTIPLIER
+    if capacity & (capacity - 1) == 0:  # pow2 fast path
+        return (h & jnp.uint32(capacity - 1)).astype(jnp.int32)
+    return (h % jnp.uint32(capacity)).astype(jnp.int32)
+
+
+def insert(table: HashTable, key: jax.Array, val: jax.Array, accumulate: bool = True) -> HashTable:
+    """One Algorithm-4 insert (linear probing).  ``key`` < 0 is a no-op pad.
+
+    A probe bound of ``capacity`` guards against a full table (the paper's
+    sizing policy — capacity ≥ IP ≥ uniqueCount — guarantees a free slot,
+    but an unbounded probe loop would hang on misuse; we drop instead).
+    """
+    cap = table.keys.shape[0]
+    pos0 = _hash(jnp.maximum(key, 0), cap)
+
+    def cond(state):
+        _, done, probes, _ = state
+        return (~done) & (probes < cap)
+
+    def body(state):
+        pos, _, probes, tab = state
+        slot = tab.keys[pos]
+        hit = slot == key
+        empty = slot == EMPTY
+        new_keys = jnp.where(empty, tab.keys.at[pos].set(key), tab.keys)
+        add = jnp.where(hit | empty, val, 0) if accumulate else 0.0
+        new_vals = tab.vals.at[pos].add(add) if accumulate else tab.vals
+        new_count = tab.count + jnp.where(empty, 1, 0).astype(jnp.int32)
+        done = hit | empty
+        new_tab = HashTable(
+            keys=jnp.where(done, new_keys, tab.keys),
+            vals=jnp.where(done, new_vals, tab.vals) if accumulate else tab.vals,
+            count=jnp.where(done, new_count, tab.count),
+        )
+        next_pos = jnp.where(done, pos, (pos + 1) % cap)
+        return next_pos, done, probes + 1, new_tab
+
+    skip = key < 0
+    _, _, _, out = jax.lax.while_loop(cond, body, (pos0, skip, jnp.int32(0), table))
+    return out
+
+
+def insert_stream(table: HashTable, keys: jax.Array, vals: jax.Array,
+                  accumulate: bool = True) -> HashTable:
+    """Insert a padded stream of (key, val); keys < 0 are padding.
+
+    This is the per-row inner loop of Algorithms 2/3/5: on the GPU the
+    stream is split across PWPR lanes / TBPR warps; here it is consumed
+    sequentially per row and rows are vmapped.
+    """
+
+    def body(tab, kv):
+        k, v = kv
+        return insert(tab, k, v, accumulate=accumulate), None
+
+    out, _ = jax.lax.scan(body, table, (keys, vals))
+    return out
+
+
+def extract_sorted(table: HashTable):
+    """Element gathering + column-index sorting (Algorithm 5 steps 2–3).
+
+    Returns (cols, vals, count): entries sorted ascending by column id,
+    padded with col = -1 / val = 0 at the tail.  The paper uses a bitonic
+    network; ``jnp.sort`` lowers to the same class of sorting network on TPU.
+    """
+    cap = table.keys.shape[0]
+    key = jnp.where(table.keys == EMPTY, jnp.int32(2**31 - 1), table.keys)
+    order = jnp.argsort(key, stable=True)
+    cols = table.keys[order]
+    vals = table.vals[order]
+    valid = jnp.arange(cap) < table.count
+    return jnp.where(valid, cols, -1), jnp.where(valid, vals, 0), table.count

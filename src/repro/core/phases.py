@@ -1,0 +1,142 @@
+"""Allocation + accumulation phase engines (paper Algorithms 2/3/5).
+
+Each engine consumes one *group* of rows (from the row-grouping phase) with
+static shapes: ``a_cap`` = max nnz(A-row) in the group, ``kb_cap`` = max
+nnz(B-row) globally, ``table_cap`` = the group's Table-I hash capacity.
+
+Two interchangeable engines, validated against each other and the dense
+oracle:
+
+* ``*_hash``  — faithful Algorithm 4 semantics (linear-probing table per
+  row, sequential insert stream, vmapped across rows = the paper's
+  PWPR/TBPR across-row parallelism).
+* ``*_sort``  — the TPU-vectorized engine (Nagasaka-style sort+segment-sum);
+  same results, MXU/VPU-friendly, used for large scale and inside jitted
+  training graphs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashtable as ht
+
+INT_MAX = jnp.int32(2**31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# Intermediate-product enumeration (the two-level indirection itself)
+# ---------------------------------------------------------------------------
+
+def enumerate_products(cols_a, vals_a, b_idx, b_val):
+    """Per-row intermediate products.
+
+    cols_a, vals_a: (R, a_cap) padded with -1 / 0 — the rows' A entries.
+    b_idx, b_val:  (nB, kb_cap) ELL of B.
+    Returns keys (R, a_cap*kb_cap) int32 (-1 padded) and vals (same shape).
+
+    ``b_idx[cols_a]`` is exactly the AIA ranged indirect access
+    (``rpt_B[col_A[j]]`` → row of B); here expressed as an XLA gather, in
+    ``repro.kernels.aia_gather`` as a scalar-prefetch DMA stream.
+    """
+    r, a_cap = cols_a.shape
+    kb = b_idx.shape[1]
+    safe = jnp.clip(cols_a, 0, b_idx.shape[0] - 1)
+    bi = b_idx[safe]  # (R, a_cap, kb)
+    bv = b_val[safe]
+    valid = (cols_a >= 0)[:, :, None] & (bi >= 0)
+    keys = jnp.where(valid, bi, -1).reshape(r, a_cap * kb)
+    vals = jnp.where(valid, vals_a[:, :, None] * bv, 0).reshape(r, a_cap * kb)
+    return keys, vals
+
+
+def gather_group_rows(indptr, indices, data, rows, a_cap):
+    """Gather the A entries of ``rows`` (padded with -1) into (R, a_cap)."""
+    n_rows = indptr.shape[0] - 1
+    safe_rows = jnp.clip(rows, 0, n_rows - 1)
+    starts = indptr[safe_rows]  # (R,)
+    counts = indptr[safe_rows + 1] - starts
+    offs = jnp.arange(a_cap, dtype=jnp.int32)[None, :]
+    pos = starts[:, None] + offs
+    ok = (offs < counts[:, None]) & (rows >= 0)[:, None]
+    pos = jnp.where(ok, pos, 0)
+    cols = jnp.where(ok, indices[pos], -1)
+    vals = jnp.where(ok, data[pos], 0)
+    return cols, vals
+
+
+# ---------------------------------------------------------------------------
+# Hash engine (Algorithm 2/3 allocation; Algorithm 5 accumulation)
+# ---------------------------------------------------------------------------
+
+def _row_alloc_hash(keys, table_cap):
+    tab = ht.make_table(table_cap)
+    tab = ht.insert_stream(tab, keys, jnp.zeros_like(keys, jnp.float32), accumulate=False)
+    return tab.count
+
+
+def _row_accum_hash(keys, vals, table_cap):
+    tab = ht.make_table(table_cap, vals.dtype)
+    tab = ht.insert_stream(tab, keys, vals, accumulate=True)
+    return ht.extract_sorted(tab)
+
+
+@functools.partial(jax.jit, static_argnames=("table_cap",))
+def allocate_hash(keys, table_cap: int):
+    """uniqueCount per row (Algorithms 2/3 output).  keys: (R, ip_cap)."""
+    return jax.vmap(lambda k: _row_alloc_hash(k, table_cap))(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("table_cap",))
+def accumulate_hash(keys, vals, table_cap: int):
+    """(cols, vals, counts) per row, column-sorted (Algorithm 5 output)."""
+    return jax.vmap(lambda k, v: _row_accum_hash(k, v, table_cap))(keys, vals)
+
+
+# ---------------------------------------------------------------------------
+# Sort engine (vectorized; identical outputs)
+# ---------------------------------------------------------------------------
+
+def _sort_unique(keys, vals, out_cap):
+    """Per-batch sort + segment-sum + compaction.  keys: (R, ip_cap)."""
+    r, ip_cap = keys.shape
+    skey = jnp.where(keys >= 0, keys, INT_MAX)
+    order = jnp.argsort(skey, axis=1, stable=True)
+    sk = jnp.take_along_axis(skey, order, axis=1)
+    sv = jnp.take_along_axis(vals, order, axis=1)
+    valid = sk != INT_MAX
+    is_start = jnp.concatenate(
+        [jnp.ones((r, 1), bool), sk[:, 1:] != sk[:, :-1]], axis=1
+    ) & valid
+    ur = jnp.cumsum(is_start, axis=1) - 1  # unique rank per slot
+    counts = jnp.max(jnp.where(valid, ur + 1, 0), axis=1).astype(jnp.int32)
+    rows_ix = jnp.arange(r)[:, None]
+    tgt = jnp.where(valid & (ur < out_cap), ur, out_cap)
+    out_vals = jnp.zeros((r, out_cap + 1), vals.dtype).at[rows_ix, tgt].add(
+        jnp.where(valid, sv, 0)
+    )[:, :out_cap]
+    start_tgt = jnp.where(is_start & (ur < out_cap), ur, out_cap)
+    out_cols = jnp.full((r, out_cap + 1), -1, jnp.int32).at[rows_ix, start_tgt].set(
+        jnp.where(is_start, sk, -1).astype(jnp.int32)
+    )[:, :out_cap]
+    return out_cols, out_vals, counts
+
+
+@jax.jit
+def allocate_sort(keys):
+    """uniqueCount per row via sort (no value accumulation)."""
+    r, ip_cap = keys.shape
+    skey = jnp.where(keys >= 0, keys, INT_MAX)
+    sk = jnp.sort(skey, axis=1)
+    valid = sk != INT_MAX
+    is_start = jnp.concatenate(
+        [jnp.ones((r, 1), bool), sk[:, 1:] != sk[:, :-1]], axis=1
+    ) & valid
+    return jnp.sum(is_start, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("out_cap",))
+def accumulate_sort(keys, vals, out_cap: int):
+    return _sort_unique(keys, vals, out_cap)

@@ -1,0 +1,25 @@
+"""Pure-jnp dense oracles for the SpGEMM pipeline (test ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.formats import CSR, csr_to_dense
+
+
+def spgemm_dense(a: CSR, b: CSR) -> jnp.ndarray:
+    """densify(A) @ densify(B) — the semantic ground truth for C = AB."""
+    return csr_to_dense(a) @ csr_to_dense(b)
+
+
+def intermediate_products_dense(a: CSR, b: CSR) -> np.ndarray:
+    """Algorithm 1 ground truth via explicit loops (host numpy)."""
+    indptr_a = np.asarray(a.indptr)
+    indices_a = np.asarray(a.indices)
+    indptr_b = np.asarray(b.indptr)
+    out = np.zeros(a.n_rows, np.int64)
+    for i in range(a.n_rows):
+        for p in range(indptr_a[i], indptr_a[i + 1]):
+            col = indices_a[p]
+            out[i] += indptr_b[col + 1] - indptr_b[col]
+    return out

@@ -1,0 +1,34 @@
+"""Block-CSR SpGEMM paths for the MXU (DESIGN.md §2, adaptation #5).
+
+TPU compute is a 128×128 systolic array: element-wise CSR MACs waste it.
+The LM-integration paths therefore use BSR with MXU-aligned blocks; the
+row-wise Gustavson structure (and the AIA indirection pattern) is preserved
+at block granularity:  ``C[i,:] += A[i,k] @ B[k,:]`` where ``k`` ranges over
+the block-column ids of block-row i — a ranged indirect access over B's
+block rows, served by scalar-prefetch DMA in the Pallas kernel
+(``repro.kernels.spgemm_bsr``).  This module holds the XLA reference path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.formats import BSR
+
+
+def bsr_spgemm_dense_rhs(a: BSR, x: jax.Array) -> jax.Array:
+    """C = A @ X with BSR A and dense X (n_cols, d) — XLA fallback path."""
+    br, bc = a.block_shape
+    nbr = a.n_brows
+    d = x.shape[1]
+    cap = a.indices.shape[0]
+    xb = x.reshape(a.shape[1] // bc, bc, d)
+    p = jnp.arange(cap, dtype=jnp.int32)
+    rid = jnp.searchsorted(a.indptr, p, side="right").astype(jnp.int32) - 1
+    valid = p < a.nnzb
+    gathered = jnp.take(xb, a.indices, axis=0, mode="clip")  # (cap, bc, d)
+    prods = jnp.einsum("kab,kbd->kad", a.blocks, gathered)  # (cap, br, d)
+    prods = jnp.where(valid[:, None, None], prods, 0)
+    rid = jnp.where(valid, rid, nbr)
+    out = jnp.zeros((nbr + 1, br, d), prods.dtype).at[rid].add(prods)
+    return out[:nbr].reshape(nbr * br, d)

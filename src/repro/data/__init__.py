@@ -1,0 +1,4 @@
+"""Deterministic data pipeline (restart-reproducible, sharding-aware)."""
+from repro.data.pipeline import TokenPipeline, synthetic_batch
+
+__all__ = ["TokenPipeline", "synthetic_batch"]

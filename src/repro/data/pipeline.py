@@ -1,0 +1,76 @@
+"""Deterministic synthetic token pipeline.
+
+Fault-tolerance contract (DESIGN.md §6): the batch at step ``t`` is a pure
+function of ``(seed, t)`` — after a restart-from-checkpoint the stream
+resumes bit-identically, so recovery reproduces the exact gradient sequence.
+Host sharding: each data-parallel host materializes only its local slice.
+
+The "dataset" is a mixture of Zipfian unigrams with Markov bigram structure,
+enough signal for loss-decrease integration tests on ~100M-param models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    local_slice: slice = slice(None)  # this host's rows of the global batch
+    prefetch: int = 2
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, 0xA1A]))
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """The full deterministic global batch for ``step`` (then sliced)."""
+        rng = self._rng(step)
+        b, s, v = self.global_batch, self.seq_len, self.vocab
+        # Zipfian unigram base
+        ranks = np.arange(1, v + 1)
+        probs = 1.0 / ranks
+        probs /= probs.sum()
+        toks = rng.choice(v, size=(b, s + 1), p=probs)
+        # inject learnable bigram structure: after token t comes (t*7+3)%v
+        # with prob .5
+        follow = (toks[:, :-1] * 7 + 3) % v
+        coin = rng.random((b, s)) < 0.5
+        toks[:, 1:] = np.where(coin, follow, toks[:, 1:])
+        tokens = toks[:, :-1].astype(np.int32)
+        labels = toks[:, 1:].astype(np.int32)
+        tokens = tokens[self.local_slice]
+        labels = labels[self.local_slice]
+        return {"tokens": tokens, "labels": labels}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def synthetic_batch(cfg, shape_spec, rng: Optional[np.random.Generator] = None,
+                    batch_override: Optional[int] = None) -> Dict:
+    """One batch (numpy) matching an (arch, shape) cell, incl. stub inputs."""
+    rng = rng or np.random.default_rng(0)
+    b = batch_override or shape_spec.global_batch
+    s = shape_spec.seq_len
+    out = {
+        "tokens": rng.integers(0, cfg.vocab, (b, s)).astype(np.int32),
+        "labels": rng.integers(0, cfg.vocab, (b, s)).astype(np.int32),
+    }
+    if cfg.frontend == "vision_stub":
+        out["vision_embeds"] = rng.standard_normal(
+            (b, cfg.vision_patches, cfg.d_model)).astype(np.float32)
+    if cfg.encoder_layers:
+        out["frames"] = rng.standard_normal(
+            (b, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    return out

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels — the AIA hardware technique, TPU-native.
+
+The paper's AIA engine lives in the HBM base die and serves *ranged indirect
+accesses* as bulk sequential streams.  The TPU-native equivalent is Pallas
+**scalar prefetch** (`PrefetchScalarGridSpec`): index arrays are staged into
+SMEM before kernel start and drive the `BlockSpec.index_map`, so the DMA
+engine — not the compute core — resolves the indirection and streams blocks
+HBM→VMEM, double-buffered.  See DESIGN.md §2 for the full mapping table.
+
+Kernels (each with `ops.py` jit'd wrapper + `ref.py` pure-jnp oracle):
+
+* ``aia_gather``  — the AIA primitive itself: out[i] = x[idx[i]·R : +R].
+* ``spgemm_bsr``  — block-row Gustavson accumulation on the MXU.
+* ``topk_spmm``   — Eq. (1) sparse-activation FFN matmul (per-token and
+                    MXU-aligned block-structured variants).
+* ``hash_accum``  — Algorithm 4 (linear-probing insert/accumulate) with the
+                    table in VMEM scratch, one output row per grid step —
+                    the Table-I Group-0/1 kernel policy.
+* ``flash_attention`` — fused online-softmax attention (scores stay in
+                    VMEM; the §Perf memory-roofline fix).
+
+All kernels are written for TPU (VMEM BlockSpecs, MXU-shaped tiles) and
+validated on CPU with ``interpret=True``.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

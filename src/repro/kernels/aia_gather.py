@@ -1,0 +1,100 @@
+"""AIA ranged indirect gather — the paper's Fig. 2 primitive on TPU.
+
+Semantics (paper §IV-C): given index array ``b`` and data array ``a``, serve
+``a[b[i]·R] … a[b[i]·R + R − 1]`` for i = 0..N−1 as **one bulk stream**
+instead of 2N processor⇄memory round trips.
+
+TPU mapping: ``b`` is a scalar-prefetch operand — it is copied to SMEM
+*before* the kernel body runs, and ``BlockSpec.index_map`` reads it to
+program each grid step's HBM→VMEM DMA.  The compute core never issues the
+indirection; the DMA engine does, near memory, and Pallas double-buffers the
+stream (block i+1's DMA overlaps block i's consumption).  This is the same
+request-consolidation AIA performs in the HBM base die.
+
+Alignment note: BlockSpec indices are in units of the block shape, so ranges
+start at multiples of R (library callers pad rows accordingly).  ``R = 1``
+(``gather_rows``) covers CSR row gathers with arbitrary row ids — the
+dominant SpGEMM pattern (`rpt_B[col_A[j]]` → row of B).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(idx_ref, x_ref, o_ref):
+    # The gather already happened at DMA time (index_map); just stream out.
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("r", "interpret"))
+def aia_ranged_gather(x: jax.Array, idx: jax.Array, r: int = 1,
+                      interpret: bool = True) -> jax.Array:
+    """out[i·R:(i+1)·R, :] = x[idx[i]·R : idx[i]·R+R, :].
+
+    x:   (n_blocks·R, d) data array (HBM).
+    idx: (N,) int32 block indices (the paper's ``b``; prefetched to SMEM).
+    """
+    n = idx.shape[0]
+    d = x.shape[1]
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n,),
+            in_specs=[pl.BlockSpec((r, d), lambda i, idx_ref: (idx_ref[i], 0))],
+            out_specs=pl.BlockSpec((r, d), lambda i, idx_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n * r, d), x.dtype),
+        interpret=interpret,
+    )(idx, x)
+
+
+def _copy_kernel_2d(idx_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
+def gather_rows(x: jax.Array, idx: jax.Array, rows_per_block: int = 8,
+                interpret: bool = True) -> jax.Array:
+    """out[i] = x[idx[i]] with idx grouped ``rows_per_block`` at a time.
+
+    Each grid step DMAs ``rows_per_block`` independent rows (one descriptor
+    per row — the AIA "switching network" role) and emits them contiguously.
+    idx length must be a multiple of rows_per_block (callers pad with any
+    valid row id).
+    """
+    n = idx.shape[0]
+    d = x.shape[1]
+    assert n % rows_per_block == 0, (n, rows_per_block)
+    n_steps = n // rows_per_block
+
+    def kernel(idx_ref, x_hbm, o_ref, *, rpb):
+        step = pl.program_id(0)
+
+        def body(sem):
+            for r in range(rpb):
+                row = idx_ref[step * rpb + r]
+                cp = pltpu.make_async_copy(
+                    x_hbm.at[pl.ds(row, 1), :], o_ref.at[pl.ds(r, 1), :], sem
+                )
+                cp.start()
+                cp.wait()
+
+        pl.run_scoped(body, pltpu.SemaphoreType.DMA)
+
+    return pl.pallas_call(
+        functools.partial(kernel, rpb=rows_per_block),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_steps,),
+            in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=pl.BlockSpec((rows_per_block, d), lambda i, idx_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(idx, x)

@@ -1,0 +1,101 @@
+"""Fused causal attention (flash) — the §Perf fix for the memory roofline.
+
+The measured baseline (EXPERIMENTS.md §Perf) is memory-bound on attention
+score traffic: XLA materializes the (S×S) scores between the two matmuls,
+costing ~4·B·H·S² bytes of HBM traffic per layer per pass.  This kernel
+keeps the running (m, l, acc) online-softmax state in VMEM scratch across
+the kv-block grid dimension, so scores never touch HBM — the canonical
+FlashAttention schedule mapped to the TPU grid/BlockSpec model.
+
+Grid: (B·H, nq, nk), kv innermost (sequential on a TPU core → scratch
+carries state).  Causal masking: whole kv-blocks strictly above the
+diagonal are skipped via ``pl.when`` (no FLOPs, no DMA consumed from the
+pipeline's perspective beyond the prefetch); the diagonal block applies an
+elementwise mask.  GQA: callers pass KV already expanded to H (the
+repo-wide layout; see models/attention.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  q_blk, k_blk, nk, causal, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (not causal) or (ki * k_blk <= qi * q_blk + q_blk - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)            # (q_blk, D)
+        k = k_ref[0].astype(jnp.float32)            # (k_blk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * q_blk + jax.lax.broadcasted_iota(jnp.int32,
+                                                         (q_blk, k_blk), 0)
+            kpos = ki * k_blk + jax.lax.broadcasted_iota(jnp.int32,
+                                                         (q_blk, k_blk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "q_blk", "k_blk", "interpret"))
+def flash_attention_fused(q: jax.Array, k: jax.Array, v: jax.Array,
+                          causal: bool = True, q_blk: int = 128,
+                          k_blk: int = 128, interpret: bool = True):
+    """q, k, v: (BH, S, D) with KV pre-expanded to the query head count."""
+    bh, s, d = q.shape
+    q_blk = min(q_blk, s)
+    k_blk = min(k_blk, s)
+    assert s % q_blk == 0 and s % k_blk == 0, (s, q_blk, k_blk)
+    nq, nk = s // q_blk, s // k_blk
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(_flash_kernel, q_blk=q_blk, k_blk=k_blk,
+                               nk=nk, causal=causal, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_blk, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, k_blk, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, k_blk, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, 1), jnp.float32),   # running max
+            pltpu.VMEM((q_blk, 1), jnp.float32),   # running denom
+            pltpu.VMEM((q_blk, d), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,112 @@
+"""Algorithm 4 (InsertIntoTable/AddInTable) as a Pallas TPU kernel.
+
+One grid step = one output row of C: the row's padded intermediate-product
+stream (keys, vals) is consumed sequentially against a VMEM-resident
+linear-probing hash table — the TPU realization of the paper's Table-I
+per-group kernels (Group 0/1: small tables in fast memory, one row per
+program; across-row parallelism comes from the grid, replacing PWPR/TBPR
+thread blocks; no atomics needed because the per-row stream is sequential,
+DESIGN.md §2 adaptation #1/#2).
+
+Emits the *unsorted* table + uniqueCount per row; column-index sorting
+(Algorithm 5 step 3) stays in XLA (`jnp.sort` lowers to a sorting network),
+matching the phase split of the paper.
+
+Scalar-sequential probing maps to the TPU's scalar core; it is the right
+tool for the small-IP groups the paper assigns to PWPR.  Large-IP rows use
+the sort engine (repro.core.phases) instead — same policy split as Table I.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MULTIPLIER = 2654435761
+EMPTY = -1
+
+
+def _hash_kernel(keys_ref, vals_ref, cols_ref, out_ref, cnt_ref,
+                 tkey_ref, tval_ref, *, ip_cap, table_cap):
+    # reset the VMEM table for this row
+    tkey_ref[...] = jnp.full_like(tkey_ref, EMPTY)
+    tval_ref[...] = jnp.zeros_like(tval_ref)
+
+    def insert(i, count):
+        key = keys_ref[0, i]
+        val = vals_ref[0, i]
+        h = (key.astype(jnp.uint32) * jnp.uint32(MULTIPLIER))
+        pos0 = (h % jnp.uint32(table_cap)).astype(jnp.int32)
+
+        def cond(state):
+            _, done, probes = state
+            return jnp.logical_and(jnp.logical_not(done), probes < table_cap)
+
+        def body(state):
+            pos, _, probes = state
+            slot = tkey_ref[pos]
+            hit = slot == key
+            empty = slot == EMPTY
+
+            @pl.when(empty)
+            def _():
+                tkey_ref[pos] = key
+
+            @pl.when(hit | empty)
+            def _():
+                tval_ref[pos] = tval_ref[pos] + val
+
+            done = hit | empty
+            nxt = jnp.where(done, pos, (pos + 1) % table_cap)
+            return nxt, done, probes + 1
+
+        jax.lax.while_loop(cond, body, (pos0, key < 0, jnp.int32(0)))
+        return count  # uniqueCount is recovered from table occupancy below
+
+    jax.lax.fori_loop(0, ip_cap, insert, jnp.int32(0))
+    # gather the table out; uniqueCount = occupied slots
+    occupied = tkey_ref[...] != EMPTY
+    cols_ref[0, :] = tkey_ref[...]
+    out_ref[0, :] = tval_ref[...]
+    cnt_ref[0, 0] = jnp.sum(occupied.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("table_cap", "interpret"))
+def hash_accumulate(keys: jax.Array, vals: jax.Array, table_cap: int,
+                    interpret: bool = True):
+    """Per-row Algorithm-4 accumulation.
+
+    keys: (R, ip_cap) int32, -1 padded; vals: (R, ip_cap) float32.
+    Returns (cols (R, table_cap) int32 EMPTY-padded — *unsorted*,
+             vals (R, table_cap) float32, counts (R,) int32).
+    """
+    r, ip_cap = keys.shape
+    kernel = functools.partial(_hash_kernel, ip_cap=ip_cap,
+                               table_cap=table_cap)
+    cols, out, cnt = pl.pallas_call(
+        kernel,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, ip_cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, ip_cap), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, table_cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, table_cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, table_cap), jnp.int32),
+            jax.ShapeDtypeStruct((r, table_cap), jnp.float32),
+            jax.ShapeDtypeStruct((r, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((table_cap,), jnp.int32),
+            pltpu.VMEM((table_cap,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(keys, vals)
+    return cols, out, cnt[:, 0]

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def aia_ranged_gather(x: jax.Array, idx: jax.Array, r: int = 1) -> jax.Array:
+    """out[i·R:(i+1)·R] = x[idx[i]·R : +R] — reshaped take."""
+    n_blocks = x.shape[0] // r
+    xb = x.reshape(n_blocks, r, x.shape[1])
+    return jnp.take(xb, idx, axis=0).reshape(idx.shape[0] * r, x.shape[1])
+
+
+def gather_rows(x: jax.Array, idx: jax.Array) -> jax.Array:
+    return jnp.take(x, idx, axis=0)
+
+
+def bsr_spmm(rowptr, colidx, a_blocks, b):
+    """Dense oracle: densify BSR then matmul."""
+    n_brows = rowptr.shape[0] - 1
+    bs = a_blocks.shape[1]
+    d = b.shape[1]
+    xb = b.reshape(b.shape[0] // bs, bs, d)
+    out = jnp.zeros((n_brows, bs, d), jnp.float32)
+    rowptr = jax.device_get(rowptr)
+    colidx = jax.device_get(colidx)
+    for i in range(n_brows):
+        acc = jnp.zeros((bs, d), jnp.float32)
+        for p in range(int(rowptr[i]), int(rowptr[i + 1])):
+            acc = acc + a_blocks[p].astype(jnp.float32) @ xb[colidx[p]].astype(jnp.float32)
+        out = out.at[i].set(acc)
+    return out.reshape(n_brows * bs, d)
+
+
+def topk_spmm(vals, idx, w2):
+    """y[i] = Σ_t vals[i,t] · w2[idx[i,t]]."""
+    gathered = jnp.take(w2, idx, axis=0)  # (n, k, d)
+    return jnp.einsum("nk,nkd->nd", vals.astype(jnp.float32),
+                      gathered.astype(jnp.float32))
+
+
+def block_topk_spmm(h_kept, bidx, w2, block: int):
+    """Oracle for the tile-block variant."""
+    n_tiles, kb, tile, blk = h_kept.shape
+    d = w2.shape[1]
+    w2b = w2.reshape(w2.shape[0] // block, block, d)
+    gathered = jnp.take(w2b, bidx, axis=0)  # (n_tiles, kb, block, d)
+    out = jnp.einsum("nktb,nkbd->ntd", h_kept.astype(jnp.float32),
+                     gathered.astype(jnp.float32))
+    return out.reshape(n_tiles * tile, d)

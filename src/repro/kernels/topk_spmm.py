@@ -1,0 +1,103 @@
+"""TopK-sparse FFN matmul — paper Eq. (1) as a Pallas kernel.
+
+``y = TopK(h) @ W2`` where TopK keeps k of d_ff entries per token: row i of
+the output is ``Σ_t vals[i,t] · W2[idx[i,t], :]`` — a *ranged indirect
+access* over W2 rows (range = one d_model row), exactly the paper's AIA
+pattern with the activation indices as the index array ``b``.
+
+Two variants:
+
+* ``topk_spmm``       — per-token faithful form: grid (tokens, k); each step
+  DMAs one W2 row chosen by the prefetched index and FMAs it (VPU).
+* ``block_topk_spmm`` — beyond-paper MXU form: TopK selects ``kb`` blocks of
+  ``block`` contiguous d_ff lanes per *token tile*; each grid step is then a
+  dense (tile × block) @ (block × d_model) MXU matmul on a DMA'd W2 block.
+  Same indirection, tile-aligned — see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _token_kernel(idx_ref, vals_ref, w2_ref, o_ref):
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    v = vals_ref[0, t]
+    o_ref[...] += v.astype(o_ref.dtype) * w2_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def topk_spmm(vals: jax.Array, idx: jax.Array, w2: jax.Array,
+              interpret: bool = True, out_dtype=jnp.float32):
+    """y[i] = Σ_t vals[i,t] · w2[idx[i,t]].  vals/idx: (n, k); w2: (d_ff, d)."""
+    n, k = vals.shape
+    d = w2.shape[1]
+    return pl.pallas_call(
+        _token_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n, k),
+            in_specs=[
+                pl.BlockSpec((1, k), lambda i, t, idx_ref: (i, 0)),
+                pl.BlockSpec((1, d), lambda i, t, idx_ref: (idx_ref[i, t], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda i, t, idx_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, d), out_dtype),
+        interpret=interpret,
+    )(idx, vals, w2)
+
+
+def _tile_kernel(bidx_ref, h_ref, w2_ref, o_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        h_ref[0, 0], w2_ref[0], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
+def block_topk_spmm(h_kept: jax.Array, bidx: jax.Array, w2: jax.Array,
+                    block: int = 128, interpret: bool = True,
+                    out_dtype=jnp.float32):
+    """MXU-aligned variant.
+
+    h_kept: (n_tiles, kb, tile, block) — kept activation lanes per token tile.
+    bidx:   (n_tiles, kb) int32 — selected d_ff block ids (shared per tile).
+    w2:     (d_ff, d) with d_ff = n_blocks·block.
+    Returns (n_tiles·tile, d).
+    """
+    n_tiles, kb, tile, blk = h_kept.shape
+    assert blk == block
+    d = w2.shape[1]
+    w2b = w2.reshape(w2.shape[0] // block, block, d)
+    return pl.pallas_call(
+        _tile_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_tiles, kb),
+            in_specs=[
+                pl.BlockSpec((1, 1, tile, block),
+                             lambda i, t, bidx_ref: (i, t, 0, 0)),
+                pl.BlockSpec((1, block, d),
+                             lambda i, t, bidx_ref: (bidx_ref[i, t], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((tile, d), lambda i, t, bidx_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_tiles * tile, d), out_dtype),
+        interpret=interpret,
+    )(bidx, h_kept, w2b)

@@ -1,0 +1,22 @@
+"""Production mesh construction (multi-pod dry-run contract).
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): single-pod = (16, 16) chips over ("data", "model");
+multi-pod = (2, 16, 16) over ("pod", "data", "model") — 2 × 256-chip v5e
+pods.  The ``pod`` axis carries only data parallelism + the cross-pod
+gradient all-reduce (optionally int8-compressed).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for multi-device unit tests (host platform)."""
+    return jax.make_mesh(shape, axes)

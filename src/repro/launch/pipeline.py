@@ -1,0 +1,63 @@
+"""GPipe-style pipeline parallelism via shard_map + ppermute (DESIGN.md §6).
+
+Stage weights are sharded over the ``pipe`` mesh axis (one stage per device
+group); microbatches flow stage-to-stage through ``lax.ppermute``.  The
+schedule is the classic GPipe fill-drain: M + S − 1 ticks for M microbatches
+over S stages (bubble fraction (S−1)/(M+S−1)).  Every device computes every
+tick; in-flight garbage during fill/drain is masked at the output, which is
+exactly how SPMD pipelining is expressed on TPU (no dynamic control flow).
+
+``pipeline_apply`` is the generic schedule; models opt in by passing their
+block as ``stage_fn`` with per-stage stacked weights.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:  # JAX moved shard_map out of experimental in newer releases
+    from jax import shard_map as _shard_map_mod  # type: ignore
+    shard_map = _shard_map_mod  # pragma: no cover
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
+
+def pipeline_apply(mesh, stage_weights, microbatches, stage_fn: Callable,
+                   n_microbatches: int, axis: str = "pipe"):
+    """Run ``stage_fn`` as an S-stage pipeline.
+
+    stage_weights: (S, ...) pytree leaves stacked on the stage axis.
+    microbatches:  (M, ...) inputs.
+    Returns (M, ...) outputs, replicated across the pipe axis.
+    """
+    s_stages = mesh.shape[axis]
+    m = n_microbatches
+
+    def body(w_local, x_all):
+        stage = jax.lax.axis_index(axis)
+        w = jax.tree.map(lambda a: a[0], w_local)  # drop sharded stage dim
+        state = jnp.zeros_like(x_all[0])
+        outputs = jnp.zeros_like(x_all)
+        perm = [(i, (i + 1) % s_stages) for i in range(s_stages)]
+        for t in range(m + s_stages - 1):
+            m_in = min(t, m - 1)
+            inp = jnp.where(stage == 0, x_all[m_in], state)
+            out = stage_fn(w, inp)
+            m_out = t - (s_stages - 1)
+            if 0 <= m_out < m:
+                is_last = stage == s_stages - 1
+                outputs = outputs.at[m_out].set(
+                    jnp.where(is_last, out, outputs[m_out]))
+            state = jax.lax.ppermute(out, axis, perm)
+        # replicate the last stage's outputs everywhere
+        is_last = (stage == s_stages - 1)
+        return jax.lax.psum(jnp.where(is_last, outputs, 0.0), axis)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis), P(*([None] * microbatches.ndim))),
+                   out_specs=P(*([None] * microbatches.ndim)))
+    return fn(stage_weights, microbatches)

@@ -1,0 +1,165 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+``input_specs`` builds the exact pytrees the dry-run lowers against: no
+device allocation ever happens for the full configs (the brief's contract).
+Param/optimizer specs come from ``param_specs`` (+ ZeRO-1 over ``data``);
+decode caches shard their *sequence* dim over ``model`` (flash-decoding).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch.sharding import Shardings, make_shardings
+from repro.models import transformer as tf
+from repro.models import mamba2 as m2
+
+
+def _batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(n for n in ("pod", "data") if n in mesh.axis_names)
+
+
+def _data_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in _batch_axes(mesh)]))
+
+
+def _model_size(mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh) -> Dict[str, Any]:
+    """Training/prefill batch ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    ba = _batch_axes(mesh)
+    bspec = ba if (ba and b % _data_size(mesh) == 0) else None
+    out = {
+        "tokens": _sds((b, s), jnp.int32, mesh, P(bspec, None)),
+        "labels": _sds((b, s), jnp.int32, mesh, P(bspec, None)),
+    }
+    if cfg.frontend == "vision_stub":
+        out["vision_embeds"] = _sds((b, cfg.vision_patches, cfg.d_model),
+                                    jnp.bfloat16, mesh, P(bspec, None, None))
+    if cfg.encoder_layers:
+        out["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16,
+                             mesh, P(bspec, None, None))
+    return out
+
+
+def param_sds(cfg: ArchConfig, mesh):
+    """ShapeDtypeStruct tree of params with NamedShardings (no allocation)."""
+    shapes = jax.eval_shape(
+        lambda k: tf.init_transformer(cfg, k)[0], jax.random.PRNGKey(0))
+    specs = tf.param_specs(cfg, shapes, model_size=_model_size(mesh))
+    sds = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+    return sds, specs
+
+
+def train_state_sds(cfg: ArchConfig, mesh, zero1: bool = True):
+    """TrainState ShapeDtypeStructs: params + AdamW moments (ZeRO-1)."""
+    from repro.optim.zero import zero1_state_specs
+    from repro.train.step import TrainState
+    from repro.optim.adamw import AdamWState
+
+    p_sds, p_specs = param_sds(cfg, mesh)
+    data_axes = _batch_axes(mesh)
+    data_axis = data_axes[-1] if data_axes else None
+
+    def moment_spec(spec, sds):
+        if not zero1 or data_axis is None:
+            return spec
+        parts = list(spec) + [None] * (len(sds.shape) - len(spec))
+        dsize = mesh.shape[data_axis]
+        for i, pp in enumerate(parts):
+            if pp is None and sds.shape[i] % dsize == 0 and sds.shape[i] >= dsize:
+                parts[i] = data_axis
+                break
+        return P(*parts)
+
+    m_specs = jax.tree.map(moment_spec, p_specs, p_sds)
+    m_sds = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                           sharding=NamedSharding(mesh, sp)),
+        p_sds, m_specs)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32,
+                                  sharding=NamedSharding(mesh, P()))
+    state = TrainState(
+        step=scalar, params=p_sds,
+        opt=AdamWState(step=scalar, mu=m_sds, nu=m_sds))
+    return state
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec, mesh) -> Dict[str, Any]:
+    """Decode cache ShapeDtypeStructs; sequence dims sharded over `model`."""
+    b, s = shape.global_batch, shape.seq_len
+    ba = _batch_axes(mesh)
+    bspec = ba if (ba and b % _data_size(mesh) == 0) else None
+    ms = _model_size(mesh)
+    seq_ax = "model" if (ms > 1 and s % ms == 0) else None
+    shapes = jax.eval_shape(
+        functools.partial(tf.init_decode_cache, cfg, b, s))
+    rules = {
+        "pos": P(),
+        "k": P(None, bspec, seq_ax, None, None),
+        "v": P(None, bspec, seq_ax, None, None),
+        "latent": P(None, bspec, seq_ax, None),
+        "krope": P(None, bspec, seq_ax, None),
+        "p_latent": P(None, bspec, seq_ax, None),
+        "p_krope": P(None, bspec, seq_ax, None),
+        "cross_k": P(None, bspec, None, None, None),
+        "cross_v": P(None, bspec, None, None, None),
+        "ssm": P(None, bspec, "model" if ms > 1 else None, None, None),
+        "conv": P(None, bspec, None, None),
+        "shared_k": P(None, bspec, seq_ax, None, None),
+        "shared_v": P(None, bspec, seq_ax, None, None),
+        "wkv": P(None, bspec, "model" if ms > 1 and cfg.n_heads % ms == 0
+                 else None, None, None),
+        "shift1": P(None, bspec, None),
+        "shift2": P(None, bspec, None),
+    }
+    out = {}
+    for k, sds in shapes.items():
+        spec = rules[k]
+        # drop axes that don't divide their dim evenly
+        fixed = []
+        for dim, ax in zip(sds.shape, tuple(spec)):
+            if ax is None:
+                fixed.append(None)
+                continue
+            if isinstance(ax, tuple):
+                size = int(np.prod([mesh.shape[a] for a in ax]))
+            else:
+                size = mesh.shape.get(ax, 1)
+            fixed.append(ax if dim % size == 0 else None)
+        out[k] = _sds(sds.shape, sds.dtype, mesh, P(*fixed))
+    return out
+
+
+def decode_token_specs(cfg: ArchConfig, shape: ShapeSpec, mesh):
+    b = shape.global_batch
+    ba = _batch_axes(mesh)
+    bspec = ba if (ba and b % _data_size(mesh) == 0) else None
+    return _sds((b, 1), jnp.int32, mesh, P(bspec, None))
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """The DESIGN.md §5 skip matrix (long_500k on full-attention archs)."""
+    if shape.name == "long_500k":
+        if cfg.family in ("ssm", "hybrid"):
+            return True, ""
+        return False, ("skipped: pure full-attention arch — 500k decode "
+                       "needs sub-quadratic mixing (DESIGN.md §5)")
+    return True, ""

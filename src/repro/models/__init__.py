@@ -1,0 +1,11 @@
+"""LM model zoo: dense GQA/MLA transformers, MoE, Mamba2 hybrid, RWKV6,
+Whisper enc-dec, VLM — all with the paper's TopK-SpGEMM FFN as a
+first-class option (DESIGN.md §4/§5)."""
+from repro.models.transformer import (
+    Transformer, init_transformer, train_loss, decode_step, init_decode_cache,
+)
+
+__all__ = [
+    "Transformer", "init_transformer", "train_loss", "decode_step",
+    "init_decode_cache",
+]

@@ -1,0 +1,328 @@
+"""Attention: GQA (chunked online-softmax) + MLA, train and decode paths.
+
+Train/prefill use a flash-style double-chunked attention (pure JAX scan with
+running max/denominator) so the S×S score matrix is never materialized —
+required for the 32k-prefill shapes at 1M-token global batch.
+
+Decode reads a KV cache whose *sequence* dimension may be sharded over the
+``model`` axis (flash-decoding): scores are computed on local KV shards and
+combined through the softmax's max/sum reductions, which GSPMD lowers to
+cheap collectives — this is how kv_heads < |model| and the 500k cache stay
+memory-feasible (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope
+
+NEG_INF = -1e30
+
+
+def _mask_val(qpos, kpos, causal: bool, window: int):
+    ok = kpos <= qpos if causal else jnp.ones((), bool) & (kpos == kpos)
+    if window:
+        ok = ok & (kpos > qpos - window)
+    return ok
+
+
+def flash_attention(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Sk, KV, D)
+    v: jax.Array,            # (B, Sk, KV, D)
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+    kv_valid_len: Optional[jax.Array] = None,
+    unroll: bool = False,
+    p_dtype=None,
+) -> jax.Array:
+    """Online-softmax attention; O(S·chunk) memory.  GQA via head groups.
+
+    ``p_dtype=jnp.bfloat16`` stores softmax probabilities in bf16 between the
+    two matmuls (halves score-tensor HBM traffic; §Perf iteration).
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    dv = v.shape[3]  # value dim may differ from qk dim (MLA)
+    g = h // kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    q_chunk = min(q_chunk, sq)
+    k_chunk = min(k_chunk, sk)
+    # pad ragged sequence lengths up to the chunk grid (whisper's 1500-frame
+    # encoder etc.); padded keys are masked via kv_valid_len, padded queries
+    # are sliced off the output.
+    sq_orig, sk_orig = sq, sk
+    if sq % q_chunk or sk % k_chunk:
+        sq_pad = (-sq) % q_chunk
+        sk_pad = (-sk) % k_chunk
+        q = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+        sq, sk = sq + sq_pad, sk + sk_pad
+        if kv_valid_len is None:
+            kv_valid_len = jnp.asarray(sk_orig, jnp.int32)
+        else:
+            kv_valid_len = jnp.minimum(kv_valid_len, sk_orig)
+    nq, nk = sq // q_chunk, sk // k_chunk
+
+    qr = q.reshape(b, nq, q_chunk, kv, g, d)
+    kr = k.reshape(b, nk, k_chunk, kv, d)
+    vr = v.reshape(b, nk, k_chunk, kv, dv)
+
+    def q_step(qi, qc):
+        # qc: (B, q_chunk, KV, G, D)
+        m0 = jnp.full((b, q_chunk, kv, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, kv, g), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, kv, g, dv), jnp.float32)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            ks = kr[:, kj]  # (B, k_chunk, KV, D)
+            vs = vr[:, kj]
+            s = jnp.einsum("bqkgd,bckd->bqkgc", qc.astype(jnp.float32),
+                           ks.astype(jnp.float32)) * scale
+            qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+            kpos = kj * k_chunk + jnp.arange(k_chunk)
+            ok = _mask_val(qpos[:, None], kpos[None, :], causal, window)
+            if kv_valid_len is not None:
+                ok = ok & (kpos[None, :] < kv_valid_len)
+            s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            if p_dtype is not None:
+                p = p.astype(p_dtype)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p, vs.astype(p.dtype),
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        if unroll:  # measurement mode: exact trip counts in HLO
+            carry = (m0, l0, a0)
+            for kj in range(nk):
+                carry, _ = kv_step(carry, kj)
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.astype(q.dtype)  # (B, q_chunk, KV, G, D)
+
+    if unroll:
+        outs = jnp.stack([q_step(i, qr[:, i]) for i in range(nq)])
+    else:
+        outs = jax.lax.map(lambda i: q_step(i, qr[:, i]), jnp.arange(nq))
+    # (nq, B, q_chunk, KV, G, Dv) -> (B, Sq, H, Dv)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, kv, g, dv)
+    out = out.reshape(b, sq, h, dv)
+    if sq != sq_orig:
+        out = out[:, :sq_orig]
+    return out
+
+
+def decode_attention(
+    q: jax.Array,          # (B, 1, H, D)
+    k_cache: jax.Array,    # (B, S_max, KV, D)
+    v_cache: jax.Array,
+    cache_len: jax.Array,  # () current length INCLUDING the new token
+    window: int = 0,
+) -> jax.Array:
+    """Single-token attention over the cache (flash-decoding under GSPMD)."""
+    b, smax, kv, d = k_cache.shape
+    h = q.shape[2]
+    g = h // kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qr = q.reshape(b, kv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache.astype(jnp.float32)) * scale
+    kpos = jnp.arange(smax)
+    ok = kpos < cache_len
+    if window:
+        ok = ok & (kpos >= cache_len - window)
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block-level wrappers
+# ---------------------------------------------------------------------------
+
+class AttnParams(NamedTuple):
+    wq: jax.Array  # (D, H*hd)
+    wk: jax.Array  # (D, KV*hd)
+    wv: jax.Array  # (D, KV*hd)
+    wo: jax.Array  # (H*hd, D)
+
+
+def gqa_init(key, d_model, n_heads, n_kv, hd, dtype) -> AttnParams:
+    from repro.models.common import dense_init
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return AttnParams(
+        wq=dense_init(k1, d_model, n_heads * hd, dtype),
+        wk=dense_init(k2, d_model, n_kv * hd, dtype),
+        wv=dense_init(k3, d_model, n_kv * hd, dtype),
+        wo=dense_init(k4, n_heads * hd, d_model, dtype),
+    )
+
+
+def gqa_forward(p: AttnParams, x, *, n_heads, n_kv, hd, rope_theta,
+                causal=True, window=0, positions=None, sh=None,
+                cross_kv=None, attn_chunk=0, unroll=False, p_dtype=None):
+    """Train/prefill attention.  cross_kv=(k,v) switches to cross-attention."""
+    b, s, d = x.shape
+    q = (x @ p.wq).reshape(b, s, n_heads, hd)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    g = n_heads // n_kv
+    if cross_kv is None:
+        k = (x @ p.wk).reshape(b, s, n_kv, hd)
+        v = (x @ p.wv).reshape(b, s, n_kv, hd)
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+        if g > 1:
+            # expand KV to full head count so the head dim shards uniformly
+            # over `model` (avoids GSPMD's (KV,G) mixed-factor resharding)
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        if sh is not None:
+            q, k, v = sh.act_bthd(q), sh.act_bthd(k), sh.act_bthd(v)
+        kw = dict(q_chunk=attn_chunk, k_chunk=attn_chunk) if attn_chunk else {}
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              unroll=unroll, p_dtype=p_dtype, **kw)
+    else:
+        k, v = cross_kv
+        if g > 1:
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        if sh is not None:
+            q = sh.act_bthd(q)
+            k, v = sh.act_bthd(k), sh.act_bthd(v)
+        kw = dict(q_chunk=attn_chunk, k_chunk=attn_chunk) if attn_chunk else {}
+        out = flash_attention(q, k, v, causal=False, unroll=unroll,
+                              p_dtype=p_dtype, **kw)
+    return out.reshape(b, s, n_heads * hd) @ p.wo
+
+
+def gqa_cross_kv(p: AttnParams, enc: jax.Array, n_kv, hd):
+    """Precompute encoder K/V once per sequence (whisper decode)."""
+    b, s, _ = enc.shape
+    k = (enc @ p.wk).reshape(b, s, n_kv, hd)
+    v = (enc @ p.wv).reshape(b, s, n_kv, hd)
+    return k, v
+
+
+def gqa_decode(p: AttnParams, x, k_cache, v_cache, pos, *, n_heads, n_kv,
+               hd, rope_theta, window=0):
+    """One decode step: append to cache, attend.  pos: () int32 index."""
+    b = x.shape[0]
+    q = (x @ p.wq).reshape(b, 1, n_heads, hd)
+    k = (x @ p.wk).reshape(b, 1, n_kv, hd)
+    v = (x @ p.wv).reshape(b, 1, n_kv, hd)
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q = apply_rope(q, posb, rope_theta)
+    k = apply_rope(k, posb, rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), pos, axis=1)
+    out = decode_attention(q, k_cache, v_cache, pos + 1, window=window)
+    return out.reshape(b, 1, n_heads * hd) @ p.wo, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+class MLAParams(NamedTuple):
+    wq: jax.Array       # (D, H*(nope+rope))
+    w_dkv: jax.Array    # (D, kv_lora)
+    w_kr: jax.Array     # (D, rope_dim) shared rope key
+    w_uk: jax.Array     # (kv_lora, H*nope)
+    w_uv: jax.Array     # (kv_lora, H*v_dim)
+    wo: jax.Array       # (H*v_dim, D)
+    norm_kv: jax.Array  # (kv_lora,)
+
+
+def mla_init(key, d_model, n_heads, mla, dtype) -> MLAParams:
+    from repro.models.common import dense_init
+    ks = jax.random.split(key, 6)
+    qd = n_heads * (mla.qk_nope_dim + mla.qk_rope_dim)
+    return MLAParams(
+        wq=dense_init(ks[0], d_model, qd, dtype),
+        w_dkv=dense_init(ks[1], d_model, mla.kv_lora, dtype),
+        w_kr=dense_init(ks[2], d_model, mla.qk_rope_dim, dtype),
+        w_uk=dense_init(ks[3], mla.kv_lora, n_heads * mla.qk_nope_dim, dtype),
+        w_uv=dense_init(ks[4], mla.kv_lora, n_heads * mla.v_head_dim, dtype),
+        wo=dense_init(ks[5], n_heads * mla.v_head_dim, d_model, dtype),
+        norm_kv=jnp.ones((mla.kv_lora,), dtype),
+    )
+
+
+def mla_forward(p: MLAParams, x, *, n_heads, mla, rope_theta, sh=None,
+                attn_chunk=0, unroll=False, p_dtype=None):
+    """Train/prefill MLA (expanded form)."""
+    from repro.models.common import rms_norm
+    b, s, d = x.shape
+    nd, rd, vd = mla.qk_nope_dim, mla.qk_rope_dim, mla.v_head_dim
+    q = (x @ p.wq).reshape(b, s, n_heads, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    pos = jnp.arange(s)[None, :]
+    q_rope = apply_rope(q_rope, pos, rope_theta)
+    latent = rms_norm(x @ p.w_dkv, p.norm_kv)  # (B,S,kv_lora)
+    k_rope = apply_rope((x @ p.w_kr)[:, :, None, :], pos, rope_theta)  # (B,S,1,rd)
+    k_nope = (latent @ p.w_uk).reshape(b, s, n_heads, nd)
+    v = (latent @ p.w_uv).reshape(b, s, n_heads, vd)
+    # assemble full-dim q/k: concat nope + rope (k_rope broadcast over heads)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, n_heads, rd))],
+                         axis=-1)
+    if sh is not None:
+        qf, kf, v = sh.act_bthd(qf), sh.act_bthd(kf), sh.act_bthd(v)
+    kw = dict(q_chunk=attn_chunk, k_chunk=attn_chunk) if attn_chunk else {}
+    out = flash_attention(qf, kf, v, causal=True, unroll=unroll,
+                          p_dtype=p_dtype, **kw)
+    return out.reshape(b, s, n_heads * vd) @ p.wo
+
+
+def mla_decode(p: MLAParams, x, latent_cache, krope_cache, pos, *,
+               n_heads, mla, rope_theta):
+    """Absorbed-form decode: cache is (latent, k_rope) only — the MLA win."""
+    from repro.models.common import rms_norm
+    b = x.shape[0]
+    nd, rd, vd = mla.qk_nope_dim, mla.qk_rope_dim, mla.v_head_dim
+    lora = mla.kv_lora
+    q = (x @ p.wq).reshape(b, 1, n_heads, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope, posb, rope_theta)
+    lat = rms_norm(x @ p.w_dkv, p.norm_kv)              # (B,1,lora)
+    kr = apply_rope((x @ p.w_kr)[:, :, None, :], posb, rope_theta)[:, :, 0, :]
+    latent_cache = jax.lax.dynamic_update_slice_in_dim(
+        latent_cache, lat.astype(latent_cache.dtype), pos, axis=1)
+    krope_cache = jax.lax.dynamic_update_slice_in_dim(
+        krope_cache, kr.astype(krope_cache.dtype), pos, axis=1)
+    # absorb W_uk into q: q_lat[h] = q_nope[h] @ W_uk[h]^T  -> (B,1,H,lora)
+    wuk = p.w_uk.reshape(lora, n_heads, nd)
+    q_lat = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    smax = latent_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(nd + rd, jnp.float32))
+    s_lat = jnp.einsum("bqhl,bsl->bhqs", q_lat,
+                       latent_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                        krope_cache.astype(jnp.float32))
+    s = (s_lat + s_rope) * scale
+    ok = jnp.arange(smax) < (pos + 1)
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhqs,bsl->bqhl", pattn,
+                         latent_cache.astype(jnp.float32))  # (B,1,H,lora)
+    wuv = p.w_uv.reshape(lora, n_heads, vd)
+    out = jnp.einsum("bqhl,lhv->bqhv", ctx_lat, wuv.astype(jnp.float32))
+    out = out.reshape(b, 1, n_heads * vd).astype(x.dtype)
+    return out @ p.wo, latent_cache, krope_cache

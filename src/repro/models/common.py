@@ -1,0 +1,96 @@
+"""Shared model substrate: norms, RoPE, inits, chunked losses."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16,
+               scale: float | None = None) -> jax.Array:
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_chunked(logits_fn, h: jax.Array, labels: jax.Array,
+                          w_out: jax.Array, n_chunks: int = 8,
+                          unroll: bool = False) -> jax.Array:
+    """Memory-safe LM loss: computes vocab logits in sequence chunks.
+
+    h: (B, S, D) final hidden; labels: (B, S) int32 (-1 = masked);
+    w_out: (D, V).  Never materializes the full (B, S, V) logits — essential
+    for vocab≈100–200k at 1M-token global batches (DESIGN.md §6).
+    """
+    b, s, d = h.shape
+    assert s % n_chunks == 0, (s, n_chunks)
+    cs = s // n_chunks
+    hc = h.reshape(b, n_chunks, cs, d).swapaxes(0, 1)  # (n_chunks, B, cs, D)
+    lc = labels.reshape(b, n_chunks, cs).swapaxes(0, 1)
+
+    def chunk_loss(carry, xs):
+        hh, ll = xs
+        logits = logits_fn(hh, w_out).astype(jnp.float32)  # (B, cs, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ll, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (ll >= 0).astype(jnp.float32)
+        nll = (logz - gold) * mask
+        return carry + jnp.sum(nll), jnp.sum(mask)
+
+    if unroll:  # measurement mode (exact trip counts; launch/dryrun.py)
+        total = jnp.zeros((), jnp.float32)
+        counts = []
+        for i in range(n_chunks):
+            total, cnt = chunk_loss(total, (hc[i], lc[i]))
+            counts.append(cnt)
+        return total / jnp.maximum(sum(counts), 1.0)
+    total, counts = jax.lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / jnp.maximum(jnp.sum(counts), 1.0)
+
+
+def causal_mask(sq: int, sk: int, offset: int = 0) -> jax.Array:
+    """(sq, sk) bool: query i attends key j iff j <= i + offset."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(sk)[None, :]
+    return kj <= qi
+
+
+def sliding_window_mask(sq: int, sk: int, window: int, offset: int = 0
+                        ) -> jax.Array:
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(sk)[None, :]
+    return (kj <= qi) & (kj > qi - window)

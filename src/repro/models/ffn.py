@@ -1,0 +1,253 @@
+"""FFNs: dense SwiGLU, the paper's TopK-SpGEMM FFN (Eq. 1–3), and MoE.
+
+``ffn_mode``:
+* "dense"      — published architecture (baseline for §Perf).
+* "topk"       — Eq. (1): h is TopK-masked; backward is Eq. (3).  In-graph
+                 XLA form keeps dense FLOPs (mask ⊙ h) — it validates
+                 semantics; the FLOP/byte win appears in
+* "block_topk" — the TPU-native SpGEMM form: per 8-token tile, keep
+                 ``topk_k/topk_block`` blocks of 128 d_ff lanes, gather only
+                 the selected W2 row-blocks (the AIA ranged access), and
+                 contract — compiled HLO FLOPs drop to k/d_ff of dense.
+                 Served by the ``block_topk_spmm`` Pallas kernel on TPU.
+
+MoE: token-choice top-k with capacity, sort-based dispatch (no T×E×C
+tensors), experts shardable over the ``model`` axis (EP) — itself a
+dispatch-as-SpGEMM instance (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init
+from repro.sparse.topk import topk_rows_st
+
+
+class FFNParams(NamedTuple):
+    w1: jax.Array  # gate (D, F)
+    w3: jax.Array  # up   (D, F)
+    w2: jax.Array  # down (F, D)
+
+
+def ffn_init(key, d_model, d_ff, dtype) -> FFNParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return FFNParams(
+        w1=dense_init(k1, d_model, d_ff, dtype),
+        w3=dense_init(k2, d_model, d_ff, dtype),
+        w2=dense_init(k3, d_ff, d_model, dtype),
+    )
+
+
+def swiglu(p: FFNParams, x, sh=None):
+    h = jax.nn.silu(x @ p.w1) * (x @ p.w3)
+    if sh is not None:
+        h = sh.act_btf(h)
+    return h @ p.w2
+
+
+def topk_ffn(p: FFNParams, x, k: int, sh=None):
+    """Eq. (1): y = TopK(act(xW1)⊙(xW3)) @ W2 with Eq. (3) backward."""
+    h = jax.nn.silu(x @ p.w1) * (x @ p.w3)
+    if sh is not None:
+        h = sh.act_btf(h)
+    b, s, f = h.shape
+    hs = topk_rows_st(h.reshape(b * s, f), k).reshape(b, s, f)
+    return hs @ p.w2
+
+
+def block_topk_ffn(p: FFNParams, x, k: int, block: int = 128, tile: int = 8,
+                   sh=None):
+    """MXU-native SpGEMM FFN: tile-shared block TopK + W2 block gather.
+
+    Compiled FLOPs of the second matmul drop from S·F·D to S·k·D; the W2
+    gather is the ranged indirect access the AIA kernel serves on TPU.
+    """
+    h = jax.nn.silu(x @ p.w1) * (x @ p.w3)
+    if sh is not None:
+        h = sh.act_btf(h)
+    b, s, f = h.shape
+    kb = max(k // block, 1)
+    nb = f // block
+    assert s % tile == 0, (s, tile)
+    nt = (b * s) // tile
+    hb = h.reshape(nt, tile, nb, block)
+    energy = jnp.sum(jnp.square(hb.astype(jnp.float32)), axis=(1, 3))  # (nt, nb)
+    _, bidx = jax.lax.top_k(energy, kb)  # (nt, kb)
+    tiles = jnp.arange(nt)[:, None]
+    h_kept = jnp.moveaxis(hb, 2, 1)[tiles, bidx]  # (nt, kb, tile, block)
+    w2b = p.w2.reshape(nb, block, p.w2.shape[1])
+    w2_sel = w2b[bidx]  # (nt, kb, block, D) — the AIA ranged gather
+    y = jnp.einsum("nktb,nkbd->ntd", h_kept, w2_sel)
+    return y.reshape(b, s, p.w2.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+class MoEParams(NamedTuple):
+    router: jax.Array    # (D, E)
+    w1: jax.Array        # (E, D, Fe)
+    w3: jax.Array        # (E, D, Fe)
+    w2: jax.Array        # (E, Fe, D)
+    shared: Optional[FFNParams]  # fused shared experts (or None)
+
+
+def moe_init(key, d_model, cfg, dtype) -> MoEParams:
+    e, fe = cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    s1 = 1.0 / np.sqrt(d_model)
+    s2 = 1.0 / np.sqrt(fe)
+    shared = None
+    if cfg.n_shared:
+        shared = ffn_init(ks[4], d_model, cfg.n_shared * fe, dtype)
+    return MoEParams(
+        router=dense_init(ks[0], d_model, e, jnp.float32),
+        w1=(jax.random.normal(ks[1], (e, d_model, fe), jnp.float32) * s1).astype(dtype),
+        w3=(jax.random.normal(ks[2], (e, d_model, fe), jnp.float32) * s1).astype(dtype),
+        w2=(jax.random.normal(ks[3], (e, fe, d_model), jnp.float32) * s2).astype(dtype),
+        shared=shared,
+    )
+
+
+def moe_ffn_shard_map(p: MoEParams, x, cfg, sh):
+    """EP MoE with explicit collectives (§Perf iteration for the MoE cells).
+
+    Baseline diagnosis: GSPMD cannot shard the data-dependent dispatch
+    gather/scatter, so it replicates full token buffers — measured ~73 GB of
+    all-reduce per layer per chip on llama4-scout.  Restructure: tokens stay
+    replicated over ``model``; each model shard routes the *local data
+    shard's* tokens to its *local experts only* (zero-comm dispatch, since
+    x is already model-replicated), computes its experts, and the combine is
+    ONE bf16 psum of (T_local, d) over ``model`` — per-layer collective
+    bytes drop ~100×.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = sh.mesh
+    e, k = cfg.n_experts, cfg.top_k
+    b, s, d = x.shape
+    names = mesh.axis_names
+    model_size = mesh.shape.get("model", 1)
+    assert e % model_size == 0, (e, model_size)
+    e_loc = e // model_size
+    bspec = sh.batch
+
+    def local_moe(router, w1, w3, w2, xl):
+        # xl: (B_loc, S, D); w*: (E_loc, ...) — this model shard's experts
+        j = jax.lax.axis_index("model") if model_size > 1 else 0
+        bl = xl.shape[0]
+        t = bl * s
+        xt = xl.reshape(t, d)
+        cap = max(8, min(int(np.ceil(t * k / e * cfg.capacity_factor)), t))
+        logits = xt.astype(jnp.float32) @ router
+        gate_logits, expert_idx = jax.lax.top_k(logits, k)
+        gates = jax.nn.softmax(gate_logits, axis=-1)
+        flat_e = expert_idx.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(t), k)
+        flat_g = gates.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        e_sorted = flat_e[order]
+        t_sorted = flat_t[order]
+        g_sorted = flat_g[order]
+        counts = jnp.zeros(e, jnp.int32).at[e_sorted].add(1)
+        starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                                  jnp.cumsum(counts)[:-1]]).astype(jnp.int32)
+        pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - starts[e_sorted]
+        e_local = e_sorted - j * e_loc
+        mine = (e_local >= 0) & (e_local < e_loc) & (pos_in_e < cap)
+        slot = jnp.where(mine, e_local * cap + pos_in_e, e_loc * cap)
+        buf = jnp.zeros((e_loc * cap + 1, d), xl.dtype).at[slot].set(xt[t_sorted])
+        buf = buf[:-1].reshape(e_loc, cap, d)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w1)) * \
+            jnp.einsum("ecd,edf->ecf", buf, w3)
+        y = jnp.einsum("ecf,efd->ecd", h, w2).reshape(e_loc * cap, d)
+        y_slot = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)])[
+            jnp.where(mine, slot, e_loc * cap)]
+        contrib = y_slot * g_sorted[:, None].astype(y.dtype)
+        out = jnp.zeros((t, d), y.dtype).at[t_sorted].add(contrib)
+        if model_size > 1:
+            out = jax.lax.psum(out, "model")
+        # aux loss (identical across model shards; mean over batch shards)
+        me = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)
+        ce = counts.astype(jnp.float32) / jnp.maximum(jnp.sum(counts), 1)
+        aux = e * jnp.sum(me * ce)
+        if bspec:
+            aux = jax.lax.pmean(aux, bspec)
+        return out.reshape(bl, s, d), aux
+
+    espec = P("model", None, None) if model_size > 1 else P(None, None, None)
+    out, aux = shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(P(None, None), espec, espec, espec, P(bspec, None, None)),
+        out_specs=(P(bspec, None, None), P()),
+        check_rep=False,
+    )(p.router, p.w1, p.w3, p.w2, x)
+    if p.shared is not None:
+        out = out + swiglu(p.shared, x, sh=sh)
+    return out, aux
+
+
+def moe_ffn(p: MoEParams, x, cfg, sh=None):
+    """Token-choice top-k with capacity; sort-based dispatch (static shapes)."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(np.ceil(t * k / e * cfg.capacity_factor))
+    cap = max(8, min(cap, t))
+
+    logits = (xt.astype(jnp.float32) @ p.router)  # (T, E)
+    gate_logits, expert_idx = jax.lax.top_k(logits, k)  # (T, k)
+    gates = jax.nn.softmax(gate_logits, axis=-1)
+
+    # ---- sort-based dispatch: group (token, slot) pairs by expert ----
+    flat_e = expert_idx.reshape(-1)            # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)      # token of each slot
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    g_sorted = flat_g[order]
+    # position within expert group
+    counts = jnp.zeros(e, jnp.int32).at[e_sorted].add(1)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                              jnp.cumsum(counts)[:-1]]).astype(jnp.int32)
+    pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - starts[e_sorted]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, e_sorted * cap + pos_in_e, e * cap)  # overflow slot
+
+    # gather tokens into (E*cap, D) expert-major buffer
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(xt[t_sorted])
+    buf = buf[:-1].reshape(e, cap, d)
+    if sh is not None:
+        buf = sh.act_ecd(buf)  # experts on the model axis (EP all-to-all)
+
+    # expert computation (grouped einsum over stacked weights)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p.w1)) * \
+        jnp.einsum("ecd,edf->ecf", buf, p.w3)
+    y = jnp.einsum("ecf,efd->ecd", h, p.w2)
+    if sh is not None:
+        y = sh.act_ecd(y)
+    y = y.reshape(e * cap, d)
+
+    # combine: read back each kept slot, weight by gate
+    y_slot = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)])[
+        jnp.where(keep, slot, e * cap)]
+    contrib = y_slot * g_sorted[:, None].astype(y.dtype)
+    out = jnp.zeros((t, d), y.dtype).at[t_sorted].add(contrib)
+    out = out.reshape(b, s, d)
+
+    if p.shared is not None:
+        out = out + swiglu(p.shared, x, sh=sh)
+
+    # load-balance auxiliary loss (Switch style), returned for logging
+    me = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=0)
+    ce = counts.astype(jnp.float32) / jnp.maximum(jnp.sum(counts), 1)
+    aux = e * jnp.sum(me * ce)
+    return out, aux

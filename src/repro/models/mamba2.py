@@ -1,0 +1,166 @@
+"""Mamba2 (SSD) block — chunked dual form for the MXU [arXiv:2405.21060].
+
+State update  h_t = exp(a_h·dt_t)·h_{t-1} + dt_t·B_t x_t^T ;  y_t = C_t·h_t.
+The chunked algorithm computes intra-chunk terms as (Q×Q) matmuls and
+carries the (H, P, N) state across chunks with a scan — sequential depth
+S/Q instead of S, and all heavy ops are MXU-shaped (DESIGN.md §5: the scan
+itself has no indirection, so the paper's technique applies only to this
+block's surrounding projections).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init
+
+
+class Mamba2Params(NamedTuple):
+    in_proj: jax.Array   # (D, 2*di + 2*N + H)  -> z, x, B, C, dt
+    conv_w: jax.Array    # (conv, di + 2*N) depthwise causal conv
+    a_log: jax.Array     # (H,)
+    d_skip: jax.Array    # (H,)
+    dt_bias: jax.Array   # (H,)
+    norm_w: jax.Array    # (di,) gated RMSNorm
+    out_proj: jax.Array  # (di, D)
+
+
+def mamba2_dims(d_model, expand, head_dim, state):
+    di = expand * d_model
+    heads = di // head_dim
+    return di, heads
+
+
+def mamba2_init(key, d_model, *, expand, head_dim, state, conv, dtype
+                ) -> Mamba2Params:
+    di, heads = mamba2_dims(d_model, expand, head_dim, state)
+    ks = jax.random.split(key, 3)
+    return Mamba2Params(
+        in_proj=dense_init(ks[0], d_model, 2 * di + 2 * state + heads, dtype),
+        conv_w=(jax.random.normal(ks[1], (conv, di + 2 * state), jnp.float32)
+                / np.sqrt(conv)).astype(dtype),
+        a_log=jnp.zeros((heads,), jnp.float32),
+        d_skip=jnp.ones((heads,), jnp.float32),
+        dt_bias=jnp.zeros((heads,), jnp.float32),
+        norm_w=jnp.ones((di,), dtype),
+        out_proj=dense_init(ks[2], di, d_model, dtype),
+    )
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv along seq.  x: (B,S,C); w: (K,C).
+
+    With ``state`` (B, K-1, C) the conv continues from a previous chunk and
+    the new state is returned (used in decode).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(pad)
+    return out, new_state
+
+
+def _split_proj(p, x, di, state, heads):
+    zxbcdt = x @ p.in_proj
+    z = zxbcdt[..., :di]
+    rest = zxbcdt[..., di:]
+    xbc = rest[..., : di + 2 * state]
+    dt = rest[..., di + 2 * state:]
+    return z, xbc, dt
+
+
+def mamba2_forward(p: Mamba2Params, x, *, expand, head_dim, state, conv,
+                   chunk: int = 64, sh=None):
+    """Train/prefill SSD.  x: (B, S, D) -> (B, S, D)."""
+    from repro.models.common import rms_norm
+    b, s, d = x.shape
+    di, heads = mamba2_dims(d, expand, head_dim, state)
+    pdim = head_dim
+    z, xbc, dt = _split_proj(p, x, di, state, heads)
+    xbc, _ = _causal_conv(xbc, p.conv_w)
+    xbc = jax.nn.silu(xbc)
+    xin = xbc[..., :di].reshape(b, s, heads, pdim)
+    bmat = xbc[..., di:di + state]          # (B,S,N)
+    cmat = xbc[..., di + state:]            # (B,S,N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p.dt_bias)   # (B,S,H)
+    a = -jnp.exp(p.a_log)                                      # (H,)
+    la = a[None, None, :] * dt                                 # log decay (B,S,H)
+
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+    xin = xin.reshape(b, nc, q, heads, pdim).astype(jnp.float32)
+    bmat = bmat.reshape(b, nc, q, state).astype(jnp.float32)
+    cmat = cmat.reshape(b, nc, q, state).astype(jnp.float32)
+    dt = dt.reshape(b, nc, q, heads)
+    la = la.reshape(b, nc, q, heads)
+    cum = jnp.cumsum(la, axis=2)  # (B,nc,Q,H) inclusive log-decay
+
+    # ---- intra-chunk (dual quadratic form) ----
+    # L[b,c,h,i,j] = exp(cum_i - cum_j) for j<=i
+    li = cum[:, :, :, None, :]      # i
+    lj = cum[:, :, None, :, :]      # j
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    ldiff = jnp.where(mask[None, None, :, :, None], li - lj, -jnp.inf)
+    decay = jnp.exp(ldiff)          # (B,nc,Q,Q,H)
+    scores = jnp.einsum("bcin,bcjn->bcij", cmat, bmat)  # (B,nc,Q,Q)
+    m = scores[..., None] * decay * dt[:, :, None, :, :]  # j-indexed dt
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xin)
+
+    # ---- chunk states + inter-chunk scan ----
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)  # decay from j to chunk end
+    chunk_state = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                             bmat, dt * tail, xin)  # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])         # (B,nc,H)
+
+    def carry_step(h, ins):
+        cs, cd = ins
+        h_new = h * cd[..., None, None] + cs
+        return h_new, h  # emit state *before* this chunk
+
+    h0 = jnp.zeros((b, heads, pdim, state), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        carry_step,
+        h0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         cmat, h_prev, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, s, heads, pdim)
+    y = y + p.d_skip[None, None, :, None] * xin.reshape(b, s, heads, pdim)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p.norm_w)
+    return y @ p.out_proj
+
+
+def mamba2_decode(p: Mamba2Params, x, ssm_state, conv_state, *, expand,
+                  head_dim, state, conv):
+    """One token: O(1) state update.  x: (B,1,D)."""
+    from repro.models.common import rms_norm
+    b, _, d = x.shape
+    di, heads = mamba2_dims(d, expand, head_dim, state)
+    pdim = head_dim
+    z, xbc, dt = _split_proj(p, x, di, state, heads)
+    xbc, conv_state = _causal_conv(xbc, p.conv_w, conv_state)
+    xbc = jax.nn.silu(xbc)
+    xin = xbc[..., :di].reshape(b, heads, pdim)
+    bmat = xbc[:, 0, di:di + state].astype(jnp.float32)   # (B,N)
+    cmat = xbc[:, 0, di + state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p.dt_bias)  # (B,H)
+    a = -jnp.exp(p.a_log)
+    decay = jnp.exp(a[None, :] * dt)  # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, bmat, xin.astype(jnp.float32))
+    ssm_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cmat, ssm_state)
+    y = y + p.d_skip[None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p.norm_w)
+    return y @ p.out_proj, ssm_state, conv_state

@@ -1,0 +1,191 @@
+"""RWKV-6 "Finch" block: data-dependent decay WKV + channel mix
+[arXiv:2404.05892].
+
+Per head:  S_t = diag(w_t)·S_{t-1} + k_tᵀ v_t ;  o_t = r_t·(S_{t-1} + diag(u)·k_tᵀ v_t)
+with the Finch hallmark w_t = exp(−exp(w0 + LoRA(x_t))) *data-dependent* per
+channel.  Token-shift mixing uses the static learned μ (the RWKV-6 dynamic
+token-shift LoRA is omitted — noted in DESIGN.md §5); decay retains the full
+data dependence.
+
+Train uses a chunked scan (sequential depth S/chunk, chunk math in matmuls);
+decode is O(1) per token.  Attention-free ⇒ runs long_500k.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init
+
+
+class RWKV6Params(NamedTuple):
+    mu_r: jax.Array  # (D,) token-shift mixes
+    mu_k: jax.Array
+    mu_v: jax.Array
+    mu_w: jax.Array
+    wr: jax.Array    # (D, D)
+    wk: jax.Array
+    wv: jax.Array
+    wg: jax.Array
+    w0: jax.Array    # (D,) decay base
+    w_lora_a: jax.Array  # (D, 64)
+    w_lora_b: jax.Array  # (64, D)
+    u: jax.Array     # (H, P) bonus
+    ln_w: jax.Array  # (D,) group-norm-ish scale on output
+    wo: jax.Array    # (D, D)
+    # channel mix
+    mu_ck: jax.Array
+    mu_cr: jax.Array
+    ck: jax.Array    # (D, F)
+    cv: jax.Array    # (F, D)
+    cr: jax.Array    # (D, D)
+
+
+def rwkv6_init(key, d_model, d_ff, n_heads, dtype) -> RWKV6Params:
+    p = d_model // n_heads
+    ks = jax.random.split(key, 10)
+    mk = lambda i, a, b: dense_init(ks[i], a, b, dtype)
+    return RWKV6Params(
+        mu_r=jnp.full((d_model,), 0.5, dtype), mu_k=jnp.full((d_model,), 0.5, dtype),
+        mu_v=jnp.full((d_model,), 0.5, dtype), mu_w=jnp.full((d_model,), 0.5, dtype),
+        wr=mk(0, d_model, d_model), wk=mk(1, d_model, d_model),
+        wv=mk(2, d_model, d_model), wg=mk(3, d_model, d_model),
+        w0=jnp.full((d_model,), -2.0, jnp.float32),
+        w_lora_a=mk(4, d_model, 64), w_lora_b=mk(5, 64, d_model),
+        u=jnp.zeros((n_heads, p), jnp.float32),
+        ln_w=jnp.ones((d_model,), dtype),
+        wo=mk(6, d_model, d_model),
+        mu_ck=jnp.full((d_model,), 0.5, dtype), mu_cr=jnp.full((d_model,), 0.5, dtype),
+        ck=mk(7, d_model, d_ff), cv=mk(8, d_ff, d_model), cr=mk(9, d_model, d_model),
+    )
+
+
+def _token_shift(x, mu, x_prev=None):
+    """lerp(x_{t-1}, x_t, mu); x_prev is the carry for decode/chunk edges."""
+    if x_prev is None:
+        prev = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    else:
+        prev = jnp.concatenate([x_prev[:, None, :], x[:, :-1]], axis=1)
+    return prev + mu * (x - prev)
+
+
+def _wkv_chunk(r, k, v, w, u, s0):
+    """Sequential WKV inside one chunk via scan over time.
+
+    r,k,v: (B,Q,H,P); w: (B,Q,H,P) decay in (0,1); s0: (B,H,P,P).
+    Returns (out (B,Q,H,P), s_final).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,P)
+        kv = jnp.einsum("bhp,bhq->bhpq", kt, vt)  # key-major outer
+        out = jnp.einsum("bhp,bhpq->bhq", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    rT = jnp.moveaxis(r, 1, 0)
+    kT = jnp.moveaxis(k, 1, 0)
+    vT = jnp.moveaxis(v, 1, 0)
+    wT = jnp.moveaxis(w, 1, 0)
+    s, outs = jax.lax.scan(step, s0, (rT, kT, vT, wT))
+    return jnp.moveaxis(outs, 0, 1), s
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk: int, unroll: bool = False):
+    """Chunked parallel WKV (the TPU-native form; DESIGN.md §7).
+
+    Within a chunk of Q steps, all decay products are bounded in (0,1], so
+    the quadratic form M[j,t,p] = r_j[p]·k_t[p]·exp(cl_{j-1}[p] − cl_t[p])
+    (t < j) is computed directly in log space with no overflow; the state is
+    carried across chunks.  Sequential depth drops S → S/Q and the inner
+    work is MXU-shaped einsums.
+    """
+    b, s, h, p_dim = r.shape
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    def reshape(x):
+        return x.reshape(b, nc, q, h, p_dim)
+
+    rc, kc, vc, wc = map(reshape, (r, k, v, w))
+    logw = jnp.log(jnp.maximum(wc, 1e-38))
+    cl = jnp.cumsum(logw, axis=2)  # inclusive (B,nc,Q,H,P)
+
+    def chunk_step(s_prev, ins):
+        rj, kj, vj, clj = ins  # (B,Q,H,P)
+        # cl_{j-1}: exclusive cumsum (cl_0 = 0)
+        cl_excl = jnp.pad(clj[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0)))
+        # intra-chunk quadratic form, strictly lower triangular in (j, t);
+        # exponents are ≤ 0 inside the mask, so exp never overflows
+        diff = cl_excl[:, :, None] - clj[:, None, :]  # (B,Q_j,Q_t,H,P)
+        mask = jnp.tril(jnp.ones((q, q), bool), k=-1)
+        m = jnp.exp(jnp.where(mask[None, :, :, None, None], diff, -jnp.inf))
+        m = m * rj[:, :, None] * kj[:, None, :]
+        intra = jnp.einsum("bjthp,bthq->bjhq", m, vj)
+        # bonus diagonal term
+        bonus = jnp.einsum("bjhp,hp,bjhp->bjh", rj, u, kj)
+        intra = intra + bonus[..., None] * vj
+        # inter-chunk: state from previous chunks
+        inter = jnp.einsum("bjhp,bhpq->bjhq", rj * jnp.exp(cl_excl), s_prev)
+        # state update to end of chunk
+        tail = jnp.exp(clj[:, -1:, :] - clj)  # decay from t to chunk end
+        s_new = s_prev * jnp.exp(clj[:, -1])[..., None] + \
+            jnp.einsum("bthp,bthq->bhpq", kj * tail, vj)
+        return s_new, intra + inter
+
+    xs = (jnp.moveaxis(rc, 1, 0), jnp.moveaxis(kc, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(cl, 1, 0))
+    if unroll:
+        outs = []
+        s_cur = s0
+        for i in range(nc):
+            s_cur, o = chunk_step(s_cur, jax.tree.map(lambda a: a[i], xs))
+            outs.append(o)
+        s_final = s_cur
+        out = jnp.stack(outs)
+    else:
+        s_final, out = jax.lax.scan(chunk_step, s0, xs)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, p_dim)
+    return out, s_final
+
+
+def rwkv6_time_mix(p: RWKV6Params, x, *, n_heads, state=None, x_prev=None,
+                   sh=None, chunk: int = 0, unroll: bool = False):
+    """x: (B,S,D).  state: (B,H,P,P) carried WKV state (decode/continuation).
+
+    ``chunk > 0`` selects the chunked parallel WKV (train path on TPU);
+    ``chunk == 0`` uses the per-token recurrence (decode / reference).
+    """
+    b, s, d = x.shape
+    hp = d // n_heads
+    xr = _token_shift(x, p.mu_r, x_prev)
+    xk = _token_shift(x, p.mu_k, x_prev)
+    xv = _token_shift(x, p.mu_v, x_prev)
+    xw = _token_shift(x, p.mu_w, x_prev)
+    r = (xr @ p.wr).reshape(b, s, n_heads, hp).astype(jnp.float32)
+    k = (xk @ p.wk).reshape(b, s, n_heads, hp).astype(jnp.float32)
+    v = (xv @ p.wv).reshape(b, s, n_heads, hp).astype(jnp.float32)
+    g = jax.nn.silu(xr @ p.wg)
+    # Finch data-dependent decay
+    wlog = p.w0 + (jnp.tanh(xw.astype(jnp.float32) @ p.w_lora_a.astype(jnp.float32))
+                   @ p.w_lora_b.astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog)).reshape(b, s, n_heads, hp)  # (0,1)
+    s0 = state if state is not None else jnp.zeros((b, n_heads, hp, hp), jnp.float32)
+    if chunk and s > 1:
+        out, s_final = _wkv_chunked(r, k, v, w, p.u, s0, chunk, unroll=unroll)
+    else:
+        out, s_final = _wkv_chunk(r, k, v, w, p.u, s0)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    from repro.models.common import rms_norm
+    out = rms_norm(out, p.ln_w) * g
+    return out @ p.wo, s_final, x[:, -1, :]
+
+
+def rwkv6_channel_mix(p: RWKV6Params, x, x_prev=None):
+    xk = _token_shift(x, p.mu_ck, x_prev)
+    xr = _token_shift(x, p.mu_cr, x_prev)
+    k = jnp.square(jax.nn.relu(xk @ p.ck))
+    return jax.nn.sigmoid(xr @ p.cr) * (k @ p.cv), x[:, -1, :]

@@ -1,0 +1,633 @@
+"""The LM backbone: every assigned architecture through one scan-based stack.
+
+Design (DESIGN.md §5/§6):
+* **scan-over-layers** — per-layer params are stacked on a leading axis and
+  consumed by ``lax.scan`` so HLO size is depth-independent (95-layer models
+  compile like 1-layer ones); heterogeneous stacks (zamba2 shared blocks,
+  deepseek-v2's dense first layer) are expressed as *segments*: python-level
+  sequence of (scanned span, optional eager block).
+* **remat** — the scan body is wrapped in ``jax.checkpoint`` for train.
+* block codes: 'A' attention+FFN • 'M' Mamba2 • 'R' RWKV6; whisper adds an
+  encoder stack + per-layer cross-attention; internvl2 replaces the first
+  ``vision_patches`` embeddings with stub patch embeddings.
+* the paper's TopK-SpGEMM FFN (Eq. 1–3) is selected by ``cfg.ffn_mode``.
+
+Public API: ``init_transformer`` (params + PartitionSpecs), ``train_loss``,
+``init_decode_cache``, ``decode_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import Shardings, UNSHARDED
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import mamba2 as m2
+from repro.models import rwkv6 as rk
+from repro.models.common import cross_entropy_chunked, dense_init, rms_norm
+
+
+class Transformer(NamedTuple):
+    cfg: ArchConfig
+    params: Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Segments: contiguous scanned spans + eager inserts (zamba2 / ds-v2-lite)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    start: int
+    length: int
+    shared_after: bool  # apply the weight-shared attn block after this span
+
+
+def segments(cfg: ArchConfig) -> List[Segment]:
+    if cfg.block_pattern == "M" and cfg.shared_attn_every:
+        segs = []
+        i = 0
+        while i < cfg.n_layers:
+            ln = min(cfg.shared_attn_every, cfg.n_layers - i)
+            segs.append(Segment(i, ln, shared_after=(ln == cfg.shared_attn_every)))
+            i += ln
+        return segs
+    return [Segment(0, cfg.n_layers, shared_after=False)]
+
+
+def n_shared_apps(cfg: ArchConfig) -> int:
+    return sum(1 for s in segments(cfg) if s.shared_after)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init (one layer), then vmapped to a stacked pytree
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ArchConfig, key, kind: str, cross: bool = False):
+    dtype = cfg.activation_dtype
+    d = cfg.d_model
+    out: Dict[str, Any] = {}
+    ks = iter(jax.random.split(key, 8))
+    if kind == "A":
+        out["ln1"] = jnp.ones((d,), dtype)
+        if cfg.attention == "mla":
+            out["attn"] = attn.mla_init(next(ks), d, cfg.n_heads, cfg.mla, dtype)
+        else:
+            out["attn"] = attn.gqa_init(next(ks), d, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.hd, dtype)
+        if cross:
+            out["ln_cross"] = jnp.ones((d,), dtype)
+            out["cross"] = attn.gqa_init(next(ks), d, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.hd, dtype)
+        out["ln2"] = jnp.ones((d,), dtype)
+        if cfg.moe and cfg.moe.n_experts:
+            out["ffn"] = ffn_mod.moe_init(next(ks), d, cfg.moe, dtype)
+        else:
+            out["ffn"] = ffn_mod.ffn_init(next(ks), d, cfg.d_ff, dtype)
+    elif kind == "M":
+        out["ln1"] = jnp.ones((d,), dtype)
+        out["mamba"] = m2.mamba2_init(
+            next(ks), d, expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+            state=cfg.ssm_state, conv=cfg.ssm_conv, dtype=dtype)
+    elif kind == "R":
+        out["ln1"] = jnp.ones((d,), dtype)
+        out["ln2"] = jnp.ones((d,), dtype)
+        out["rwkv"] = rk.rwkv6_init(next(ks), d, cfg.d_ff, cfg.n_heads, dtype)
+    else:
+        raise ValueError(kind)
+    return out
+
+
+def _dense_layer_init(cfg: ArchConfig, key):
+    """Plain attention+dense-FFN layer (deepseek-v2-lite layer 0)."""
+    dtype = cfg.activation_dtype
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    out = {"ln1": jnp.ones((d,), dtype), "ln2": jnp.ones((d,), dtype)}
+    if cfg.attention == "mla":
+        out["attn"] = attn.mla_init(ks[0], d, cfg.n_heads, cfg.mla, dtype)
+    else:
+        out["attn"] = attn.gqa_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.hd, dtype)
+    out["ffn"] = ffn_mod.ffn_init(ks[1], d, cfg.d_ff, dtype)
+    return out
+
+
+def init_transformer(cfg: ArchConfig, key) -> Tuple[Dict, Dict]:
+    """Returns (params, partition_specs) — specs mirror the param tree."""
+    dtype = cfg.activation_dtype
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    params["embed"] = (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model),
+                                         jnp.float32) * 0.02).astype(dtype)
+    params["out_norm"] = jnp.ones((cfg.d_model,), dtype)
+    params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+
+    kind = cfg.block_pattern[0] if len(set(cfg.block_pattern)) == 1 else "A"
+    n_prefix = 1 if cfg.first_layer_dense_ffn else 0
+    n_scan = cfg.n_layers - n_prefix
+    cross = cfg.encoder_layers > 0
+
+    layer_keys = jax.random.split(keys[2], max(n_scan, 1))
+    params["layers"] = jax.vmap(
+        lambda k: _layer_init(cfg, k, kind, cross=cross)
+    )(layer_keys)
+
+    if n_prefix:
+        params["prefix_layers"] = [
+            _dense_layer_init(cfg, k) for k in jax.random.split(keys[3], n_prefix)
+        ]
+    if cfg.block_pattern == "M" and cfg.shared_attn_every:
+        params["shared_attn"] = _layer_init(cfg, keys[4], "A")
+    if cfg.encoder_layers:
+        enc_keys = jax.random.split(keys[5], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: _layer_init(cfg, k, "A")
+        )(enc_keys)
+        params["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+
+    specs = param_specs(cfg, params)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Parameter PartitionSpecs (megatron-style TP over the `model` axis)
+# ---------------------------------------------------------------------------
+
+def _spec_for(path: str, shape: Tuple[int, ...], model_size: int) -> P:
+    """TP rules by param name.  Column-parallel: out dim on `model`;
+    row-parallel (down/out projections): in dim on `model`."""
+    def ok(dim):  # only shard divisible dims
+        return dim % model_size == 0 if model_size > 1 else False
+
+    last = path.split("/")[-1]
+    col = {"wq", "wk", "wv", "w1", "w3", "ck", "w_uk", "w_uv", "in_proj",
+           "lm_head", "wr", "wk2", "wg", "router"}
+    row = {"wo", "w2", "cv", "out_proj", "cr"}
+    if last == "embed":
+        return P("model" if ok(shape[0]) else None, None)
+    if last in col:
+        d_out = shape[-1]
+        return P(*([None] * (len(shape) - 1)), "model" if ok(d_out) else None)
+    if last in row:
+        d_in = shape[-2] if len(shape) >= 2 else shape[0]
+        spec = [None] * len(shape)
+        if ok(d_in):
+            spec[-2] = "model"
+        return P(*spec)
+    return P(*([None] * len(shape)))
+
+
+def _moe_spec(path: str, shape, model_size) -> Optional[P]:
+    """Experts dim (first after layer-stack) on `model` (EP)."""
+    last = path.split("/")[-1]
+    if last in ("w1", "w3", "w2") and len(shape) >= 3:
+        # (L, E, D, F) stacked or (E, D, F) unstacked
+        e_dim = len(shape) - 3
+        if shape[e_dim] % model_size == 0 and shape[e_dim] >= model_size:
+            spec = [None] * len(shape)
+            spec[e_dim] = "model"
+            return P(*spec)
+    return None
+
+
+def param_specs(cfg: ArchConfig, params, model_size: int = 16) -> Dict:
+    is_moe = bool(cfg.moe and cfg.moe.n_experts)
+
+    def one(path_tuple, leaf):
+        path = "/".join(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+                        for p in path_tuple)
+        shape = leaf.shape
+        if is_moe and "layers" in path and "ffn" in path and "shared" not in path:
+            s = _moe_spec(path, shape, model_size)
+            if s is not None:
+                return s
+        base = _spec_for(path, shape, model_size)
+        # stacked layers: never shard the leading layer axis; pad spec rank
+        if path.startswith(("layers", "encoder")) and len(base) < len(shape):
+            return P(*([None] * (len(shape) - len(base))), *base)
+        return base
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (train/prefill)
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(cfg: ArchConfig, lp, x, sh: Shardings):
+    if cfg.moe and cfg.moe.n_experts and "router" in lp["ffn"]._fields:
+        if cfg.moe.impl == "shard_map" and sh.mesh is not None:
+            return ffn_mod.moe_ffn_shard_map(lp["ffn"], x, cfg.moe, sh)
+        y, aux = ffn_mod.moe_ffn(lp["ffn"], x, cfg.moe, sh=sh)
+        return y, aux
+    if cfg.ffn_mode == "topk" and cfg.topk_k:
+        return ffn_mod.topk_ffn(lp["ffn"], x, cfg.topk_k, sh=sh), 0.0
+    if cfg.ffn_mode == "block_topk" and cfg.topk_k:
+        return ffn_mod.block_topk_ffn(lp["ffn"], x, cfg.topk_k,
+                                      block=cfg.topk_block, sh=sh), 0.0
+    return ffn_mod.swiglu(lp["ffn"], x, sh=sh), 0.0
+
+
+def _attn_block(cfg: ArchConfig, lp, x, sh: Shardings, *, causal=True,
+                window=0, enc=None, dense_ffn=False):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    meas = dict(attn_chunk=cfg.attn_chunk, unroll=cfg.unroll_inner,
+                p_dtype=jnp.bfloat16 if cfg.attn_p_dtype == "bfloat16" else None)
+    if cfg.attention == "mla":
+        a = attn.mla_forward(lp["attn"], h, n_heads=cfg.n_heads, mla=cfg.mla,
+                             rope_theta=cfg.rope_theta, sh=sh, **meas)
+    else:
+        a = attn.gqa_forward(lp["attn"], h, n_heads=cfg.n_heads,
+                             n_kv=cfg.n_kv_heads, hd=cfg.hd,
+                             rope_theta=cfg.rope_theta, causal=causal,
+                             window=window, sh=sh, **meas)
+    x = x + a
+    if enc is not None and "cross" in lp:
+        h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        kv = attn.gqa_cross_kv(lp["cross"], enc, cfg.n_kv_heads, cfg.hd)
+        c = attn.gqa_forward(lp["cross"], h, n_heads=cfg.n_heads,
+                             n_kv=cfg.n_kv_heads, hd=cfg.hd,
+                             rope_theta=cfg.rope_theta, sh=sh, cross_kv=kv,
+                             **meas)
+        x = x + c
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if dense_ffn:
+        y, aux = ffn_mod.swiglu(lp["ffn"], h, sh=sh), 0.0
+    else:
+        y, aux = _ffn_apply(cfg, lp, h, sh)
+    return x + y, aux
+
+
+def _mamba_block(cfg: ArchConfig, lp, x, sh: Shardings):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    y = m2.mamba2_forward(
+        lp["mamba"], h, expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+        state=cfg.ssm_state, conv=cfg.ssm_conv)
+    return x + y, 0.0
+
+
+def _rwkv_block(cfg: ArchConfig, lp, x, sh: Shardings):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    y, _, _ = rk.rwkv6_time_mix(lp["rwkv"], h, n_heads=cfg.n_heads, sh=sh,
+                                chunk=cfg.rwkv_chunk, unroll=cfg.unroll_inner)
+    x = x + y
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    y, _ = rk.rwkv6_channel_mix(lp["rwkv"], h)
+    return x + y, 0.0
+
+
+def _block(cfg: ArchConfig, kind: str, lp, x, sh, enc=None):
+    if kind == "A":
+        return _attn_block(cfg, lp, x, sh, causal=True,
+                           window=cfg.sliding_window if cfg.family == "hybrid" else 0,
+                           enc=enc)
+    if kind == "M":
+        return _mamba_block(cfg, lp, x, sh)
+    if kind == "R":
+        return _rwkv_block(cfg, lp, x, sh)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _scan_layers(cfg, stacked, x, sh, kind, enc=None, remat=True):
+    def body(carry, lp):
+        h, aux = carry
+        h = sh.act_btd(h)
+        h, a = _block(cfg, kind, lp, h, sh, enc=enc)
+        return (h, aux + a), None
+
+    n_layers = jax.tree.leaves(stacked)[0].shape[0]
+    if cfg.unroll_layers:
+        # measurement mode: python loop so HLO carries every layer and
+        # cost_analysis trip counts are exact (see launch/dryrun.py)
+        bodyc = jax.checkpoint(body) if (remat and cfg.remat == "full") else body
+        carry = (x, jnp.zeros((), jnp.float32))
+        for i in range(n_layers):
+            lp = jax.tree.map(lambda a: a[i], stacked)
+            carry, _ = bodyc(carry, lp)
+        return carry
+    g = cfg.remat_groups
+    if remat and cfg.remat == "full" and g > 1 and n_layers % g == 0:
+        # sqrt-schedule remat: outer scan over G checkpointed groups, inner
+        # scan over L/G layers — backward stores G carries instead of L
+        # (the memory-term §Perf lever; see EXPERIMENTS.md).
+        inner_n = n_layers // g
+        grouped = jax.tree.map(
+            lambda a: a.reshape(g, inner_n, *a.shape[1:]), stacked)
+
+        def outer(carry, gp):
+            out, _ = jax.lax.scan(body, carry, gp)
+            return out, None
+
+        outer = jax.checkpoint(outer)
+        (x, aux), _ = jax.lax.scan(outer, (x, jnp.zeros((), jnp.float32)),
+                                   grouped)
+        return x, aux
+    if remat and cfg.remat == "full":
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+def _slice_layers(stacked, start, length):
+    return jax.tree.map(lambda a: jax.lax.slice_in_dim(a, start, start + length,
+                                                       axis=0), stacked)
+
+
+def encode(cfg: ArchConfig, params, frames, sh: Shardings):
+    """Whisper encoder over stub frame embeddings (B, T_enc, D)."""
+    x = frames.astype(cfg.activation_dtype)
+
+    def body(carry, lp):
+        h, _ = carry
+        h, _ = _attn_block(cfg, lp, h, sh, causal=False, dense_ffn=False)
+        return (h, jnp.zeros((), jnp.float32)), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    if cfg.unroll_layers:
+        carry = (x, jnp.zeros((), jnp.float32))
+        n = jax.tree.leaves(params["encoder"])[0].shape[0]
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], params["encoder"])
+            carry, _ = body(carry, lp)
+        x = carry[0]
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+    (x, _), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                             params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward_hidden(cfg: ArchConfig, params, tokens, sh: Shardings = UNSHARDED,
+                   vision_embeds=None, frames=None, remat=True):
+    """tokens (B,S) -> final hidden (B,S,D); plus MoE aux loss."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend == "vision_stub" and vision_embeds is not None:
+        pv = vision_embeds.shape[1]
+        x = jax.lax.dynamic_update_slice_in_dim(
+            x, vision_embeds.astype(x.dtype), 0, axis=1)
+        del pv
+    enc = None
+    if cfg.encoder_layers and frames is not None:
+        enc = encode(cfg, params, frames, sh)
+    x = sh.act_btd(x)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for lp in params.get("prefix_layers", []):
+        x, aux = _attn_block(cfg, lp, x, sh, dense_ffn=True, enc=enc)
+        aux_total += aux
+
+    kind = cfg.block_pattern[0] if len(set(cfg.block_pattern)) == 1 else "A"
+    if kind == "M" and cfg.shared_attn_every:
+        stacked = params["layers"]
+        for seg in segments(cfg):
+            span = _slice_layers(stacked, seg.start, seg.length)
+            x, aux = _scan_layers(cfg, span, x, sh, "M", remat=remat)
+            aux_total += aux
+            if seg.shared_after:
+                x, aux = _attn_block(cfg, params["shared_attn"], x, sh,
+                                     window=cfg.sliding_window)
+                aux_total += aux
+    else:
+        x, aux = _scan_layers(cfg, params["layers"], x, sh, kind, enc=enc,
+                              remat=remat)
+        aux_total += aux
+    return rms_norm(x, params["out_norm"], cfg.norm_eps), aux_total
+
+
+def train_loss(cfg: ArchConfig, params, batch, sh: Shardings = UNSHARDED):
+    """batch: {"tokens": (B,S), "labels": (B,S)} (+ stub modality inputs)."""
+    h, aux = forward_hidden(
+        cfg, params, batch["tokens"], sh,
+        vision_embeds=batch.get("vision_embeds"),
+        frames=batch.get("frames"),
+    )
+    def logits_fn(hh, w):
+        out = hh @ w
+        return sh.act_btv(out)
+    loss = cross_entropy_chunked(logits_fn, h, batch["labels"],
+                                 params["lm_head"], cfg.loss_chunks,
+                                 unroll=cfg.unroll_inner)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                      dtype=None) -> Dict:
+    """Cache pytree (all stacked on a leading per-layer axis)."""
+    dtype = dtype or cfg.activation_dtype
+    kind = cfg.block_pattern[0] if len(set(cfg.block_pattern)) == 1 else "A"
+    n_prefix = 1 if cfg.first_layer_dense_ffn else 0
+    n_scan = cfg.n_layers - n_prefix
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if kind == "A":
+        if cfg.attention == "mla":
+            m = cfg.mla
+            cache["latent"] = jnp.zeros((n_scan, batch, max_seq, m.kv_lora), dtype)
+            cache["krope"] = jnp.zeros((n_scan, batch, max_seq, m.qk_rope_dim), dtype)
+            if n_prefix:
+                cache["p_latent"] = jnp.zeros((n_prefix, batch, max_seq, m.kv_lora), dtype)
+                cache["p_krope"] = jnp.zeros((n_prefix, batch, max_seq, m.qk_rope_dim), dtype)
+        else:
+            kv, hd = cfg.n_kv_heads, cfg.hd
+            cache["k"] = jnp.zeros((n_scan, batch, max_seq, kv, hd), dtype)
+            cache["v"] = jnp.zeros((n_scan, batch, max_seq, kv, hd), dtype)
+        if cfg.encoder_layers:
+            cache["cross_k"] = jnp.zeros(
+                (n_scan, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd), dtype)
+            cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    elif kind == "M":
+        di, heads = m2.mamba2_dims(cfg.d_model, cfg.ssm_expand,
+                                   cfg.ssm_head_dim, cfg.ssm_state)
+        cache["ssm"] = jnp.zeros((n_scan, batch, heads, cfg.ssm_head_dim,
+                                  cfg.ssm_state), jnp.float32)
+        cache["conv"] = jnp.zeros((n_scan, batch, cfg.ssm_conv - 1,
+                                   di + 2 * cfg.ssm_state), dtype)
+        if cfg.shared_attn_every:
+            napp = n_shared_apps(cfg)
+            kv, hd = cfg.n_kv_heads, cfg.hd
+            cache["shared_k"] = jnp.zeros((napp, batch, max_seq, kv, hd), dtype)
+            cache["shared_v"] = jnp.zeros_like(cache["shared_k"])
+    elif kind == "R":
+        hp = cfg.d_model // cfg.n_heads
+        cache["wkv"] = jnp.zeros((n_scan, batch, cfg.n_heads, hp, hp), jnp.float32)
+        cache["shift1"] = jnp.zeros((n_scan, batch, cfg.d_model), dtype)
+        cache["shift2"] = jnp.zeros((n_scan, batch, cfg.d_model), dtype)
+    return cache
+
+
+def _maybe_scan(cfg, body, carry, xs):
+    """lax.scan, or an unrolled python loop in measurement mode."""
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked
+
+
+def _decode_attn_layer(cfg, lp, x, kc, vc, pos, window=0):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, kc, vc = attn.gqa_decode(lp["attn"], h, kc, vc, pos,
+                                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                                hd=cfg.hd, rope_theta=cfg.rope_theta,
+                                window=window)
+    return x + a, kc, vc
+
+
+def _decode_ffn(cfg, lp, x, sh, dense_ffn=False):
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if dense_ffn:
+        return x + ffn_mod.swiglu(lp["ffn"], h, sh=sh)
+    y, _ = _ffn_apply(cfg, lp, h, sh)
+    return x + y
+
+
+def decode_step(cfg: ArchConfig, params, cache: Dict, tokens,
+                sh: Shardings = UNSHARDED):
+    """One serve step: tokens (B,1) -> logits (B,1,V); updates cache."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = sh.act_btd(x)
+    kind = cfg.block_pattern[0] if len(set(cfg.block_pattern)) == 1 else "A"
+    new_cache = dict(cache)
+
+    for i, lp in enumerate(params.get("prefix_layers", [])):
+        # prefix layers exist only for MLA archs (deepseek-v2-lite layer 0)
+        assert cfg.attention == "mla", "prefix layers require MLA"
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, lat, krp = attn.mla_decode(
+            lp["attn"], h, cache["p_latent"][i], cache["p_krope"][i], pos,
+            n_heads=cfg.n_heads, mla=cfg.mla, rope_theta=cfg.rope_theta)
+        x = x + a
+        new_cache["p_latent"] = new_cache["p_latent"].at[i].set(lat)
+        new_cache["p_krope"] = new_cache["p_krope"].at[i].set(krp)
+        x = _decode_ffn(cfg, lp, x, sh, dense_ffn=True)
+
+    if kind == "A":
+        if cfg.attention == "mla":
+            def body(carry, xs):
+                h = carry
+                lp, lat, krp = xs
+                hh = rms_norm(h, lp["ln1"], cfg.norm_eps)
+                a, lat, krp = attn.mla_decode(
+                    lp["attn"], hh, lat, krp, pos, n_heads=cfg.n_heads,
+                    mla=cfg.mla, rope_theta=cfg.rope_theta)
+                h = h + a
+                h = _decode_ffn(cfg, lp, h, sh)
+                return h, (lat, krp)
+            x, (lat, krp) = _maybe_scan(
+                cfg, body, x, (params["layers"], cache["latent"], cache["krope"]))
+            new_cache["latent"], new_cache["krope"] = lat, krp
+        else:
+            has_cross = cfg.encoder_layers > 0
+            def body(carry, xs):
+                h = carry
+                if has_cross:
+                    lp, kc, vc, ck, cv = xs
+                else:
+                    lp, kc, vc = xs
+                hh = rms_norm(h, lp["ln1"], cfg.norm_eps)
+                a, kc, vc = attn.gqa_decode(
+                    lp["attn"], hh, kc, vc, pos, n_heads=cfg.n_heads,
+                    n_kv=cfg.n_kv_heads, hd=cfg.hd, rope_theta=cfg.rope_theta)
+                h = h + a
+                if has_cross:
+                    hh = rms_norm(h, lp["ln_cross"], cfg.norm_eps)
+                    b = hh.shape[0]
+                    q = (hh @ lp["cross"].wq).reshape(b, 1, cfg.n_heads, cfg.hd)
+                    o = attn.decode_attention(q, ck, cv,
+                                              jnp.asarray(ck.shape[1], jnp.int32))
+                    h = h + o.reshape(b, 1, cfg.n_heads * cfg.hd) @ lp["cross"].wo
+                h = _decode_ffn(cfg, lp, h, sh)
+                return h, ((kc, vc))
+            xs = (params["layers"], cache["k"], cache["v"])
+            if has_cross:
+                xs = xs + (cache["cross_k"], cache["cross_v"])
+            x, (kc, vc) = _maybe_scan(cfg, body, x, xs)
+            new_cache["k"], new_cache["v"] = kc, vc
+    elif kind == "M":
+        stacked = params["layers"]
+        ssm_out, conv_out = [], []
+        app = 0
+        segs = segments(cfg)
+        off = 0
+        new_ssm = cache["ssm"]
+        new_conv = cache["conv"]
+        for seg in segs:
+            span = _slice_layers(stacked, seg.start, seg.length)
+            ssm_span = jax.lax.slice_in_dim(cache["ssm"], seg.start,
+                                            seg.start + seg.length, axis=0)
+            conv_span = jax.lax.slice_in_dim(cache["conv"], seg.start,
+                                             seg.start + seg.length, axis=0)
+
+            def body(carry, xs):
+                h = carry
+                lp, s_st, c_st = xs
+                hh = rms_norm(h, lp["ln1"], cfg.norm_eps)
+                y, s_st, c_st = m2.mamba2_decode(
+                    lp["mamba"], hh, s_st, c_st, expand=cfg.ssm_expand,
+                    head_dim=cfg.ssm_head_dim, state=cfg.ssm_state,
+                    conv=cfg.ssm_conv)
+                return h + y, (s_st, c_st)
+
+            x, (s_new, c_new) = _maybe_scan(cfg, body, x,
+                                            (span, ssm_span, conv_span))
+            new_ssm = jax.lax.dynamic_update_slice_in_dim(new_ssm, s_new,
+                                                          seg.start, axis=0)
+            new_conv = jax.lax.dynamic_update_slice_in_dim(new_conv, c_new,
+                                                           seg.start, axis=0)
+            if seg.shared_after:
+                lp = params["shared_attn"]
+                hh = rms_norm(x, lp["ln1"], cfg.norm_eps)
+                a, kc, vc = attn.gqa_decode(
+                    lp["attn"], hh, cache["shared_k"][app], cache["shared_v"][app],
+                    pos, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+                    rope_theta=cfg.rope_theta, window=cfg.sliding_window)
+                x = x + a
+                x = _decode_ffn(cfg, lp, x, sh)
+                new_cache["shared_k"] = new_cache["shared_k"].at[app].set(kc)
+                new_cache["shared_v"] = new_cache["shared_v"].at[app].set(vc)
+                app += 1
+            off += seg.length
+        new_cache["ssm"], new_cache["conv"] = new_ssm, new_conv
+    elif kind == "R":
+        def body(carry, xs):
+            h = carry
+            lp, st, sh1, sh2 = xs
+            hh = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            y, st, last1 = rk.rwkv6_time_mix(lp["rwkv"], hh, n_heads=cfg.n_heads,
+                                             state=st, x_prev=sh1)
+            h = h + y
+            hh = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            y, last2 = rk.rwkv6_channel_mix(lp["rwkv"], hh, x_prev=sh2)
+            return h + y, (st, last1, last2)
+        x, (st, s1, s2) = _maybe_scan(
+            cfg, body, x, (params["layers"], cache["wkv"], cache["shift1"],
+                           cache["shift2"]))
+        new_cache["wkv"], new_cache["shift1"], new_cache["shift2"] = st, s1, s2
+
+    h = rms_norm(x, params["out_norm"], cfg.norm_eps)
+    logits = h @ params["lm_head"]
+    logits = sh.act_btv(logits)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,21 @@
+"""Optimizers + distributed-optimization tricks (no external deps).
+
+Optax-style API: ``opt.init(params) -> state``; ``opt.update(grads, state,
+params) -> (updates, state)``; apply with ``apply_updates``.
+
+Distributed features (used by repro.train):
+* ZeRO-1: ``zero1_state_specs`` shards Adam moments over the ``data`` axis.
+* Gradient compression: int8 quantize → psum → dequantize with per-tensor
+  scales (cross-pod all-reduce cost ÷4), optional error feedback.
+"""
+from repro.optim.adamw import adamw, sgd, apply_updates, global_norm, clip_by_global_norm
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine
+from repro.optim.compression import int8_compress, int8_decompress, compressed_psum
+from repro.optim.zero import zero1_state_specs
+
+__all__ = [
+    "adamw", "sgd", "apply_updates", "global_norm", "clip_by_global_norm",
+    "cosine_schedule", "linear_warmup_cosine",
+    "int8_compress", "int8_decompress", "compressed_psum",
+    "zero1_state_specs",
+]

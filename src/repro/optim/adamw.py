@@ -1,0 +1,106 @@
+"""AdamW / SGD with fp32 master moments over bf16 params (pure JAX)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, mu_dtype=jnp.float32) -> Optimizer:
+    """AdamW with decoupled weight decay; moments in fp32 regardless of params."""
+
+    def init(params):
+        mu = jax.tree.map(lambda p: jnp.zeros(p.shape, mu_dtype), params)
+        nu = jax.tree.map(lambda p: jnp.zeros(p.shape, mu_dtype), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        b1t = 1 - b1 ** step.astype(jnp.float32)
+        b2t = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(mu_dtype)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            mhat = m / b1t
+            vhat = v / b2t
+            u = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(mu_dtype)
+            return (-lr_t * u).astype(p.dtype), m, v
+
+        g_flat, treedef = jax.tree.flatten(grads)
+        m_flat = treedef.flatten_up_to(state.mu)
+        v_flat = treedef.flatten_up_to(state.nu)
+        p_flat = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(g_flat, m_flat, v_flat, p_flat)]
+        updates = treedef.unflatten([t[0] for t in out])
+        mu = treedef.unflatten([t[1] for t in out])
+        nu = treedef.unflatten([t[2] for t in out])
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: dict
+
+
+def sgd(lr: Schedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return SGDState(step=jnp.zeros((), jnp.int32), momentum={})
+        m = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=m)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        if momentum == 0.0:
+            updates = jax.tree.map(lambda g, p: (-lr_t * g).astype(p.dtype),
+                                   grads, params)
+            return updates, SGDState(step=step, momentum={})
+        m = jax.tree.map(lambda mm, g: momentum * mm + g.astype(jnp.float32),
+                         state.momentum, grads)
+        updates = jax.tree.map(lambda mm, p: (-lr_t * mm).astype(p.dtype), m, params)
+        return updates, SGDState(step=step, momentum=m)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm

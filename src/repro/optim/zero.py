@@ -1,0 +1,33 @@
+"""ZeRO-1: shard optimizer moments over the data axis (DESIGN.md §6).
+
+Adam's ``mu``/``nu`` are elementwise; any dimension may be sharded without
+changing math.  ``zero1_state_specs`` takes the parameter PartitionSpecs and
+returns moment specs with the ``data`` axis added to the first dimension not
+already sharded (falling back to the param spec when no dim is free), so
+moment memory scales 1/|data| like ZeRO stage 1.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _add_data_axis(spec: P, shape, data_axis="data") -> P:
+    parts = list(spec) if spec is not None else []
+    # pad to rank
+    while len(parts) < len(shape):
+        parts.append(None)
+    for i, p in enumerate(parts):
+        if p is None and shape[i] > 1:
+            parts[i] = data_axis
+            return P(*parts)
+        # don't double-shard a dim that already carries an axis
+    return P(*parts)
+
+
+def zero1_state_specs(param_specs, param_shapes, data_axis: str = "data"):
+    """Moment PartitionSpecs for AdamWState given param specs/shapes."""
+    def one(spec, shape):
+        return _add_data_axis(spec, shape, data_axis)
+    mu = jax.tree.map(one, param_specs, param_shapes)
+    return mu

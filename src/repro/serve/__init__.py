@@ -1,0 +1,4 @@
+"""Serving: batched KV-cache decode loop."""
+from repro.serve.engine import ServeEngine, greedy_generate
+
+__all__ = ["ServeEngine", "greedy_generate"]

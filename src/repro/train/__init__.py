@@ -1,0 +1,6 @@
+"""Training: step factory, fault-tolerant trainer loop, straggler monitor."""
+from repro.train.step import TrainState, make_train_step, init_train_state
+from repro.train.trainer import Trainer, TrainerConfig, StragglerMonitor
+
+__all__ = ["TrainState", "make_train_step", "init_train_state",
+           "Trainer", "TrainerConfig", "StragglerMonitor"]

@@ -1,0 +1,103 @@
+"""Fault-tolerant trainer loop (DESIGN.md §6).
+
+* periodic async checkpoints; on any step failure (device loss, preemption —
+  surfaced as exceptions from the step call) the trainer restores the last
+  complete checkpoint and replays — the deterministic pipeline guarantees
+  the replayed batches are identical.
+* ``StragglerMonitor`` tracks a step-time EWMA and flags outliers (the hook
+  a fleet scheduler would use to evict/re-shard slow hosts).
+* ``failure_injector`` lets tests kill arbitrary steps to exercise recovery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.data.pipeline import TokenPipeline
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    alpha: float = 0.2
+    threshold: float = 2.5  # flag steps slower than threshold × EWMA
+    ewma: Optional[float] = None
+    flagged: List[int] = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = self.ewma is not None and dt > self.threshold * self.ewma
+        self.ewma = dt if self.ewma is None else \
+            (1 - self.alpha) * self.ewma + self.alpha * dt
+        if is_straggler:
+            self.flagged.append(step)
+        return is_straggler
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    max_restarts: int = 3
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, step_fn: Callable, state,
+                 pipeline: TokenPipeline,
+                 failure_injector: Optional[Callable[[int], None]] = None,
+                 to_device: Optional[Callable] = None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.state = state
+        self.pipeline = pipeline
+        self.failure_injector = failure_injector
+        self.to_device = to_device or (lambda b: {k: jax.numpy.asarray(v)
+                                                  for k, v in b.items()})
+        self.ckpt = AsyncCheckpointer(cfg.checkpoint_dir)
+        self.monitor = StragglerMonitor()
+        self.history: List[Dict[str, float]] = []
+        self.restarts = 0
+
+    def _restore_latest(self):
+        step = latest_step(self.cfg.checkpoint_dir)
+        if step is None:
+            raise RuntimeError("no checkpoint to restore from")
+        self.state = restore_checkpoint(self.cfg.checkpoint_dir, step,
+                                        self.state)
+        return step
+
+    def run(self):
+        step = int(np.asarray(self.state.step))
+        while step < self.cfg.total_steps:
+            try:
+                batch = self.to_device(self.pipeline.batch_at(step))
+                if self.failure_injector is not None:
+                    self.failure_injector(step)
+                t0 = time.monotonic()
+                self.state, metrics = self.step_fn(self.state, batch)
+                metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                dt = time.monotonic() - t0
+                self.monitor.observe(step, dt)
+                metrics["step_time_s"] = dt
+                self.history.append(metrics)
+                step += 1
+                if step % self.cfg.checkpoint_every == 0:
+                    self.ckpt.save(step, self.state)
+            except Exception:
+                # failure path: restore + replay (deterministic pipeline)
+                self.restarts += 1
+                if self.restarts > self.cfg.max_restarts:
+                    raise
+                self.ckpt.wait()
+                restored = self._restore_latest()
+                step = restored
+        self.ckpt.wait()
+        # final checkpoint so restarts after completion are no-ops
+        self.ckpt.save(step, self.state)
+        self.ckpt.wait()
+        return self.state

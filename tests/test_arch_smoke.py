@@ -1,0 +1,141 @@
+"""Per-architecture smoke tests: reduced same-family configs on CPU.
+
+One forward/train step per arch asserting output shapes + no NaNs (per the
+brief); plus decode-cache consistency and the paper's TopK-SpGEMM FFN
+integration checks.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.data.pipeline import synthetic_batch
+from repro.configs.base import ShapeSpec
+from repro.models.transformer import (
+    init_transformer, train_loss, forward_hidden, init_decode_cache,
+    decode_step,
+)
+
+SMOKE_SHAPE = ShapeSpec("smoke", 32, 2, "train")
+
+
+def make_batch(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return {k: jnp.asarray(v) for k, v in
+            synthetic_batch(cfg, SMOKE_SHAPE, rng, batch_override=b).items()}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    cfg = smoke_config(arch)
+    params, specs = init_transformer(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss, grads = jax.jit(
+        jax.value_and_grad(lambda p: train_loss(cfg, p, batch))
+    )(params)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    # spec tree mirrors the param tree
+    assert jax.tree.structure(specs) == jax.tree.structure(
+        jax.tree.map(lambda _: object(), params))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_decode_step(arch):
+    cfg = smoke_config(arch)
+    params, _ = init_transformer(cfg, jax.random.PRNGKey(0))
+    b = 2
+    cache = init_decode_cache(cfg, b, 16)
+    tok = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab, (b, 1)))
+    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    logits, cache = step(params, cache, tok)
+    assert logits.shape == (b, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert int(cache["pos"]) == 1
+    logits2, cache = step(params, cache, tok)
+    assert int(cache["pos"]) == 2
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "rwkv6-1.6b", "zamba2-1.2b"])
+def test_decode_matches_forward(arch):
+    """Greedy decode logits == train-mode forward logits at same positions."""
+    cfg = smoke_config(arch)
+    params, _ = init_transformer(cfg, jax.random.PRNGKey(1))
+    b, s = 1, 8
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, cfg.vocab, (b, s)).astype(np.int32)
+    h, _ = forward_hidden(cfg, params, jnp.asarray(toks))
+    from repro.models.common import rms_norm
+    ref_logits = np.asarray(
+        rms_norm(h, params["out_norm"], cfg.norm_eps) @ params["lm_head"])
+    cache = init_decode_cache(cfg, b, s)
+    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+    for t in range(s):
+        logits, cache = step(params, cache, jnp.asarray(toks[:, t:t + 1]))
+    np.testing.assert_allclose(np.asarray(logits)[:, 0], ref_logits[:, -1],
+                               rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("mode", ["topk", "block_topk"])
+def test_topk_spgemm_ffn_integration(mode):
+    """Paper Eq. (1-3) as an LM feature: train step runs, loss finite, and
+    k=d_ff reduces to the dense model (topk mode)."""
+    base = smoke_config("granite-3-2b")
+    cfg = dataclasses.replace(base, ffn_mode=mode, topk_k=64, topk_block=32)
+    params, _ = init_transformer(cfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss, grads = jax.jit(
+        jax.value_and_grad(lambda p: train_loss(cfg, p, batch))
+    )(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert gn > 0
+
+
+def test_topk_full_k_equals_dense():
+    base = smoke_config("granite-3-2b")
+    cfg_t = dataclasses.replace(base, ffn_mode="topk", topk_k=base.d_ff)
+    cfg_d = dataclasses.replace(base, ffn_mode="dense")
+    params, _ = init_transformer(cfg_d, jax.random.PRNGKey(2))
+    batch = make_batch(cfg_d)
+    lt = float(train_loss(cfg_t, params, batch))
+    ld = float(train_loss(cfg_d, params, batch))
+    np.testing.assert_allclose(lt, ld, rtol=1e-5)
+
+
+def test_param_count_sanity():
+    """Analytic n_params within 2% of actual leaf count for a dense arch."""
+    cfg = smoke_config("granite-3-2b")
+    params, _ = init_transformer(cfg, jax.random.PRNGKey(0))
+    actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    analytic = cfg.n_params()
+    assert abs(actual - analytic) / actual < 0.02, (actual, analytic)
+
+
+def test_full_configs_match_table():
+    """The 10 full configs carry the exact published dimensions."""
+    expect = {
+        "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+        "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab) == (L, d, h, kv, ff, v), arch
+    dsl = get_config("deepseek-v2-lite-16b")
+    assert (dsl.n_layers, dsl.d_model, dsl.n_heads, dsl.vocab) == \
+        (27, 2048, 16, 102400)
+    assert dsl.moe.n_experts == 64 and dsl.moe.top_k == 6 and dsl.moe.n_shared == 2
+    assert dsl.moe.d_ff_expert == 1408 and dsl.mla.kv_lora == 512

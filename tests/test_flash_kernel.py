@@ -1,0 +1,56 @@
+"""Fused flash-attention Pallas kernel vs the online-softmax reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_fused
+
+
+def ref_attention(q, k, v, causal):
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(q.shape[-1])
+    if causal:
+        mask = np.tril(np.ones((q.shape[1], k.shape[1]), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("bh,s,d,qb,kb", [
+    (2, 64, 32, 16, 16), (1, 128, 64, 32, 64), (3, 32, 16, 32, 16),
+])
+def test_flash_fused_matches_ref(dtype, causal, bh, s, d, qb, kb):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((bh, s, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((bh, s, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((bh, s, d)), dtype)
+    got = flash_attention_fused(q, k, v, causal=causal, q_blk=qb, k_blk=kb,
+                                interpret=True)
+    expect = ref_attention(q, k, v, causal)
+    rtol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=rtol, atol=2e-2 if dtype == jnp.bfloat16
+                               else 1e-5)
+
+
+def test_flash_fused_matches_model_flash():
+    """Consistency with the model-side chunked flash (attention.py)."""
+    from repro.models.attention import flash_attention
+    rng = np.random.default_rng(1)
+    b, s, h, d = 2, 64, 4, 32
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    model_out = flash_attention(q, k, v, causal=True, q_chunk=32, k_chunk=32)
+    qk = jnp.moveaxis(q, 2, 1).reshape(b * h, s, d)
+    kk = jnp.moveaxis(k, 2, 1).reshape(b * h, s, d)
+    vk = jnp.moveaxis(v, 2, 1).reshape(b * h, s, d)
+    kern_out = flash_attention_fused(qk, kk, vk, causal=True, q_blk=16,
+                                     k_blk=16, interpret=True)
+    kern_out = jnp.moveaxis(kern_out.reshape(b, h, s, d), 1, 2)
+    np.testing.assert_allclose(np.asarray(kern_out), np.asarray(model_out),
+                               rtol=2e-4, atol=2e-5)

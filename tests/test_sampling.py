@@ -1,0 +1,69 @@
+"""Matrix-based bulk sampling (paper §V-C): SpGEMM-expressed sampling."""
+import numpy as np
+import pytest
+
+from repro.apps.graphs import rmat_graph
+from repro.apps.sampling import (
+    bulk_sample, extract, norm_rows, sample_rows, selection_matrix,
+)
+from repro.core.spgemm import spgemm
+from repro.sparse.formats import csr_to_dense
+
+
+def test_selection_matrix_extracts_rows():
+    g = rmat_graph(64, 4.0, seed=0)
+    rows = np.asarray([3, 10, 17])
+    r = selection_matrix(rows, 64)
+    got = np.asarray(csr_to_dense(spgemm(r, g, method="sort").c))
+    expect = np.asarray(csr_to_dense(g))[rows]
+    np.testing.assert_allclose(got, expect, rtol=1e-5)
+
+
+def test_extract_submatrix_matches_dense():
+    g = rmat_graph(48, 5.0, seed=1)
+    rows = np.asarray([1, 5, 9])
+    cols = np.asarray([0, 2, 5, 9, 30])
+    sub = extract(g, rows, cols)
+    expect = np.asarray(csr_to_dense(g))[np.ix_(rows, cols)]
+    np.testing.assert_allclose(np.asarray(csr_to_dense(sub)), expect,
+                               rtol=1e-5)
+
+
+def test_norm_rows_stochastic():
+    g = rmat_graph(32, 4.0, seed=2)
+    q = selection_matrix(np.asarray([0, 4, 8]), 32)
+    p = norm_rows(spgemm(q, g, method="sort").c)
+    d = np.asarray(csr_to_dense(p))
+    sums = d.sum(axis=1)
+    for s in sums:
+        assert s == pytest.approx(1.0, abs=1e-5) or s == pytest.approx(0.0)
+
+
+def test_sample_rows_subset_and_deterministic():
+    g = rmat_graph(64, 8.0, seed=3)
+    q = selection_matrix(np.asarray([2, 7]), 64)
+    p = norm_rows(spgemm(q, g, method="sort").c)
+    s1 = sample_rows(p, 3, np.random.default_rng(0))
+    s2 = sample_rows(p, 3, np.random.default_rng(0))
+    np.testing.assert_array_equal(s1, s2)  # deterministic per seed
+    dense = np.asarray(csr_to_dense(p))
+    support = set(np.nonzero(dense.sum(0))[0].tolist())
+    assert set(s1.tolist()) <= support  # sampled ⊆ neighbors
+
+
+def test_bulk_sample_chain():
+    g = rmat_graph(128, 6.0, seed=4)
+    batch = np.asarray([0, 1, 2, 3])
+    adjs, frontiers = bulk_sample(g, batch, fanout=2, n_layers=2, seed=0)
+    assert len(adjs) == 2 and len(frontiers) == 3
+    # frontiers grow monotonically and contain the batch
+    assert set(batch.tolist()) <= set(frontiers[1].tolist())
+    assert set(frontiers[1].tolist()) <= set(frontiers[2].tolist())
+    # each A^l has shape (|Q^l|, |Q^{l+1}|) and is a true submatrix of A
+    g_dense = np.asarray(csr_to_dense(g))
+    for l, adj in enumerate(adjs):
+        q_rows, q_cols = frontiers[l], frontiers[l + 1]
+        assert adj.shape == (len(q_rows), len(q_cols))
+        np.testing.assert_allclose(
+            np.asarray(csr_to_dense(adj)),
+            g_dense[np.ix_(q_rows, q_cols)], rtol=1e-5)

@@ -1,0 +1,181 @@
+"""Format round-trips and conversions (unit + hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import (
+    CSR, csr_from_dense, csr_to_dense, ell_from_dense, ell_to_dense,
+    csr_to_ell, ell_to_csr, bsr_from_dense, bsr_to_dense, csr_from_coo,
+    csr_transpose, csr_spmm, csr_spmv, csr_permute_rows,
+    csr_column_normalize, csr_column_sums, csr_hadamard_power,
+    topk_rows, topk_mask, topk_rows_st, block_topk_rows,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def random_sparse(rng, n, m, density=0.2):
+    x = rng.standard_normal((n, m)).astype(np.float32)
+    mask = rng.random((n, m)) < density
+    return np.where(mask, x, 0.0).astype(np.float32)
+
+
+@pytest.mark.parametrize("n,m,density", [(1, 1, 1.0), (7, 5, 0.3), (16, 16, 0.1),
+                                         (10, 40, 0.05), (33, 9, 0.9)])
+def test_csr_roundtrip(n, m, density):
+    rng = np.random.default_rng(0)
+    x = random_sparse(rng, n, m, density)
+    a = csr_from_dense(x, capacity=max(int((x != 0).sum()), 1) + 7)  # extra pad
+    np.testing.assert_allclose(np.asarray(csr_to_dense(a)), x)
+
+
+@pytest.mark.parametrize("n,m", [(5, 8), (12, 12), (3, 20)])
+def test_ell_roundtrip(n, m):
+    rng = np.random.default_rng(1)
+    x = random_sparse(rng, n, m, 0.3)
+    e = ell_from_dense(x)
+    np.testing.assert_allclose(np.asarray(ell_to_dense(e)), x)
+
+
+def test_csr_ell_csr_roundtrip():
+    rng = np.random.default_rng(2)
+    x = random_sparse(rng, 9, 13, 0.4)
+    a = csr_from_dense(x)
+    kmax = int((x != 0).sum(1).max())
+    e = csr_to_ell(a, kmax)
+    np.testing.assert_allclose(np.asarray(ell_to_dense(e)), x)
+    a2 = ell_to_csr(e)
+    np.testing.assert_allclose(np.asarray(csr_to_dense(a2)), x)
+
+
+def test_bsr_roundtrip():
+    rng = np.random.default_rng(3)
+    x = random_sparse(rng, 16, 24, 0.2)
+    b = bsr_from_dense(x, (4, 8))
+    np.testing.assert_allclose(np.asarray(bsr_to_dense(b)), x)
+
+
+def test_csr_from_coo_merges_duplicates():
+    rows = [0, 0, 1, 0]
+    cols = [1, 1, 2, 3]
+    vals = [1.0, 2.0, 5.0, 4.0]
+    a = csr_from_coo(rows, cols, vals, (2, 4))
+    d = np.asarray(csr_to_dense(a))
+    expect = np.zeros((2, 4), np.float32)
+    expect[0, 1] = 3.0
+    expect[0, 3] = 4.0
+    expect[1, 2] = 5.0
+    np.testing.assert_allclose(d, expect)
+
+
+def test_transpose():
+    rng = np.random.default_rng(4)
+    x = random_sparse(rng, 11, 7, 0.3)
+    a = csr_from_dense(x, capacity=int((x != 0).sum()) + 5)
+    at = csr_transpose(a)
+    np.testing.assert_allclose(np.asarray(csr_to_dense(at)), x.T)
+
+
+def test_spmm_spmv():
+    rng = np.random.default_rng(5)
+    x = random_sparse(rng, 10, 14, 0.25)
+    a = csr_from_dense(x)
+    d = rng.standard_normal((14, 6)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(csr_spmm(a, jnp.asarray(d))), x @ d,
+                               rtol=1e-5, atol=1e-5)
+    v = rng.standard_normal(14).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(csr_spmv(a, jnp.asarray(v))), x @ v,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_permute_rows():
+    rng = np.random.default_rng(6)
+    x = random_sparse(rng, 8, 9, 0.4)
+    a = csr_from_dense(x, capacity=int((x != 0).sum()) + 3)
+    perm = rng.permutation(8).astype(np.int32)
+    ap = csr_permute_rows(a, jnp.asarray(perm))
+    np.testing.assert_allclose(np.asarray(csr_to_dense(ap)), x[perm])
+    back = csr_permute_rows(ap, jnp.asarray(perm), inverse=True)
+    np.testing.assert_allclose(np.asarray(csr_to_dense(back)), x)
+
+
+def test_column_normalize():
+    rng = np.random.default_rng(7)
+    x = np.abs(random_sparse(rng, 9, 9, 0.5))
+    a = csr_from_dense(x)
+    an = csr_column_normalize(a)
+    s = np.asarray(csr_column_sums(an))
+    nonzero_cols = (x.sum(0) > 0)
+    np.testing.assert_allclose(s[nonzero_cols], 1.0, rtol=1e-5)
+
+
+def test_hadamard_power():
+    rng = np.random.default_rng(8)
+    x = np.abs(random_sparse(rng, 6, 6, 0.5))
+    a = csr_from_dense(x)
+    a2 = csr_hadamard_power(a, 2.0)
+    np.testing.assert_allclose(np.asarray(csr_to_dense(a2)), x * x, rtol=1e-5)
+
+
+def test_topk_rows():
+    rng = np.random.default_rng(9)
+    x = rng.standard_normal((5, 12)).astype(np.float32)
+    t = topk_rows(jnp.asarray(x), 3)
+    dense = np.asarray(t.to_dense())
+    # each row keeps exactly its top-3 |values|
+    for i in range(5):
+        kept = np.nonzero(dense[i])[0]
+        top = np.argsort(-np.abs(x[i]))[:3]
+        assert set(kept) == set(top)
+        np.testing.assert_allclose(dense[i, kept], x[i, kept])
+
+
+def test_topk_st_gradient_matches_eq3():
+    """Eq. (3): gradient is the mask ⊙ upstream (winner-take-all)."""
+    rng = np.random.default_rng(10)
+    x = jnp.asarray(rng.standard_normal((4, 10)).astype(np.float32))
+    k = 4
+    f = lambda x: jnp.sum(topk_rows_st(x, k) ** 2)
+    g = jax.grad(f)(x)
+    m = topk_mask(x, k)
+    expect = np.where(np.asarray(m), 2 * np.asarray(x), 0)
+    np.testing.assert_allclose(np.asarray(g), expect, rtol=1e-5)
+
+
+def test_block_topk():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((3, 32)).astype(np.float32))
+    t = block_topk_rows(x, k_blocks=2, block=8)
+    assert t.values.shape == (3, 16)
+    assert t.indices.shape == (3, 2)
+    xb = np.asarray(x).reshape(3, 4, 8)
+    energy = (xb ** 2).sum(-1)
+    for i in range(3):
+        top2 = set(np.argsort(-energy[i])[:2])
+        assert set(np.asarray(t.indices)[i]) == top2
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 12), m=st.integers(1, 12),
+    seed=st.integers(0, 2**16), density=st.floats(0.0, 1.0),
+)
+def test_property_csr_roundtrip_and_transpose(n, m, seed, density):
+    rng = np.random.default_rng(seed)
+    x = random_sparse(rng, n, m, density)
+    cap = max(int((x != 0).sum()), 1)
+    a = csr_from_dense(x, capacity=cap)
+    np.testing.assert_allclose(np.asarray(csr_to_dense(a)), x)
+    np.testing.assert_allclose(np.asarray(csr_to_dense(csr_transpose(a))), x.T)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 8), m=st.integers(2, 16), seed=st.integers(0, 2**16))
+def test_property_topk_mask_card(n, m, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    k = min(3, m)
+    mask = np.asarray(topk_mask(x, k))
+    assert (mask.sum(axis=1) == k).all()
