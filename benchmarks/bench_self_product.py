@@ -31,7 +31,11 @@ def _time(f, reps=3):
 
 
 def run(names=None, n_override: int | None = None,
-        methods=("sort", "hash")) -> List[Dict]:
+        methods=("sort", "hash"), gathers=("xla",)) -> List[Dict]:
+    """Per workload: dense baseline + engine×gather grid through the
+    plan-compiled executor.  The first gather in ``gathers`` fills the
+    legacy ``{m}_ms`` keys; additional gathers add ``{m}_{g}_ms`` columns
+    (the Fig. 7 software-only vs AIA ablation axis)."""
     rows = []
     names = names or list(TABLE_II_SCALED)
     for name in names:
@@ -51,29 +55,41 @@ def run(names=None, n_override: int | None = None,
             "dense_gflops": flops / t_dense / 1e9,
         }
         for m in methods:
-            t = _time(lambda m=m: spgemm(a, a, method=m), reps=1)
-            res = spgemm(a, a, method=m)
-            rec[f"{m}_ms"] = t * 1e3
-            rec[f"{m}_gflops"] = flops / t / 1e9
+            for gi, g in enumerate(gathers):
+                t = _time(lambda m=m, g=g: spgemm(a, a, engine=m, gather=g),
+                          reps=1)
+                prefix = m if gi == 0 else f"{m}_{g}"
+                rec[f"{prefix}_ms"] = t * 1e3
+                rec[f"{prefix}_gflops"] = flops / t / 1e9
+                rec[f"{prefix}_vs_dense_reduction_pct"] = 100 * (1 - t / t_dense)
+            res = spgemm(a, a, engine=m, gather=gathers[0])
             rec["nnz_c"] = res.info["nnz_c"]
             rec["compression"] = res.info["compression_ratio"]
-            rec[f"{m}_vs_dense_reduction_pct"] = 100 * (1 - t / t_dense)
         # Fig. 7-style "AIA scheduling vs software-only": Table-I grouped
-        # schedule vs ungrouped natural order (worst-case capacities)
-        t_nat = _time(lambda: spgemm(a, a, method="sort", schedule="natural"),
+        # schedule vs ungrouped natural order (worst-case capacities), same
+        # engine both sides so the ablation isolates scheduling alone
+        t_nat = _time(lambda: spgemm(a, a, engine=methods[0],
+                                     gather=gathers[0], schedule="natural"),
                       reps=1)
         rec["natural_ms"] = t_nat * 1e3
-        rec["group_sched_reduction_pct"] = 100 * (1 - rec["sort_ms"] / 1e3 / t_nat)
+        rec["group_sched_reduction_pct"] = 100 * (
+            1 - rec[f"{methods[0]}_ms"] / 1e3 / t_nat)
         rows.append(rec)
     return rows
 
 
 def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", default="sort", choices=("sort", "hash"))
+    ap.add_argument("--gather", default="xla", choices=("auto", "xla", "aia"))
+    args = ap.parse_args()
+    m = args.engine
     for r in run(names=["scircuit", "p2p-Gnutella04", "Economics"],
-                 methods=("sort",)):
-        print(f"selfprod_{r['workload']},{r['sort_ms']*1e3:.0f},"
-              f"gflops={r['sort_gflops']:.3f};ip={r['intermediate_products']};"
-              f"nnz_c={r['nnz_c']};vs_dense={r['sort_vs_dense_reduction_pct']:.1f}%")
+                 methods=(m,), gathers=(args.gather,)):
+        print(f"selfprod_{r['workload']},{r[f'{m}_ms']*1e3:.0f},"
+              f"gflops={r[f'{m}_gflops']:.3f};ip={r['intermediate_products']};"
+              f"nnz_c={r['nnz_c']};vs_dense={r[f'{m}_vs_dense_reduction_pct']:.1f}%")
 
 
 if __name__ == "__main__":

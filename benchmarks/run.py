@@ -19,7 +19,12 @@ def _emit(name, us, derived):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--engine", default="sort", choices=("sort", "hash"),
+                    help="accumulation engine for the SpGEMM benchmarks")
+    ap.add_argument("--gather", default="xla", choices=("auto", "xla", "aia"),
+                    help="B-row gather backend (Fig. 7 ablation axis)")
     args = ap.parse_args()
+    eng = args.engine
 
     from benchmarks import bench_self_product, bench_locality, \
         bench_graph_apps, bench_gnn
@@ -29,11 +34,12 @@ def main() -> None:
         names=None if args.full else ["scircuit", "p2p-Gnutella04",
                                       "Economics", "Protein"],
         n_override=None if args.full else 1024,
-        methods=("sort",) if not args.full else ("sort", "hash")))
+        methods=(eng,) if not args.full else ("sort", "hash"),
+        gathers=(args.gather,)))
     for r in names:
-        _emit(f"selfprod_{r['workload']}", r["sort_ms"] * 1e3,
-              f"gflops={r['sort_gflops']:.3f};ip={r['intermediate_products']};"
-              f"nnz_c={r['nnz_c']};vs_dense_pct={r['sort_vs_dense_reduction_pct']:.1f};"
+        _emit(f"selfprod_{r['workload']}", r[f"{eng}_ms"] * 1e3,
+              f"gflops={r[f'{eng}_gflops']:.3f};ip={r['intermediate_products']};"
+              f"nnz_c={r['nnz_c']};vs_dense_pct={r[f'{eng}_vs_dense_reduction_pct']:.1f};"
               f"group_sched_pct={r['group_sched_reduction_pct']:.1f}")
 
     # --- Fig 5: locality / cache-hit proxy ---
@@ -51,14 +57,16 @@ def main() -> None:
             names=("Economics", "Protein") if not args.full else
             ("RoadTX", "web-Google", "Economics", "amazon0601",
              "WindTunnel", "Protein"),
-            n_override=None if args.full else 1024):
+            n_override=None if args.full else 1024,
+            engine=eng, gather=args.gather):
         _emit(f"contraction_{r['workload']}", r["spgemm_ms"] * 1e3,
               f"vs_dense_pct={r['reduction_vs_dense_pct']:.1f};ip={r['total_ip']}")
     for r in bench_graph_apps.bench_mcl(
             names=("Economics",) if not args.full else
             ("web-Google", "Economics", "Protein"),
             max_iters=2 if not args.full else 3,
-            n_override=None if args.full else 1024):
+            n_override=None if args.full else 1024,
+            engine=eng, gather=args.gather):
         _emit(f"mcl_{r['workload']}", r["spgemm_ms"] * 1e3,
               f"vs_dense_pct={r['reduction_vs_dense_pct']:.1f};"
               f"clusters={r['n_clusters']}")

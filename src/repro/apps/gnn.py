@@ -35,6 +35,10 @@ class GNNConfig:
     n_classes: int = 7
     topk: int = 16  # k of Eq. (1); <= d_hidden
     sparse_mode: Literal["topk", "dense"] = "topk"
+    # How the aggregation's two-level indirect gather is served: "aia" uses
+    # the scalar-prefetch Pallas kernels (paper's accelerated path), "xla"
+    # the software-only baseline, "auto" picks by backend (AIA on TPU).
+    gather: Literal["auto", "xla", "aia"] = "auto"
 
 
 def normalize_adjacency(a: CSR) -> CSR:
@@ -64,12 +68,13 @@ def init_gnn(cfg: GNNConfig, key) -> Dict:
     return params
 
 
-def _aggregate(a: CSR, x: jax.Array, mode: str, k: int) -> jax.Array:
+def _aggregate(a: CSR, x: jax.Array, mode: str, k: int,
+               gather: str = "auto") -> jax.Array:
     """A · TopK(X) — Eq. (1)'s sparse aggregation (or dense baseline)."""
     if mode == "topk":
         xs = topk_rows_st(x, k)  # Eq. (2) fwd, Eq. (3) bwd
-        return csr_spmm(a, xs)
-    return csr_spmm(a, x)
+        return csr_spmm(a, xs, gather=gather)
+    return csr_spmm(a, x, gather=gather)
 
 
 def gnn_forward(cfg: GNNConfig, params: Dict, a: CSR, x: jax.Array) -> jax.Array:
@@ -77,7 +82,7 @@ def gnn_forward(cfg: GNNConfig, params: Dict, a: CSR, x: jax.Array) -> jax.Array
     for layer in range(cfg.n_layers):
         k = min(cfg.topk, h.shape[1])
         mode = cfg.sparse_mode if layer > 0 else "dense"  # input feats stay dense
-        agg = _aggregate(a, h, mode, k)
+        agg = _aggregate(a, h, mode, k, gather=cfg.gather)
         if cfg.arch == "gcn":
             h = agg @ params[f"w{layer}"]
         elif cfg.arch == "gin":

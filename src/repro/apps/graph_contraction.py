@@ -21,10 +21,15 @@ def label_matrix(labels: np.ndarray, n: int | None = None,
     return csr_from_coo(labels, np.arange(n), np.ones(n, np.float32), (m, n))
 
 
-def graph_contraction(g: CSR, labels: np.ndarray, method: str = "sort"):
-    """Returns (C, infos): contracted adjacency + per-SpGEMM counters."""
+def graph_contraction(g: CSR, labels: np.ndarray, method: str = "sort",
+                      gather: str = "auto", schedule: str = "grouped"):
+    """Returns (C, infos): contracted adjacency + per-SpGEMM counters.
+
+    ``method``/``gather``/``schedule`` select the executor's engine, B-row
+    gather backend, and Table-I scheduling (the paper's ablation axes).
+    """
     s = label_matrix(labels, n=g.n_rows)
     st = csr_transpose(s)
-    r1 = spgemm(s, g, method=method)  # S·G
-    r2 = spgemm(r1.c, st, method=method)  # (S·G)·Sᵀ
+    r1 = spgemm(s, g, engine=method, gather=gather, schedule=schedule)
+    r2 = spgemm(r1.c, st, engine=method, gather=gather, schedule=schedule)
     return r2.c, [r1.info, r2.info]

@@ -4,21 +4,28 @@ Phases (paper §III):
   1. Row-grouping  — Algorithm 1 intermediate-product counting + Table I
                      logarithmic binning (``repro.core.grouping``).
   2. Allocation    — symbolic phase: unique output columns per row
-                     (``repro.core.allocation``; hash + sort variants).
-  3. Accumulation  — numeric phase: value accumulation + gather + sort
-                     (``repro.core.accumulation``).
+                     (hash + sort engines in ``repro.core.phases``).
+  3. Accumulation  — numeric phase: value accumulation + gather + sort.
 
-``repro.core.spgemm.spgemm`` is the public API; ``spgemm_bsr`` is the
+``repro.core.spgemm.spgemm`` is the public API, a thin façade over the
+plan-compiled executor in ``repro.core.executor`` (engine registry, gather
+backends, program cache, vectorized reassembly); ``spgemm_bsr`` is the
 MXU-native block variant used by the LM integration.
 """
 from repro.core.ip_count import intermediate_products, ip_histogram
 from repro.core.grouping import group_rows, GroupPlan, TABLE_I
+from repro.core.executor import (
+    Engine, available_engines, cache_stats, clear_program_cache,
+    execute_plan, get_engine, register_engine, resolve_gather,
+)
 from repro.core.spgemm import spgemm, spgemm_info, SpGEMMResult
 from repro.core.spgemm_bsr import bsr_spgemm_dense_rhs
 
 __all__ = [
     "intermediate_products", "ip_histogram",
     "group_rows", "GroupPlan", "TABLE_I",
+    "Engine", "register_engine", "get_engine", "available_engines",
+    "execute_plan", "resolve_gather", "cache_stats", "clear_program_cache",
     "spgemm", "spgemm_info", "SpGEMMResult",
     "bsr_spgemm_dense_rhs",
 ]

@@ -1,0 +1,371 @@
+"""Plan-compiled SpGEMM executor — the group pipeline behind ``spgemm()``.
+
+The row-grouping phase (``core.grouping``) produces a ``GroupPlan``; this
+module *compiles* that plan into a small number of cached, jitted per-group
+programs and runs the whole allocate → accumulate → reassemble flow without
+any per-row Python.  This is the OpSparse move (fuse setup/allocation into
+batched device passes) combined with Nagasaka-style per-bin kernel dispatch:
+each Table-I group becomes one statically-shaped program, dispatched at most
+``ceil(group_size / row_chunk)`` times.
+
+Three pluggable axes, each resolved per group:
+
+* **engine** — the allocation/accumulation pair.  ``"hash"`` is the paper's
+  Algorithm 2/3/5 linear-probing table (vmapped across rows); ``"sort"`` is
+  the TPU-vectorized sort + segment-sum engine.  Both are registered in
+  ``ENGINES`` behind one interface, so capacity policy and out-cap trimming
+  live here instead of being duplicated in ``spgemm()``.
+* **gather** — how rows of B are fetched for the two-level indirection
+  ``b_ell[cols_A]``.  ``"xla"`` is a plain ``jnp`` take; ``"aia"`` routes
+  through the scalar-prefetch Pallas kernels in ``kernels.aia_gather`` (the
+  paper's AIA ranged indirect access), auto-selecting compiled vs interpret
+  mode from the JAX backend.  ``"auto"`` picks ``"aia"`` on TPU and
+  ``"xla"`` elsewhere — the paper's software-only vs AIA ablation (Fig. 7)
+  is therefore a one-flag switch.
+* **schedule** — ``"grouped"`` (Table-I binning) vs ``"natural"`` (one
+  group, worst-case capacity; the "without AIA scheduling" baseline).
+
+Per group-chunk the executor runs three cached programs — *enumerate*
+(A-row gather → B-row gather → intermediate products; output stays on
+device), *allocate* (Algorithms 2/3: uniqueCount, one host sync to size the
+output), and *accumulate* (Algorithm 5 on the same device-resident keys).
+Programs live in a module-level cache keyed on every static quantity that
+shapes their trace: ``(padded_rows, a_cap, kb_cap, table_cap, out_cap,
+engine, gather, dtype)``.  ``a_cap``/``kb_cap`` stay exact (their product is
+the sort engine's dominant cost — rounding it up is superlinearly
+expensive) while ``out_cap`` is pow2-quantized and row chunks are padded to
+a fixed quantum, so iterative workloads (MCL expansion, GNN layers) hit the
+cache instead of re-tracing; ``cache_stats()`` exposes hit/miss counters
+for tests and benchmarks.
+
+CSR reassembly is a vectorized inverse-permutation scatter: per group-chunk
+output block, flat destination offsets are computed from the (host) indptr
+and written with one boolean-mask scatter — no ``out_cols[r]`` row loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable, Dict, List, Literal, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import phases
+from repro.core.grouping import GroupPlan
+from repro.sparse.formats import CSR, csr_to_ell
+
+Gather = Literal["auto", "xla", "aia"]
+Schedule = Literal["grouped", "natural"]
+
+# Rows per program dispatch are padded to a multiple of this so repeated
+# calls with slightly different group sizes reuse compiled programs.
+ROW_QUANTUM = 8
+
+
+def next_pow2(x: int) -> int:
+    return 1 << int(np.ceil(np.log2(max(int(x), 1))))
+
+
+# ---------------------------------------------------------------------------
+# Engine registry — hash and sort behind one interface
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Engine:
+    """One allocation/accumulation engine (paper phases 2 + 3).
+
+    ``allocate(keys, table_cap)`` → per-row uniqueCount (Algorithms 2/3).
+    ``accumulate(keys, vals, table_cap, out_cap)`` → (cols, vals, counts)
+    with rows column-sorted and trimmed/padded to ``out_cap`` (Algorithm 5).
+    """
+
+    name: str
+    allocate: Callable[[jax.Array, int], jax.Array]
+    accumulate: Callable[[jax.Array, jax.Array, int, int],
+                         Tuple[jax.Array, jax.Array, jax.Array]]
+
+
+ENGINES: Dict[str, Engine] = {}
+
+
+def register_engine(engine: Engine) -> Engine:
+    ENGINES[engine.name] = engine
+    return engine
+
+
+def get_engine(name: str) -> Engine:
+    try:
+        return ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; registered: {sorted(ENGINES)}"
+        ) from None
+
+
+def available_engines() -> Tuple[str, ...]:
+    return tuple(sorted(ENGINES))
+
+
+def _hash_accumulate(keys, vals, table_cap: int, out_cap: int):
+    cols, out_vals, counts = phases.accumulate_hash(keys, vals, table_cap)
+    # The table must hold up to ``table_cap`` probes, but uniqueCount never
+    # exceeds ``out_cap`` (≥ n_cols bound); trim to the sorted prefix.
+    return cols[:, :out_cap], out_vals[:, :out_cap], counts
+
+
+def _sort_accumulate(keys, vals, table_cap: int, out_cap: int):
+    return phases.accumulate_sort(keys, vals, out_cap)
+
+
+register_engine(Engine("hash", phases.allocate_hash, _hash_accumulate))
+register_engine(Engine("sort", lambda k, cap: phases.allocate_sort(k),
+                       _sort_accumulate))
+
+
+# ---------------------------------------------------------------------------
+# Gather backends — how b_ell[cols_A] is served
+# ---------------------------------------------------------------------------
+
+def resolve_gather(gather: Gather) -> str:
+    """``"auto"`` → AIA kernels on TPU, XLA take elsewhere (Fig. 7 switch).
+
+    Honors the ``REPRO_KERNEL_BACKEND`` override with the same semantics as
+    ``kernels.ops.resolve_backend``: ``xla`` forces the software-only take,
+    ``pallas``/``interpret`` force the AIA kernels.
+    """
+    if gather == "auto":
+        env = os.environ.get("REPRO_KERNEL_BACKEND")
+        if env == "xla":
+            return "xla"
+        if env in ("pallas", "interpret"):
+            return "aia"
+        return "aia" if jax.default_backend() == "tpu" else "xla"
+    if gather not in ("xla", "aia"):
+        raise ValueError(f"unknown gather backend {gather!r}")
+    return gather
+
+
+def _gather_b_xla(b_idx, b_val, cols_a):
+    safe = jnp.clip(cols_a, 0, b_idx.shape[0] - 1)
+    return b_idx[safe], b_val[safe]
+
+
+def _gather_b_aia(b_idx, b_val, cols_a):
+    """B-row gather as the paper's AIA stream (scalar-prefetch DMA kernel).
+
+    ``cols_a`` rows are flattened into one bulk index stream, gathered
+    near-memory, and reshaped back; the interpret/compiled choice follows
+    the JAX backend inside the kernel.
+    """
+    from repro.kernels.aia_gather import gather_rows_any
+
+    r, a_cap = cols_a.shape
+    kb = b_idx.shape[1]
+    flat = cols_a.reshape(-1)
+    bi = gather_rows_any(b_idx, flat)
+    bv = gather_rows_any(b_val, flat)
+    return bi.reshape(r, a_cap, kb), bv.reshape(r, a_cap, kb)
+
+
+GATHERS: Dict[str, Callable] = {"xla": _gather_b_xla, "aia": _gather_b_aia}
+
+
+# ---------------------------------------------------------------------------
+# Program cache — one jitted program per static-shape signature
+# ---------------------------------------------------------------------------
+
+_PROGRAM_CACHE: Dict[tuple, Callable] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def cache_stats() -> Dict[str, int]:
+    """Copy of the global program-cache hit/miss counters."""
+    return dict(_CACHE_STATS)
+
+
+def clear_program_cache() -> None:
+    _PROGRAM_CACHE.clear()
+    _CACHE_STATS["hits"] = 0
+    _CACHE_STATS["misses"] = 0
+
+
+def _build_enumerate(a_cap: int, gather: str) -> Callable:
+    """Compile the product-enumeration program: A-row gather → B-row gather
+    (xla or AIA stream) → intermediate products.  Output stays on device and
+    feeds both the allocation and accumulation programs — the gather runs
+    once per chunk, not once per phase."""
+    gat = GATHERS[gather]
+
+    @jax.jit
+    def program(a_indptr, a_indices, a_data, rows, b_idx, b_val):
+        cols_a, vals_a = phases.gather_group_rows(
+            a_indptr, a_indices, a_data, rows, a_cap
+        )
+        bi, bv = gat(b_idx, b_val, cols_a)
+        return phases.combine_products(cols_a, vals_a, bi, bv)
+
+    return program
+
+
+def _build_allocate(table_cap: int, engine: str) -> Callable:
+    eng = get_engine(engine)
+    return jax.jit(lambda keys: eng.allocate(keys, table_cap))
+
+
+def _build_accumulate(table_cap: int, out_cap: int, engine: str) -> Callable:
+    eng = get_engine(engine)
+    return jax.jit(
+        lambda keys, vals: eng.accumulate(keys, vals, table_cap, out_cap))
+
+
+_BUILDERS = {
+    "enumerate": _build_enumerate,
+    "allocate": _build_allocate,
+    "accumulate": _build_accumulate,
+}
+
+
+def _get_program(kind: str, key: tuple, *build_args) -> Callable:
+    cache_key = (kind,) + key
+    prog = _PROGRAM_CACHE.get(cache_key)
+    if prog is None:
+        _CACHE_STATS["misses"] += 1
+        prog = _BUILDERS[kind](*build_args)
+        _PROGRAM_CACHE[cache_key] = prog
+    else:
+        _CACHE_STATS["hits"] += 1
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# Plan execution
+# ---------------------------------------------------------------------------
+
+def ungrouped_plan(plan: GroupPlan) -> GroupPlan:
+    """Collapse to one natural-order group at worst-case capacity
+    (the Fig. 7 "without AIA scheduling" software baseline)."""
+    n = len(plan.map_rows)
+    cap = next_pow2(max(plan.max_ip, 2))
+    return GroupPlan(
+        map_rows=np.arange(n, dtype=np.int32),
+        group_id=np.zeros(n, np.int32),
+        group_offsets=np.asarray([0, n, n, n, n], np.int32),
+        group_sizes=(n, 0, 0, 0),
+        group_sizes_padded=(n, 0, 0, 0),
+        table_capacities=(cap, cap, cap, cap),
+        max_ip=plan.max_ip,
+        total_ip=plan.total_ip,
+    )
+
+
+def _pad_rows(k: int) -> int:
+    return int(np.ceil(k / ROW_QUANTUM) * ROW_QUANTUM)
+
+
+@dataclasses.dataclass
+class _ChunkOut:
+    rows: np.ndarray      # (R,) original row ids
+    cols: np.ndarray      # (R_pad, out_cap)
+    vals: np.ndarray      # (R_pad, out_cap)
+    counts: np.ndarray    # (R_pad,)
+
+
+def execute_plan(
+    a: CSR,
+    b: CSR,
+    plan: GroupPlan,
+    engine: str = "sort",
+    gather: Gather = "auto",
+    row_chunk: int = 4096,
+) -> Tuple[CSR, int]:
+    """Run the compiled group pipeline; returns (C, nnz_C).
+
+    One device dispatch per (group, chunk); counts sync back once per chunk
+    and the CSR is reassembled with vectorized scatters (no per-row Python).
+    """
+    gather = resolve_gather(gather)
+    get_engine(engine)  # validate early
+    n = a.n_rows
+    dtype = np.asarray(a.data).dtype
+    dt = np.dtype(dtype).str
+
+    # a_cap/kb_cap stay *exact*: ip_cap = a_cap·kb_cap is the sort engine's
+    # dominant dimension and rounding it up is superlinearly expensive.
+    # Cache keys still stabilize across iterations because iterative
+    # workloads (MCL at fixpoint, GNN layers) keep their sparsity structure.
+    kb_cap = int(np.asarray(b.row_nnz()).max(initial=0)) or 1
+    b_ell = csr_to_ell(b, kb_cap)
+    # uniqueCount per row is bounded by n_cols(B) regardless of IP.
+    ncol_cap = next_pow2(max(b.n_cols, 1))
+
+    a_indptr_np = np.asarray(a.indptr)
+    a_row_nnz = a_indptr_np[1:] - a_indptr_np[:-1]
+
+    chunks: List[_ChunkOut] = []
+    counts_all = np.zeros(n, np.int64)
+    for g in range(4):
+        rows = plan.rows_of_group(g)
+        if len(rows) == 0:
+            continue
+        a_cap = max(int(a_row_nnz[rows].max(initial=0)), 1)
+        table_cap = plan.table_capacities[g]
+        for lo in range(0, len(rows), row_chunk):
+            chunk = rows[lo: lo + row_chunk]
+            padded = _pad_rows(len(chunk))
+            rows_j = jnp.asarray(np.concatenate(
+                [chunk, -np.ones(padded - len(chunk), np.int32)]
+            ))
+            enum = _get_program("enumerate", (padded, a_cap, kb_cap, gather, dt),
+                                a_cap, gather)
+            keys, vals = enum(
+                a.indptr, a.indices, a.data, rows_j, b_ell.indices, b_ell.data
+            )
+            ip_cap = keys.shape[1]
+            # ---- Allocation (Algorithms 2/3): size the output rows ----
+            alloc = _get_program("allocate", (padded, ip_cap, table_cap, engine),
+                                 table_cap, engine)
+            max_unique = int(np.asarray(alloc(keys)).max(initial=0))
+            # pow2 quantization keeps the accumulate signature stable across
+            # iterative calls (MCL/GNN) while tracking actual occupancy.
+            out_cap = max(min(next_pow2(max_unique),
+                              max(table_cap, 1), ncol_cap), 1)
+            # ---- Accumulation (Algorithm 5) on the same device arrays ----
+            accum = _get_program(
+                "accumulate", (padded, ip_cap, table_cap, out_cap, engine, dt),
+                table_cap, out_cap, engine)
+            cols_r, vals_r, counts_r = accum(keys, vals)
+            out = _ChunkOut(
+                rows=np.asarray(chunk),
+                cols=np.asarray(cols_r),
+                vals=np.asarray(vals_r),
+                counts=np.asarray(counts_r),
+            )
+            counts_all[out.rows] = out.counts[: len(chunk)]
+            chunks.append(out)
+
+    # ---- Vectorized CSR reassembly (inverse-permutation scatter) ----
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts_all, out=indptr[1:])
+    nnz = int(indptr[-1])
+    cap = max(nnz, 1)
+    indices = np.zeros(cap, np.int32)
+    data = np.zeros(cap, dtype)
+    for ck in chunks:
+        r = len(ck.rows)
+        out_cap = ck.cols.shape[1]
+        starts = indptr[ck.rows]  # (R,)
+        offs = np.arange(out_cap, dtype=np.int64)[None, :]
+        pos = starts[:, None] + offs  # (R, out_cap)
+        ok = offs < ck.counts[: r, None]
+        indices[pos[ok]] = ck.cols[:r][ok]
+        data[pos[ok]] = ck.vals[:r][ok]
+
+    c = CSR(
+        jnp.asarray(indptr.astype(np.int32)),
+        jnp.asarray(indices),
+        jnp.asarray(data),
+        (a.n_rows, b.n_cols),
+    )
+    return c, nnz

@@ -30,8 +30,25 @@ INT_MAX = jnp.int32(2**31 - 1)
 # Intermediate-product enumeration (the two-level indirection itself)
 # ---------------------------------------------------------------------------
 
+def combine_products(cols_a, vals_a, bi, bv):
+    """Form intermediate products from already-gathered B rows.
+
+    cols_a, vals_a: (R, a_cap) padded with -1 / 0 — the rows' A entries.
+    bi, bv:         (R, a_cap, kb) the gathered B rows ``b_idx[cols_a]`` /
+                    ``b_val[cols_a]`` (any gather backend; padding rows may
+                    hold garbage — they are masked by ``cols_a < 0``).
+    Returns keys (R, a_cap*kb) int32 (-1 padded) and vals (same shape).
+    """
+    r, a_cap = cols_a.shape
+    kb = bi.shape[2]
+    valid = (cols_a >= 0)[:, :, None] & (bi >= 0)
+    keys = jnp.where(valid, bi, -1).reshape(r, a_cap * kb)
+    vals = jnp.where(valid, vals_a[:, :, None] * bv, 0).reshape(r, a_cap * kb)
+    return keys, vals
+
+
 def enumerate_products(cols_a, vals_a, b_idx, b_val):
-    """Per-row intermediate products.
+    """Per-row intermediate products (XLA-gather variant).
 
     cols_a, vals_a: (R, a_cap) padded with -1 / 0 — the rows' A entries.
     b_idx, b_val:  (nB, kb_cap) ELL of B.
@@ -39,17 +56,13 @@ def enumerate_products(cols_a, vals_a, b_idx, b_val):
 
     ``b_idx[cols_a]`` is exactly the AIA ranged indirect access
     (``rpt_B[col_A[j]]`` → row of B); here expressed as an XLA gather, in
-    ``repro.kernels.aia_gather`` as a scalar-prefetch DMA stream.
+    ``repro.kernels.aia_gather`` as a scalar-prefetch DMA stream (selected
+    via the executor's ``gather=`` knob).
     """
-    r, a_cap = cols_a.shape
-    kb = b_idx.shape[1]
     safe = jnp.clip(cols_a, 0, b_idx.shape[0] - 1)
     bi = b_idx[safe]  # (R, a_cap, kb)
     bv = b_val[safe]
-    valid = (cols_a >= 0)[:, :, None] & (bi >= 0)
-    keys = jnp.where(valid, bi, -1).reshape(r, a_cap * kb)
-    vals = jnp.where(valid, vals_a[:, :, None] * bv, 0).reshape(r, a_cap * kb)
-    return keys, vals
+    return combine_products(cols_a, vals_a, bi, bv)
 
 
 def gather_group_rows(indptr, indices, data, rows, a_cap):
@@ -99,8 +112,13 @@ def accumulate_hash(keys, vals, table_cap: int):
 # Sort engine (vectorized; identical outputs)
 # ---------------------------------------------------------------------------
 
-def _sort_unique(keys, vals, out_cap):
-    """Per-batch sort + segment-sum + compaction.  keys: (R, ip_cap)."""
+def sort_unique(keys, vals, out_cap):
+    """Per-batch sort + segment-sum + compaction.  keys: (R, ip_cap).
+
+    Public API of the sort engine (used by the executor registry and the
+    fully-jitted ``spgemm_ell_fixed``); returns (cols, vals, counts) with
+    column-sorted rows padded to ``out_cap``.
+    """
     r, ip_cap = keys.shape
     skey = jnp.where(keys >= 0, keys, INT_MAX)
     order = jnp.argsort(skey, axis=1, stable=True)
@@ -139,4 +157,4 @@ def allocate_sort(keys):
 
 @functools.partial(jax.jit, static_argnames=("out_cap",))
 def accumulate_sort(keys, vals, out_cap: int):
-    return _sort_unique(keys, vals, out_cap)
+    return sort_unique(keys, vals, out_cap)

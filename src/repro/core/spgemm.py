@@ -1,15 +1,17 @@
 """Public SpGEMM API — the paper's three-phase pipeline end-to-end.
 
-``spgemm(A, B)`` reproduces the paper's flow exactly:
+``spgemm(A, B)`` reproduces the paper's flow:
 
   1. **Row-grouping** (host sync, like the paper's stream setup): Algorithm 1
      IP counts → Table-I groups → ``Map``.
-  2. **Allocation** per group: unique-column counts → ``rpt_C``.
-  3. **Accumulation** per group: hash/sort accumulate → gather → column sort.
+  2. **Allocation + accumulation** per group, compiled and dispatched by the
+     plan executor (``repro.core.executor``): cached jitted programs, one per
+     (group shape, engine, gather backend) signature.
+  3. **Reassembly** into one CSR in original row order via vectorized
+     inverse-permutation scatters.
 
-Groups are processed with group-specific static shapes (the TPU analogue of
-PWPR/TBPR + per-group hash capacities), then reassembled into one CSR in
-original row order.
+This module is a thin façade: engine registration, capacity policy, gather
+backends, the program cache, and reassembly all live in the executor.
 
 ``spgemm_ell_fixed`` is the fully-jitted single-group variant (no host
 syncs) for use inside ``scan``/training graphs (MCL iterations, GNN layers).
@@ -17,16 +19,14 @@ syncs) for use inside ``scan``/training graphs (MCL iterations, GNN layers).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Literal
+from typing import Dict, Literal, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import phases
+from repro.core import executor, phases
 from repro.core.grouping import GroupPlan, group_rows
-from repro.core.ip_count import intermediate_products
-from repro.sparse.formats import CSR, ELL, csr_to_ell
+from repro.sparse.formats import CSR, ELL
 
 
 @dataclasses.dataclass
@@ -36,115 +36,42 @@ class SpGEMMResult:
     info: Dict[str, float]
 
 
-def _next_pow2(x: int) -> int:
-    return 1 << int(np.ceil(np.log2(max(int(x), 1))))
-
-
 def spgemm(
     a: CSR,
     b: CSR,
-    method: Literal["hash", "sort"] = "sort",
+    method: Optional[Literal["hash", "sort"]] = None,
     row_chunk: int = 4096,
     schedule: Literal["grouped", "natural"] = "grouped",
+    engine: Optional[str] = None,
+    gather: executor.Gather = "auto",
 ) -> SpGEMMResult:
-    """C = A @ B via the paper's multi-phase pipeline (host-orchestrated).
+    """C = A @ B via the paper's multi-phase pipeline (plan-compiled).
 
+    ``engine`` selects the allocation/accumulation engine from the executor
+    registry (``"hash"`` or ``"sort"``; ``method`` is the legacy alias).
+    ``gather`` selects how B rows are served: ``"xla"`` (software-only
+    baseline), ``"aia"`` (scalar-prefetch Pallas kernels), or ``"auto"``
+    (AIA on TPU) — the paper's Fig. 7 ablation axis.
     ``schedule="natural"`` disables the Table-I row grouping (every row
     processed at the global worst-case capacity, natural order) — the
-    "without AIA scheduling" software baseline of Fig. 7.
+    "without AIA scheduling" software baseline.
     """
     assert a.n_cols == b.n_rows, (a.shape, b.shape)
+    if engine is None:
+        engine = method or "sort"
+    elif method is not None and method != engine:
+        raise ValueError(
+            f"conflicting method={method!r} (legacy alias) and engine={engine!r}")
     # ---- Phase 1: row grouping (one host sync, as in the paper) ----
     plan = group_rows(a, b)
     if schedule == "natural":
-        plan = _ungrouped_plan(plan)
-    kb_cap = int(np.asarray(b.row_nnz()).max(initial=0)) or 1
-    b_ell = csr_to_ell(b, kb_cap)
-
-    a_indptr = np.asarray(a.indptr)
-    a_row_nnz = a_indptr[1:] - a_indptr[:-1]
-
-    n = a.n_rows
-    out_cols_np = [None] * n
-    out_vals_np = [None] * n
-    counts_np = np.zeros(n, np.int64)
-
-    for g in range(4):
-        rows = plan.rows_of_group(g)
-        if len(rows) == 0:
-            continue
-        a_cap = max(int(a_row_nnz[rows].max(initial=0)), 1)
-        table_cap = plan.table_capacities[g]
-        for lo in range(0, len(rows), row_chunk):
-            chunk = rows[lo: lo + row_chunk]
-            pad = -np.ones(_pad_len(len(chunk)) - len(chunk), np.int32)
-            rows_j = jnp.asarray(np.concatenate([chunk, pad]))
-            cols_a, vals_a = phases.gather_group_rows(
-                a.indptr, a.indices, a.data, rows_j, a_cap
-            )
-            keys, vals = phases.enumerate_products(
-                cols_a, vals_a, b_ell.indices, b_ell.data
-            )
-            # ---- Phase 2: allocation ----
-            if method == "hash":
-                counts = phases.allocate_hash(keys, table_cap)
-            else:
-                counts = phases.allocate_sort(keys)
-            max_unique = int(np.asarray(counts).max(initial=0))
-            out_cap = min(_next_pow2(max_unique), max(table_cap, 1))
-            out_cap = max(out_cap, 1)
-            # ---- Phase 3: accumulation ----
-            if method == "hash":
-                cols_r, vals_r, counts_r = phases.accumulate_hash(keys, vals, table_cap)
-                # hash table capacity may exceed out_cap; trim to sorted prefix
-                cols_r, vals_r = cols_r[:, :out_cap], vals_r[:, :out_cap]
-            else:
-                cols_r, vals_r, counts_r = phases.accumulate_sort(keys, vals, out_cap)
-            cols_r = np.asarray(cols_r)
-            vals_r = np.asarray(vals_r)
-            counts_r = np.asarray(counts_r)
-            for i, r in enumerate(chunk):
-                c = int(counts_r[i])
-                out_cols_np[r] = cols_r[i, :c]
-                out_vals_np[r] = vals_r[i, :c]
-                counts_np[r] = c
-
-    # ---- Reassemble C in original row order ----
-    nnz = int(counts_np.sum())
-    indptr = np.zeros(n + 1, np.int32)
-    indptr[1:] = np.cumsum(counts_np)
-    cap = max(nnz, 1)
-    indices = np.zeros(cap, np.int32)
-    data = np.zeros(cap, np.asarray(a.data).dtype)
-    for r in range(n):
-        if counts_np[r]:
-            s = indptr[r]
-            indices[s: s + counts_np[r]] = out_cols_np[r]
-            data[s: s + counts_np[r]] = out_vals_np[r]
-    c = CSR(jnp.asarray(indptr), jnp.asarray(indices), jnp.asarray(data),
-            (a.n_rows, b.n_cols))
+        plan = executor.ungrouped_plan(plan)
+    # ---- Phases 2+3: compiled group pipeline + vectorized reassembly ----
+    c, nnz = executor.execute_plan(
+        a, b, plan, engine=engine, gather=gather, row_chunk=row_chunk
+    )
     info = spgemm_info(a, b, plan, nnz)
     return SpGEMMResult(c=c, plan=plan, info=info)
-
-
-def _pad_len(k: int, quantum: int = 8) -> int:
-    return int(np.ceil(k / quantum) * quantum)
-
-
-def _ungrouped_plan(plan: GroupPlan) -> GroupPlan:
-    """Collapse to one natural-order group at worst-case capacity."""
-    n = len(plan.map_rows)
-    cap = _next_pow2(max(plan.max_ip, 2))
-    return GroupPlan(
-        map_rows=np.arange(n, dtype=np.int32),
-        group_id=np.zeros(n, np.int32),
-        group_offsets=np.asarray([0, n, n, n, n], np.int32),
-        group_sizes=(n, 0, 0, 0),
-        group_sizes_padded=(n, 0, 0, 0),
-        table_capacities=(cap, cap, cap, cap),
-        max_ip=plan.max_ip,
-        total_ip=plan.total_ip,
-    )
 
 
 def spgemm_info(a: CSR, b: CSR, plan: GroupPlan, nnz_c: int) -> Dict[str, float]:
@@ -166,15 +93,17 @@ def spgemm_info(a: CSR, b: CSR, plan: GroupPlan, nnz_c: int) -> Dict[str, float]
 # Fully-jitted fixed-capacity variant (for scan/training graphs)
 # ---------------------------------------------------------------------------
 
-def spgemm_ell_fixed(a: ELL, b: ELL, out_cap: int) -> ELL:
-    """C = A @ B entirely in-graph: single group, sort engine, static caps.
+def spgemm_ell_fixed(a: ELL, b: ELL, out_cap: int, engine: str = "sort") -> ELL:
+    """C = A @ B entirely in-graph: single group, static caps.
 
     Row capacity of C is ``out_cap`` (entries beyond it are dropped — size it
     from Algorithm-1 IP bounds).  Suitable inside ``lax.scan`` (MCL) and
-    model forward passes.
+    model forward passes.  The engine is resolved through the executor
+    registry; both registered engines are jit/scan-compatible.
     """
     keys, vals = phases.enumerate_products(
         jnp.asarray(a.indices), jnp.asarray(a.data), b.indices, b.data
     )
-    cols, out_vals, _ = phases._sort_unique(keys, vals, out_cap)
+    eng = executor.get_engine(engine)
+    cols, out_vals, _ = eng.accumulate(keys, vals, out_cap, out_cap)
     return ELL(cols, out_vals, (a.shape[0], b.shape[1]))

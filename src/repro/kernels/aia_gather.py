@@ -22,6 +22,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -31,14 +32,26 @@ def _copy_kernel(idx_ref, x_ref, o_ref):
     o_ref[...] = x_ref[...]
 
 
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """Backend auto-detection via ``kernels.ops.resolve_backend`` (one
+    policy, including the ``REPRO_KERNEL_BACKEND`` override): compiled
+    Pallas only when it resolves to "pallas"; any other resolution runs
+    interpret mode (this module has no jnp fallback of its own)."""
+    if interpret is not None:
+        return interpret
+    from repro.kernels.ops import resolve_backend  # lazy: ops imports us
+    return resolve_backend("auto") != "pallas"
+
+
 @functools.partial(jax.jit, static_argnames=("r", "interpret"))
 def aia_ranged_gather(x: jax.Array, idx: jax.Array, r: int = 1,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """out[i·R:(i+1)·R, :] = x[idx[i]·R : idx[i]·R+R, :].
 
     x:   (n_blocks·R, d) data array (HBM).
     idx: (N,) int32 block indices (the paper's ``b``; prefetched to SMEM).
     """
+    interpret = _resolve_interpret(interpret)
     n = idx.shape[0]
     d = x.shape[1]
     return pl.pallas_call(
@@ -60,7 +73,7 @@ def _copy_kernel_2d(idx_ref, x_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("rows_per_block", "interpret"))
 def gather_rows(x: jax.Array, idx: jax.Array, rows_per_block: int = 8,
-                interpret: bool = True) -> jax.Array:
+                interpret: bool | None = None) -> jax.Array:
     """out[i] = x[idx[i]] with idx grouped ``rows_per_block`` at a time.
 
     Each grid step DMAs ``rows_per_block`` independent rows (one descriptor
@@ -68,6 +81,7 @@ def gather_rows(x: jax.Array, idx: jax.Array, rows_per_block: int = 8,
     idx length must be a multiple of rows_per_block (callers pad with any
     valid row id).
     """
+    interpret = _resolve_interpret(interpret)
     n = idx.shape[0]
     d = x.shape[1]
     assert n % rows_per_block == 0, (n, rows_per_block)
@@ -98,3 +112,20 @@ def gather_rows(x: jax.Array, idx: jax.Array, rows_per_block: int = 8,
         out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
         interpret=interpret,
     )(idx, x)
+
+
+def gather_rows_any(x: jax.Array, idx: jax.Array, rows_per_block: int = 8,
+                    interpret: bool | None = None) -> jax.Array:
+    """``x[idx]`` for arbitrary-length ``idx``: clips out-of-range ids, pads
+    the stream to the kernel's block multiple, gathers, and trims back.
+
+    The convenience wrapper shared by the SpGEMM executor's ``gather="aia"``
+    backend and ``sparse.ops.csr_spmm`` — keeps the pad/clip/trim arithmetic
+    in one place next to the kernel it feeds.
+    """
+    n = idx.shape[0]
+    n_pad = int(np.ceil(n / rows_per_block) * rows_per_block)
+    idx = jnp.clip(idx, 0, x.shape[0] - 1).astype(jnp.int32)
+    if n_pad > n:
+        idx = jnp.concatenate([idx, jnp.zeros(n_pad - n, jnp.int32)])
+    return gather_rows(x, idx, rows_per_block, interpret=interpret)[:n]

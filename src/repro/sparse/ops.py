@@ -8,6 +8,8 @@ their inputs so they compose under ``jit``/``scan``.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -16,6 +18,34 @@ from repro.sparse.formats import CSR
 
 def csr_row_nnz(a: CSR) -> jax.Array:
     return a.row_nnz()
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _take_rows(x: jax.Array, idx: jax.Array, gather: str = "xla") -> jax.Array:
+    """rows_of_x = x[idx] with a pluggable gather backend.
+
+    ``gather="aia"`` serves the indirection through the scalar-prefetch
+    Pallas kernels (``kernels.aia_gather``, backend auto-detected); the
+    backward pass is always an XLA scatter-add, so the op stays
+    differentiable either way (Pallas kernels have no AD rules).
+    """
+    if gather == "aia":
+        from repro.kernels.aia_gather import gather_rows_any
+        return gather_rows_any(x, idx)
+    return jnp.take(x, idx, axis=0, mode="clip")
+
+
+def _take_rows_fwd(x, idx, gather):
+    return _take_rows(x, idx, gather), (idx, x.shape[0])
+
+
+def _take_rows_bwd(gather, res, ct):
+    idx, n = res
+    safe = jnp.clip(idx, 0, n - 1)
+    return jnp.zeros((n, ct.shape[1]), ct.dtype).at[safe].add(ct), None
+
+
+_take_rows.defvjp(_take_rows_fwd, _take_rows_bwd)
 
 
 def csr_transpose(a: CSR, capacity: int | None = None) -> CSR:
@@ -53,16 +83,19 @@ def csr_spmv(a: CSR, x: jax.Array) -> jax.Array:
     return jnp.zeros(a.n_rows + 1, contrib.dtype).at[rid].add(contrib)[: a.n_rows]
 
 
-def csr_spmm(a: CSR, x: jax.Array) -> jax.Array:
+def csr_spmm(a: CSR, x: jax.Array, gather: str = "xla") -> jax.Array:
     """Y = A @ X for dense X (n_cols, d): the GNN aggregation primitive.
 
     This is the *two-level indirect access* the paper targets: ``indices``
     selects rows of ``X`` (ranged access of length d), results are
-    segment-summed by row.  The AIA-kernel version lives in
-    ``repro.kernels.aia_gather``.
+    segment-summed by row.  ``gather="aia"`` serves that gather with the
+    scalar-prefetch Pallas kernels (Fig. 7 ablation); ``"auto"`` picks AIA
+    on TPU and XLA elsewhere.
     """
+    from repro.core.executor import resolve_gather  # lazy: avoids pkg cycle
+    gather = resolve_gather(gather)  # validates + honors REPRO_KERNEL_BACKEND
     valid = a.valid_mask()
-    rows_of_x = jnp.take(x, a.indices, axis=0, mode="clip")  # (cap, d)
+    rows_of_x = _take_rows(x, a.indices, gather)  # (cap, d)
     contrib = jnp.where(valid[:, None], a.data[:, None] * rows_of_x, 0)
     rid = a.row_ids()
     out = jnp.zeros((a.n_rows + 1, x.shape[1]), contrib.dtype).at[rid].add(contrib)

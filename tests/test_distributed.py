@@ -6,7 +6,15 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
+
+# The sharded-training substrate uses jax.set_mesh (jax >= 0.5); on older
+# jax the tests exercising it fail on import, not on the logic under test.
+needs_set_mesh = pytest.mark.skipif(
+    not hasattr(jax, "set_mesh"),
+    reason="jax.set_mesh not available in this jax version",
+)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -22,6 +30,7 @@ def run_py(body: str, n_devices: int = 8, timeout: int = 900):
     return proc.stdout
 
 
+@needs_set_mesh
 def test_sharded_train_step_matches_single_device():
     """Same params+batch: loss on a (2,2) data×model mesh == 1-device loss."""
     run_py("""
@@ -132,6 +141,7 @@ def test_pipeline_parallel_shard_map():
     """)
 
 
+@needs_set_mesh
 def test_dryrun_single_cell_multipod():
     """The real contract: one cell lowered+compiled on BOTH production meshes
     (512 host devices).  Uses the smallest arch × decode shape for speed."""
@@ -153,6 +163,7 @@ def test_dryrun_single_cell_multipod():
     assert out.count("CELL OK") == 2
 
 
+@needs_set_mesh
 def test_moe_shard_map_matches_gspmd():
     """The §Perf EP rewrite must be numerically identical to the baseline."""
     run_py("""

@@ -1,0 +1,174 @@
+"""Plan-compiled executor: engine×gather×schedule equivalence + caching.
+
+The acceptance bar: every engine/gather combination produces *bit-identical*
+CSR output to the dense oracle (test data is integer-valued so accumulation
+order cannot introduce float noise), edge cases included, and repeated
+MCL-style iterations reuse compiled programs instead of re-tracing.
+"""
+import numpy as np
+import pytest
+
+from repro.core import executor
+from repro.core.grouping import group_rows
+from repro.core.ref import spgemm_dense
+from repro.core.spgemm import spgemm, spgemm_ell_fixed
+from repro.sparse.formats import (
+    csr_from_dense, csr_to_dense, ell_from_dense, ell_to_dense,
+)
+
+ENGINES = ("sort", "hash")
+GATHERS = ("xla", "aia")
+SCHEDULES = ("grouped", "natural")
+
+
+def int_sparse(rng, n, m, density=0.3):
+    """Integer-valued float32 matrix: exact under any accumulation order."""
+    x = rng.integers(-4, 5, (n, m)).astype(np.float32)
+    mask = rng.random((n, m)) < density
+    return np.where(mask, x, 0.0).astype(np.float32)
+
+
+def _dense(c):
+    return np.asarray(csr_to_dense(c))
+
+
+# ---------------------------------------------------------------------------
+# Engine registry
+# ---------------------------------------------------------------------------
+
+def test_registry_contents_and_unknown_engine():
+    assert set(executor.available_engines()) >= {"hash", "sort"}
+    assert executor.get_engine("sort").name == "sort"
+    with pytest.raises(ValueError, match="unknown engine"):
+        executor.get_engine("nope")
+    with pytest.raises(ValueError, match="unknown gather"):
+        executor.resolve_gather("nope")
+
+
+def test_resolve_gather_auto_is_backend_dependent(monkeypatch):
+    import jax
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+    expect = "aia" if jax.default_backend() == "tpu" else "xla"
+    assert executor.resolve_gather("auto") == expect
+    assert executor.resolve_gather("xla") == "xla"
+    assert executor.resolve_gather("aia") == "aia"
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "xla")
+    assert executor.resolve_gather("auto") == "xla"
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    assert executor.resolve_gather("auto") == "aia"
+
+
+# ---------------------------------------------------------------------------
+# Equivalence grid vs dense oracle (bit-identical on integer-valued data)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("gather", GATHERS)
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_engine_gather_schedule_grid_matches_oracle(engine, gather, schedule):
+    rng = np.random.default_rng(7)
+    a = csr_from_dense(int_sparse(rng, 18, 14, 0.25))
+    b = csr_from_dense(int_sparse(rng, 14, 16, 0.35))
+    res = spgemm(a, b, engine=engine, gather=gather, schedule=schedule)
+    np.testing.assert_array_equal(_dense(res.c), np.asarray(spgemm_dense(a, b)))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("gather", GATHERS)
+def test_empty_matrix(engine, gather):
+    rng = np.random.default_rng(0)
+    a = csr_from_dense(np.zeros((6, 5), np.float32))
+    b = csr_from_dense(int_sparse(rng, 5, 4, 0.5))
+    res = spgemm(a, b, engine=engine, gather=gather)
+    assert res.info["nnz_c"] == 0
+    np.testing.assert_array_equal(_dense(res.c), np.zeros((6, 4), np.float32))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_all_zero_rows_interleaved(engine):
+    """Rows with nnz=0 interleave with dense rows; reassembly must not
+    misplace offsets around the empty rows."""
+    rng = np.random.default_rng(3)
+    x = int_sparse(rng, 12, 10, 0.6)
+    x[::2] = 0.0  # every other row empty
+    a = csr_from_dense(x)
+    b = csr_from_dense(int_sparse(rng, 10, 9, 0.4))
+    res = spgemm(a, b, engine=engine)
+    np.testing.assert_array_equal(_dense(res.c), np.asarray(spgemm_dense(a, b)))
+
+
+def test_group3_row_sort_engine():
+    """A row with IP >= 8192 lands in Table-I group 3 (global-table bin)."""
+    rng = np.random.default_rng(11)
+    # row 0 of A: 128 nnz; every B row: 64 nnz -> IP(row 0) = 128*64 = 8192
+    xa = np.zeros((4, 128), np.float32)
+    xa[0] = rng.integers(1, 4, 128).astype(np.float32)
+    xa[1, :3] = 1.0
+    xb = np.zeros((128, 256), np.float32)
+    for i in range(128):
+        cols = rng.choice(256, 64, replace=False)
+        xb[i, cols] = rng.integers(1, 4, 64).astype(np.float32)
+    a, b = csr_from_dense(xa), csr_from_dense(xb)
+    plan = group_rows(a, b)
+    assert plan.group_sizes[3] >= 1  # the heavy row really is in group 3
+    res = spgemm(a, b, engine="sort")
+    np.testing.assert_array_equal(_dense(res.c), np.asarray(spgemm_dense(a, b)))
+
+
+def test_row_chunking_matches_unchunked():
+    rng = np.random.default_rng(5)
+    a = csr_from_dense(int_sparse(rng, 40, 30, 0.2))
+    b = csr_from_dense(int_sparse(rng, 30, 25, 0.2))
+    big = spgemm(a, b, engine="sort")
+    small = spgemm(a, b, engine="sort", row_chunk=8)
+    np.testing.assert_array_equal(_dense(big.c), _dense(small.c))
+    np.testing.assert_array_equal(
+        np.asarray(big.c.indptr), np.asarray(small.c.indptr))
+
+
+# ---------------------------------------------------------------------------
+# Program cache: MCL-style iterations must not re-trace
+# ---------------------------------------------------------------------------
+
+def test_compile_cache_hit_across_mcl_iterations():
+    rng = np.random.default_rng(9)
+    pattern = rng.random((20, 20)) < 0.25
+    x1 = np.where(pattern, rng.integers(1, 5, (20, 20)), 0).astype(np.float32)
+    # iteration 2: same sparsity structure, different values (a converged
+    # MCL expansion keeps the support, the executor must reuse programs)
+    x2 = np.where(pattern, rng.integers(1, 5, (20, 20)), 0).astype(np.float32)
+    executor.clear_program_cache()
+    spgemm(csr_from_dense(x1), csr_from_dense(x1), engine="sort")
+    after_first = executor.cache_stats()
+    assert after_first["misses"] > 0
+    spgemm(csr_from_dense(x2), csr_from_dense(x2), engine="sort")
+    after_second = executor.cache_stats()
+    assert after_second["misses"] == after_first["misses"], (
+        "second MCL iteration re-traced group programs")
+    assert after_second["hits"] > after_first["hits"]
+
+
+def test_cache_keys_engine_and_gather_disjoint():
+    rng = np.random.default_rng(13)
+    a = csr_from_dense(int_sparse(rng, 10, 10, 0.3))
+    executor.clear_program_cache()
+    spgemm(a, a, engine="sort", gather="xla")
+    m1 = executor.cache_stats()["misses"]
+    spgemm(a, a, engine="hash", gather="xla")
+    m2 = executor.cache_stats()["misses"]
+    spgemm(a, a, engine="sort", gather="aia")
+    m3 = executor.cache_stats()["misses"]
+    assert m1 < m2 < m3  # each axis value compiles its own programs
+
+
+# ---------------------------------------------------------------------------
+# spgemm_ell_fixed rides the public engine API
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_ell_fixed_through_engine_registry(engine):
+    rng = np.random.default_rng(4)
+    x = int_sparse(rng, 12, 12, 0.25)
+    e = ell_from_dense(x, k_cap=8)
+    c = spgemm_ell_fixed(e, e, out_cap=12, engine=engine)
+    np.testing.assert_array_equal(np.asarray(ell_to_dense(c)), x @ x)

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.models.rwkv6 import rwkv6_init, rwkv6_time_mix, _wkv_chunk, _wkv_chunked
 

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.sparse import (
     CSR, csr_from_dense, csr_to_dense, ell_from_dense, ell_to_dense,
