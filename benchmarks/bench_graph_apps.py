@@ -14,9 +14,7 @@ import numpy as np
 from repro.apps.graph_contraction import graph_contraction, label_matrix
 from repro.apps.graphs import table_ii_matrix
 from repro.apps.markov_clustering import mcl
-from repro.core.spgemm import spgemm
 from repro.sparse.formats import csr_to_dense
-from repro.sparse.ops import csr_transpose
 
 
 def _wall(f, reps=1):
@@ -29,16 +27,16 @@ def _wall(f, reps=1):
 def bench_contraction(names=("RoadTX", "web-Google", "Economics", "amazon0601",
                              "WindTunnel", "Protein"),
                       n_override=None, engine="sort",
-                      gather="auto") -> List[Dict]:
+                      gather="auto", mesh=None) -> List[Dict]:
     rows = []
     rng = np.random.default_rng(0)
     for name in names:
         g = table_ii_matrix(name, n_override=n_override)
         labels = rng.integers(0, max(g.n_rows // 64, 2), g.n_rows)
         t_sp, (c, infos) = _wall(
-            lambda: graph_contraction(g, labels, engine, gather=gather))
+            lambda: graph_contraction(g, labels, engine, gather=gather,
+                                      mesh=mesh))
         # dense baseline: S G S^T with dense matmuls
-        import jax.numpy as jnp
         s = csr_to_dense(label_matrix(labels, n=g.n_rows))
         gd = csr_to_dense(g)
         t_dense, _ = _wall(lambda: ((s @ gd) @ s.T).block_until_ready())
@@ -53,12 +51,13 @@ def bench_contraction(names=("RoadTX", "web-Google", "Economics", "amazon0601",
 
 def bench_mcl(names=("web-Google", "Economics", "Protein"),
               max_iters=3, n_override=None, engine="sort",
-              gather="auto") -> List[Dict]:
+              gather="auto", mesh=None) -> List[Dict]:
     rows = []
     for name in names:
         g = table_ii_matrix(name, n_override=n_override)
         t_sp, res = _wall(lambda: mcl(g, e=2, max_iters=max_iters, tol=0.0,
-                                      method=engine, gather=gather))
+                                      method=engine, gather=gather,
+                                      mesh=mesh))
         # dense baseline: same loop with dense matmul expansion
         import jax.numpy as jnp
         from repro.apps.markov_clustering import add_self_loops

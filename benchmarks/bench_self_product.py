@@ -12,7 +12,6 @@ import time
 from typing import Dict, List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.apps.graphs import TABLE_II_SCALED, table_ii_matrix
@@ -31,11 +30,12 @@ def _time(f, reps=3):
 
 
 def run(names=None, n_override: int | None = None,
-        methods=("sort", "hash"), gathers=("xla",)) -> List[Dict]:
+        methods=("sort", "hash"), gathers=("xla",), mesh=None) -> List[Dict]:
     """Per workload: dense baseline + engine×gather grid through the
     plan-compiled executor.  The first gather in ``gathers`` fills the
     legacy ``{m}_ms`` keys; additional gathers add ``{m}_{g}_ms`` columns
-    (the Fig. 7 software-only vs AIA ablation axis)."""
+    (the Fig. 7 software-only vs AIA ablation axis).  ``mesh`` routes every
+    SpGEMM through the sharded multi-device executor."""
     rows = []
     names = names or list(TABLE_II_SCALED)
     for name in names:
@@ -56,20 +56,22 @@ def run(names=None, n_override: int | None = None,
         }
         for m in methods:
             for gi, g in enumerate(gathers):
-                t = _time(lambda m=m, g=g: spgemm(a, a, engine=m, gather=g),
+                t = _time(lambda m=m, g=g: spgemm(a, a, engine=m, gather=g,
+                                                  mesh=mesh),
                           reps=1)
                 prefix = m if gi == 0 else f"{m}_{g}"
                 rec[f"{prefix}_ms"] = t * 1e3
                 rec[f"{prefix}_gflops"] = flops / t / 1e9
                 rec[f"{prefix}_vs_dense_reduction_pct"] = 100 * (1 - t / t_dense)
-            res = spgemm(a, a, engine=m, gather=gathers[0])
+            res = spgemm(a, a, engine=m, gather=gathers[0], mesh=mesh)
             rec["nnz_c"] = res.info["nnz_c"]
             rec["compression"] = res.info["compression_ratio"]
         # Fig. 7-style "AIA scheduling vs software-only": Table-I grouped
         # schedule vs ungrouped natural order (worst-case capacities), same
         # engine both sides so the ablation isolates scheduling alone
         t_nat = _time(lambda: spgemm(a, a, engine=methods[0],
-                                     gather=gathers[0], schedule="natural"),
+                                     gather=gathers[0], schedule="natural",
+                                     mesh=mesh),
                       reps=1)
         rec["natural_ms"] = t_nat * 1e3
         rec["group_sched_reduction_pct"] = 100 * (

@@ -1,0 +1,76 @@
+"""Benchmark regression gate for the bench-smoke CI job.
+
+Compares a fresh ``benchmarks/run.py --ci --json`` output against the
+committed baseline and fails (exit 1) if any wall-time record regressed by
+more than ``--max-ratio`` (default 2x — generous enough for runner noise,
+tight enough to catch re-tracing / cache-key regressions, which are
+order-of-magnitude events).
+
+Usage:
+    python benchmarks/check_regression.py BENCH_ci.json \
+        benchmarks/BENCH_baseline.json --max-ratio 2.0
+
+Records with ``us == 0`` (pure-counter rows) and records missing from
+either side are skipped — new benchmarks don't need a baseline update to
+land, but renaming one silently drops its gate, so keep names stable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_records(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: r for r in doc.get("records", [])}
+
+
+def compare(current: dict, baseline: dict, max_ratio: float) -> list:
+    """Returns the list of (name, cur_us, base_us, ratio) regressions."""
+    regressions = []
+    for name, base in sorted(baseline.items()):
+        cur = current.get(name)
+        if cur is None or base["us"] <= 0 or cur["us"] <= 0:
+            continue
+        ratio = cur["us"] / base["us"]
+        if ratio > max_ratio:
+            regressions.append((name, cur["us"], base["us"], ratio))
+    return regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh run.py --json output")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail if current/baseline wall-time exceeds this")
+    args = ap.parse_args()
+
+    current = load_records(args.current)
+    baseline = load_records(args.baseline)
+    shared = [n for n in baseline if n in current and baseline[n]["us"] > 0]
+    if not shared:
+        print("no comparable records between current and baseline",
+              file=sys.stderr)
+        return 1
+
+    regressions = compare(current, baseline, args.max_ratio)
+    for name in shared:
+        ratio = current[name]["us"] / baseline[name]["us"]
+        print(f"{name}: {current[name]['us']:.0f}us vs "
+              f"baseline {baseline[name]['us']:.0f}us ({ratio:.2f}x)")
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} record(s) regressed "
+              f">{args.max_ratio}x:", file=sys.stderr)
+        for name, cur, base, ratio in regressions:
+            print(f"  {name}: {cur:.0f}us vs {base:.0f}us ({ratio:.2f}x)",
+                  file=sys.stderr)
+        return 1
+    print(f"\nOK: {len(shared)} record(s) within {args.max_ratio}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

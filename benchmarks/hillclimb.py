@@ -16,7 +16,7 @@ import dataclasses
 import json
 
 from repro.configs import get_config, SHAPE_SETS
-from repro.launch.dryrun import measure_cell, lower_cell
+from repro.launch.dryrun import measure_cell
 from repro.launch.mesh import make_production_mesh
 from benchmarks.roofline import roofline_from_record
 

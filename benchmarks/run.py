@@ -3,17 +3,76 @@
 Prints ``name,us_per_call,derived`` CSV.  Fast-mode defaults keep the whole
 suite under a few minutes on CPU; pass --full for the larger workloads used
 in EXPERIMENTS.md.
+
+Multi-device: ``--devices N`` forces N host devices (XLA_FLAGS is set
+*before* jax is imported, so this must be the process entry point) and runs
+every SpGEMM through the sharded executor on a ``("shard",)`` mesh.
+
+CI: ``--ci`` runs a tiny synthetic-graph smoke suite and ``--json PATH``
+writes the records for the bench-smoke regression gate
+(``benchmarks/check_regression.py`` compares against the committed
+``benchmarks/BENCH_baseline.json``).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
+RECORDS: list = []
+
 
 def _emit(name, us, derived):
+    RECORDS.append({"name": name, "us": float(f"{us:.0f}"), "derived": derived})
     print(f"{name},{us:.0f},{derived}")
     sys.stdout.flush()
+
+
+def _make_mesh(n_devices: int):
+    if n_devices <= 1:
+        return None
+    from repro.launch.mesh import make_spgemm_mesh
+
+    return make_spgemm_mesh(n_devices)
+
+
+def ci_smoke(mesh) -> None:
+    """Tiny synthetic-graph smoke run for the bench-smoke CI job.
+
+    One spgemm self-product and a 2-iteration MCL on a 256-node random
+    graph; small enough for an ubuntu-latest runner, large enough that a
+    pathological slowdown (re-tracing per iteration, broken cache keys)
+    blows past the 2x regression gate.
+    """
+    import numpy as np
+    from repro.apps.markov_clustering import mcl
+    from repro.core.spgemm import spgemm
+    from repro.sparse.formats import csr_from_dense
+
+    rng = np.random.default_rng(0)
+    n = 256
+    x = np.where(rng.random((n, n)) < 0.04,
+                 rng.integers(1, 5, (n, n)), 0).astype(np.float32)
+    a = csr_from_dense(x)
+
+    for engine in ("sort", "hash"):
+        spgemm(a, a, engine=engine, mesh=mesh)  # warm the program cache
+        # min over reps: the noise-robust statistic for a shared CI runner
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            res = spgemm(a, a, engine=engine, mesh=mesh)
+            best = min(best, time.perf_counter() - t0)
+        _emit(f"ci_selfprod_{engine}", best * 1e6,
+              f"nnz_c={res.info['nnz_c']};shards={res.info['n_shards']}")
+
+    t0 = time.perf_counter()
+    r = mcl(a, e=2, max_iters=2, tol=0.0, mesh=mesh)
+    us = (time.perf_counter() - t0) * 1e6
+    _emit("ci_mcl", us, f"iters={r.n_iterations};"
+          f"clusters={len(np.unique(r.clusters))}")
 
 
 def main() -> None:
@@ -23,8 +82,32 @@ def main() -> None:
                     help="accumulation engine for the SpGEMM benchmarks")
     ap.add_argument("--gather", default="xla", choices=("auto", "xla", "aia"),
                     help="B-row gather backend (Fig. 7 ablation axis)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the SpGEMM executor over N forced host "
+                         "devices (sets XLA_FLAGS before importing jax)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write records as JSON (bench-smoke artifact)")
+    ap.add_argument("--ci", action="store_true",
+                    help="tiny synthetic smoke suite for the CI gate")
     args = ap.parse_args()
     eng = args.engine
+
+    if args.devices > 1:
+        if "jax" in sys.modules:
+            raise RuntimeError(
+                "--devices must be set before jax is imported; run "
+                "benchmarks/run.py as the process entry point")
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+    mesh = _make_mesh(args.devices)
+
+    if args.ci:
+        ci_smoke(mesh)
+        if args.json:
+            _write_json(args.json, args)
+        return
 
     from benchmarks import bench_self_product, bench_locality, \
         bench_graph_apps, bench_gnn
@@ -35,7 +118,7 @@ def main() -> None:
                                       "Economics", "Protein"],
         n_override=None if args.full else 1024,
         methods=(eng,) if not args.full else ("sort", "hash"),
-        gathers=(args.gather,)))
+        gathers=(args.gather,), mesh=mesh))
     for r in names:
         _emit(f"selfprod_{r['workload']}", r[f"{eng}_ms"] * 1e3,
               f"gflops={r[f'{eng}_gflops']:.3f};ip={r['intermediate_products']};"
@@ -58,7 +141,7 @@ def main() -> None:
             ("RoadTX", "web-Google", "Economics", "amazon0601",
              "WindTunnel", "Protein"),
             n_override=None if args.full else 1024,
-            engine=eng, gather=args.gather):
+            engine=eng, gather=args.gather, mesh=mesh):
         _emit(f"contraction_{r['workload']}", r["spgemm_ms"] * 1e3,
               f"vs_dense_pct={r['reduction_vs_dense_pct']:.1f};ip={r['total_ip']}")
     for r in bench_graph_apps.bench_mcl(
@@ -66,7 +149,7 @@ def main() -> None:
             ("web-Google", "Economics", "Protein"),
             max_iters=2 if not args.full else 3,
             n_override=None if args.full else 1024,
-            engine=eng, gather=args.gather):
+            engine=eng, gather=args.gather, mesh=mesh):
         _emit(f"mcl_{r['workload']}", r["spgemm_ms"] * 1e3,
               f"vs_dense_pct={r['reduction_vs_dense_pct']:.1f};"
               f"clusters={r['n_clusters']}")
@@ -89,6 +172,20 @@ def main() -> None:
           "pearson_r={:.2f};reductions={}".format(
               s["pearson_r"],
               "/".join(f"{r['reduction_pct']:.0f}%" for r in s["rows"])))
+
+    if args.json:
+        _write_json(args.json, args)
+
+
+def _write_json(path: str, args) -> None:
+    with open(path, "w") as f:
+        json.dump({
+            "meta": {"devices": args.devices, "engine": args.engine,
+                     "gather": args.gather, "ci": bool(args.ci),
+                     "full": bool(args.full)},
+            "records": RECORDS,
+        }, f, indent=2)
+    print(f"wrote {len(RECORDS)} records to {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

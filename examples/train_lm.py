@@ -8,11 +8,9 @@ stack (configs → train_step → trainer) is what launch/train.py runs on the
 production mesh.
 """
 import argparse
-import dataclasses
 import tempfile
 
 import jax
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import TokenPipeline

@@ -69,20 +69,23 @@ def init_gnn(cfg: GNNConfig, key) -> Dict:
 
 
 def _aggregate(a: CSR, x: jax.Array, mode: str, k: int,
-               gather: str = "auto") -> jax.Array:
+               gather: str = "auto", mesh=None) -> jax.Array:
     """A · TopK(X) — Eq. (1)'s sparse aggregation (or dense baseline)."""
     if mode == "topk":
         xs = topk_rows_st(x, k)  # Eq. (2) fwd, Eq. (3) bwd
-        return csr_spmm(a, xs, gather=gather)
-    return csr_spmm(a, x, gather=gather)
+        return csr_spmm(a, xs, gather=gather, mesh=mesh)
+    return csr_spmm(a, x, gather=gather, mesh=mesh)
 
 
-def gnn_forward(cfg: GNNConfig, params: Dict, a: CSR, x: jax.Array) -> jax.Array:
+def gnn_forward(cfg: GNNConfig, params: Dict, a: CSR, x: jax.Array,
+                mesh=None) -> jax.Array:
+    """Forward pass; ``mesh`` row-shards every layer's aggregation so GSPMD
+    splits the SpMM across the mesh's first axis."""
     h = x
     for layer in range(cfg.n_layers):
         k = min(cfg.topk, h.shape[1])
         mode = cfg.sparse_mode if layer > 0 else "dense"  # input feats stay dense
-        agg = _aggregate(a, h, mode, k, gather=cfg.gather)
+        agg = _aggregate(a, h, mode, k, gather=cfg.gather, mesh=mesh)
         if cfg.arch == "gcn":
             h = agg @ params[f"w{layer}"]
         elif cfg.arch == "gin":
@@ -94,8 +97,8 @@ def gnn_forward(cfg: GNNConfig, params: Dict, a: CSR, x: jax.Array) -> jax.Array
     return h  # logits
 
 
-def _loss_fn(cfg, params, a, x, labels, mask):
-    logits = gnn_forward(cfg, params, a, x)
+def _loss_fn(cfg, params, a, x, labels, mask, mesh=None):
+    logits = gnn_forward(cfg, params, a, x, mesh=mesh)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
     return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
@@ -109,8 +112,13 @@ def train_gnn(
     n_steps: int = 30,
     lr: float = 1e-2,
     seed: int = 0,
+    mesh=None,
 ) -> Tuple[Dict, List[float]]:
-    """Full-batch training loop; returns (params, loss history)."""
+    """Full-batch training loop; returns (params, loss history).
+
+    ``mesh`` row-shards the per-layer aggregations (forward and backward)
+    over the mesh's first axis via GSPMD sharding constraints.
+    """
     key = jax.random.PRNGKey(seed)
     params = init_gnn(cfg, key)
     opt = adamw(lr, weight_decay=0.0)
@@ -122,7 +130,7 @@ def train_gnn(
     @jax.jit
     def step(params, opt_state):
         loss, grads = jax.value_and_grad(
-            lambda p: _loss_fn(cfg, p, a, x, labels, mask)
+            lambda p: _loss_fn(cfg, p, a, x, labels, mask, mesh=mesh)
         )(params)
         grads, _ = clip_by_global_norm(grads, 1.0)
         updates, opt_state = opt.update(grads, opt_state, params)

@@ -22,14 +22,18 @@ def label_matrix(labels: np.ndarray, n: int | None = None,
 
 
 def graph_contraction(g: CSR, labels: np.ndarray, method: str = "sort",
-                      gather: str = "auto", schedule: str = "grouped"):
+                      gather: str = "auto", schedule: str = "grouped",
+                      mesh=None):
     """Returns (C, infos): contracted adjacency + per-SpGEMM counters.
 
     ``method``/``gather``/``schedule`` select the executor's engine, B-row
-    gather backend, and Table-I scheduling (the paper's ablation axes).
+    gather backend, and Table-I scheduling (the paper's ablation axes);
+    ``mesh`` runs both SpGEMMs through the sharded multi-device executor.
     """
     s = label_matrix(labels, n=g.n_rows)
     st = csr_transpose(s)
-    r1 = spgemm(s, g, engine=method, gather=gather, schedule=schedule)
-    r2 = spgemm(r1.c, st, engine=method, gather=gather, schedule=schedule)
+    r1 = spgemm(s, g, engine=method, gather=gather, schedule=schedule,
+                mesh=mesh)
+    r2 = spgemm(r1.c, st, engine=method, gather=gather, schedule=schedule,
+                mesh=mesh)
     return r2.c, [r1.info, r2.info]

@@ -64,12 +64,13 @@ def sample_rows(p: CSR, s: int, rng: np.random.Generator) -> np.ndarray:
 
 
 def extract(a: CSR, rows: np.ndarray, cols: np.ndarray,
-            engine: str = "sort", gather: str = "auto") -> CSR:
+            engine: str = "sort", gather: str = "auto", mesh=None) -> CSR:
     """A[rows, cols] via SpGEMM with selection matrices: R · A · Cᵀ."""
     r = selection_matrix(rows, a.n_rows)
     c = selection_matrix(cols, a.n_cols)
-    ra = spgemm(r, a, engine=engine, gather=gather).c
-    return spgemm(ra, csr_transpose(c), engine=engine, gather=gather).c
+    ra = spgemm(r, a, engine=engine, gather=gather, mesh=mesh).c
+    return spgemm(ra, csr_transpose(c), engine=engine, gather=gather,
+                  mesh=mesh).c
 
 
 def bulk_sample(
@@ -80,12 +81,14 @@ def bulk_sample(
     seed: int = 0,
     engine: str = "sort",
     gather: str = "auto",
+    mesh=None,
 ) -> Tuple[List[CSR], List[np.ndarray]]:
     """GraphSAGE-style L-layer sampling for one minibatch.
 
     Returns (adjacencies A^{L-1}..A^0 outermost-first, frontier vertex lists
     Q^L..Q^0).  A^l has shape (|Q^{l+1}|, |Q^l|).  ``engine``/``gather``
-    select the SpGEMM executor's accumulation engine and B-row gather.
+    select the SpGEMM executor's accumulation engine and B-row gather;
+    ``mesh`` runs every sampling-chain SpGEMM through the sharded executor.
     """
     rng = np.random.default_rng(seed)
     frontiers = [np.asarray(batch_vertices, np.int64)]
@@ -93,11 +96,13 @@ def bulk_sample(
     q_cur = frontiers[0]
     for _ in range(n_layers):
         q_mat = selection_matrix(q_cur, a.n_rows)
-        p = spgemm(q_mat, a, engine=engine, gather=gather).c  # P = Q^l · A
+        p = spgemm(q_mat, a, engine=engine, gather=gather,
+                   mesh=mesh).c                     # P = Q^l · A
         p = norm_rows(p)                            # NORM
         sampled = sample_rows(p, fanout, rng)       # SAMPLE
         q_next = np.unique(np.concatenate([q_cur, sampled]))  # self + nbrs
-        adjs.append(extract(a, q_cur, q_next, engine=engine, gather=gather))
+        adjs.append(extract(a, q_cur, q_next, engine=engine, gather=gather,
+                            mesh=mesh))
         frontiers.append(q_next)
         q_cur = q_next
     return adjs, frontiers

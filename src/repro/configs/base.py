@@ -8,7 +8,7 @@ attention insert (zamba2), e.g. zamba2 = 'MMMMMS' repeating.
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Optional, Tuple
+from typing import Literal, Optional
 
 import jax.numpy as jnp
 

@@ -41,6 +41,22 @@ for tests and benchmarks.
 CSR reassembly is a vectorized inverse-permutation scatter: per group-chunk
 output block, flat destination offsets are computed from the (host) indptr
 and written with one boolean-mask scatter — no ``out_cols[r]`` row loop.
+
+**Sharded multi-device execution** (``mesh=``): the paper's AIA scheduling
+partitions SpGEMM work so each memory stack serves *local* indirection
+traffic; ``execute_plan(..., mesh=...)`` applies the same idea across a
+``jax.Mesh``.  The plan is split into group-chunk work items
+(``partition_plan``), items are assigned round-robin *within each group* so
+every shard gets a balanced mix of Table-I bins, the A/B operands are
+replicated onto every shard device once per call (the all-gather analogue —
+each "stack" holds the B rows its indirection touches), and each item's
+enumerate/allocate/accumulate programs run shard-locally on its assigned
+device.  Shard outputs merge through the same inverse-permutation
+reassembly, so the result is bit-identical to the single-device path for
+every engine × gather combination (per-row results never depend on which
+shard computed them).  The program cache is shared across shards — one
+Python-level signature entry serves every device, and jax's per-device jit
+cache keeps each shard's executable warm across iterations.
 """
 from __future__ import annotations
 
@@ -54,7 +70,8 @@ import numpy as np
 
 from repro.core import phases
 from repro.core.grouping import GroupPlan
-from repro.sparse.formats import CSR, csr_to_ell
+from repro.launch.sharding import replicate_to, shard_devices
+from repro.sparse.formats import CSR, ELL, csr_to_ell
 
 Gather = Literal["auto", "xla", "aia"]
 Schedule = Literal["grouped", "natural"]
@@ -264,12 +281,86 @@ def _pad_rows(k: int) -> int:
     return int(np.ceil(k / ROW_QUANTUM) * ROW_QUANTUM)
 
 
+@dataclasses.dataclass(frozen=True)
+class WorkItem:
+    """One (group, row-chunk) dispatch, pinned to one shard."""
+
+    group: int
+    shard: int
+    rows: np.ndarray      # (R,) original row ids of this chunk
+    a_cap: int            # exact max nnz(A row) over the *group*
+    table_cap: int        # Table-I hash-table capacity of the group
+
+
+def partition_plan(
+    plan: GroupPlan,
+    a_row_nnz: np.ndarray,
+    row_chunk: int,
+    n_shards: int = 1,
+) -> List[WorkItem]:
+    """Split a ``GroupPlan`` into shard-assigned group-chunk work items.
+
+    Chunks are assigned round-robin with a cursor that carries across
+    groups, so each shard receives a balanced mix of Table-I bins (a shard
+    never ends up holding only the heavy group-3 rows).  With multiple
+    shards the chunk size shrinks to ``ceil(group/n_shards)`` (quantized to
+    ``ROW_QUANTUM``) so every shard gets work from every group it can.
+
+    ``a_cap`` stays a *group-level* maximum: per-row results then never
+    depend on the chunking or the shard count, which is what makes the
+    sharded path bit-identical to the single-device one.
+    """
+    items: List[WorkItem] = []
+    cursor = 0
+    for g in range(4):
+        rows = plan.rows_of_group(g)
+        if len(rows) == 0:
+            continue
+        a_cap = max(int(a_row_nnz[rows].max(initial=0)), 1)
+        table_cap = plan.table_capacities[g]
+        chunk = row_chunk
+        if n_shards > 1:
+            per_shard = _pad_rows(int(np.ceil(len(rows) / n_shards)))
+            chunk = max(min(row_chunk, per_shard), ROW_QUANTUM)
+        for lo in range(0, len(rows), chunk):
+            items.append(WorkItem(
+                group=g,
+                shard=cursor % n_shards,
+                rows=np.asarray(rows[lo: lo + chunk]),
+                a_cap=a_cap,
+                table_cap=table_cap,
+            ))
+            cursor += 1
+    return items
+
+
 @dataclasses.dataclass
 class _ChunkOut:
     rows: np.ndarray      # (R,) original row ids
     cols: np.ndarray      # (R_pad, out_cap)
     vals: np.ndarray      # (R_pad, out_cap)
     counts: np.ndarray    # (R_pad,)
+
+
+@dataclasses.dataclass(frozen=True)
+class _ShardOperands:
+    """A + B(ELL) arrays resident on one shard device (B replication is the
+    software analogue of the paper's per-stack all-gather: every shard
+    serves its two-level indirection from local memory)."""
+
+    a_indptr: jax.Array
+    a_indices: jax.Array
+    a_data: jax.Array
+    b_idx: jax.Array
+    b_val: jax.Array
+
+
+def _place_operands(a: CSR, b_ell: ELL, devices) -> List[_ShardOperands]:
+    return [
+        _ShardOperands(*(replicate_to(x, dev) for x in (
+            a.indptr, a.indices, a.data, b_ell.indices, b_ell.data)))
+        for dev in devices
+    ]
 
 
 def execute_plan(
@@ -279,11 +370,16 @@ def execute_plan(
     engine: str = "sort",
     gather: Gather = "auto",
     row_chunk: int = 4096,
+    mesh=None,
 ) -> Tuple[CSR, int]:
     """Run the compiled group pipeline; returns (C, nnz_C).
 
-    One device dispatch per (group, chunk); counts sync back once per chunk
-    and the CSR is reassembled with vectorized scatters (no per-row Python).
+    One device dispatch per work item (group × chunk, shard-local under
+    ``mesh=``); counts sync back once per chunk and the CSR is reassembled
+    with vectorized scatters (no per-row Python).  ``mesh`` partitions the
+    plan across the mesh's devices (round-robin by group); ``mesh=None``
+    is the single-device path — both run the same loop, and their outputs
+    are bit-identical.
     """
     gather = resolve_gather(gather)
     get_engine(engine)  # validate early
@@ -303,47 +399,49 @@ def execute_plan(
     a_indptr_np = np.asarray(a.indptr)
     a_row_nnz = a_indptr_np[1:] - a_indptr_np[:-1]
 
+    devices = shard_devices(mesh)
+    items = partition_plan(plan, a_row_nnz, row_chunk, n_shards=len(devices))
+    operands = _place_operands(a, b_ell, devices)
+
     chunks: List[_ChunkOut] = []
     counts_all = np.zeros(n, np.int64)
-    for g in range(4):
-        rows = plan.rows_of_group(g)
-        if len(rows) == 0:
-            continue
-        a_cap = max(int(a_row_nnz[rows].max(initial=0)), 1)
-        table_cap = plan.table_capacities[g]
-        for lo in range(0, len(rows), row_chunk):
-            chunk = rows[lo: lo + row_chunk]
-            padded = _pad_rows(len(chunk))
-            rows_j = jnp.asarray(np.concatenate(
-                [chunk, -np.ones(padded - len(chunk), np.int32)]
-            ))
-            enum = _get_program("enumerate", (padded, a_cap, kb_cap, gather, dt),
-                                a_cap, gather)
-            keys, vals = enum(
-                a.indptr, a.indices, a.data, rows_j, b_ell.indices, b_ell.data
-            )
-            ip_cap = keys.shape[1]
-            # ---- Allocation (Algorithms 2/3): size the output rows ----
-            alloc = _get_program("allocate", (padded, ip_cap, table_cap, engine),
-                                 table_cap, engine)
-            max_unique = int(np.asarray(alloc(keys)).max(initial=0))
-            # pow2 quantization keeps the accumulate signature stable across
-            # iterative calls (MCL/GNN) while tracking actual occupancy.
-            out_cap = max(min(next_pow2(max_unique),
-                              max(table_cap, 1), ncol_cap), 1)
-            # ---- Accumulation (Algorithm 5) on the same device arrays ----
-            accum = _get_program(
-                "accumulate", (padded, ip_cap, table_cap, out_cap, engine, dt),
-                table_cap, out_cap, engine)
-            cols_r, vals_r, counts_r = accum(keys, vals)
-            out = _ChunkOut(
-                rows=np.asarray(chunk),
-                cols=np.asarray(cols_r),
-                vals=np.asarray(vals_r),
-                counts=np.asarray(counts_r),
-            )
-            counts_all[out.rows] = out.counts[: len(chunk)]
-            chunks.append(out)
+    for item in items:
+        chunk = item.rows
+        dev = devices[item.shard]
+        ops = operands[item.shard]
+        a_cap, table_cap = item.a_cap, item.table_cap
+        padded = _pad_rows(len(chunk))
+        rows_j = replicate_to(jnp.asarray(np.concatenate(
+            [chunk, -np.ones(padded - len(chunk), np.int32)]
+        )), dev)
+        enum = _get_program("enumerate", (padded, a_cap, kb_cap, gather, dt),
+                            a_cap, gather)
+        keys, vals = enum(
+            ops.a_indptr, ops.a_indices, ops.a_data, rows_j,
+            ops.b_idx, ops.b_val
+        )
+        ip_cap = keys.shape[1]
+        # ---- Allocation (Algorithms 2/3): size the output rows ----
+        alloc = _get_program("allocate", (padded, ip_cap, table_cap, engine),
+                             table_cap, engine)
+        max_unique = int(np.asarray(alloc(keys)).max(initial=0))
+        # pow2 quantization keeps the accumulate signature stable across
+        # iterative calls (MCL/GNN) while tracking actual occupancy.
+        out_cap = max(min(next_pow2(max_unique),
+                          max(table_cap, 1), ncol_cap), 1)
+        # ---- Accumulation (Algorithm 5) on the same device arrays ----
+        accum = _get_program(
+            "accumulate", (padded, ip_cap, table_cap, out_cap, engine, dt),
+            table_cap, out_cap, engine)
+        cols_r, vals_r, counts_r = accum(keys, vals)
+        out = _ChunkOut(
+            rows=np.asarray(chunk),
+            cols=np.asarray(cols_r),
+            vals=np.asarray(vals_r),
+            counts=np.asarray(counts_r),
+        )
+        counts_all[out.rows] = out.counts[: len(chunk)]
+        chunks.append(out)
 
     # ---- Vectorized CSR reassembly (inverse-permutation scatter) ----
     indptr = np.zeros(n + 1, np.int64)

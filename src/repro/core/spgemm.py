@@ -44,6 +44,7 @@ def spgemm(
     schedule: Literal["grouped", "natural"] = "grouped",
     engine: Optional[str] = None,
     gather: executor.Gather = "auto",
+    mesh=None,
 ) -> SpGEMMResult:
     """C = A @ B via the paper's multi-phase pipeline (plan-compiled).
 
@@ -55,6 +56,9 @@ def spgemm(
     ``schedule="natural"`` disables the Table-I row grouping (every row
     processed at the global worst-case capacity, natural order) — the
     "without AIA scheduling" software baseline.
+    ``mesh`` (a ``jax.Mesh``, e.g. ``launch.mesh.make_spgemm_mesh()``)
+    partitions the plan's row ranges across the mesh's devices and runs the
+    group programs shard-locally; results are bit-identical to ``mesh=None``.
     """
     assert a.n_cols == b.n_rows, (a.shape, b.shape)
     if engine is None:
@@ -68,16 +72,20 @@ def spgemm(
         plan = executor.ungrouped_plan(plan)
     # ---- Phases 2+3: compiled group pipeline + vectorized reassembly ----
     c, nnz = executor.execute_plan(
-        a, b, plan, engine=engine, gather=gather, row_chunk=row_chunk
+        a, b, plan, engine=engine, gather=gather, row_chunk=row_chunk,
+        mesh=mesh,
     )
-    info = spgemm_info(a, b, plan, nnz)
+    info = spgemm_info(a, b, plan, nnz, mesh=mesh)
     return SpGEMMResult(c=c, plan=plan, info=info)
 
 
-def spgemm_info(a: CSR, b: CSR, plan: GroupPlan, nnz_c: int) -> Dict[str, float]:
+def spgemm_info(a: CSR, b: CSR, plan: GroupPlan, nnz_c: int,
+                mesh=None) -> Dict[str, float]:
     """Hardware-independent counters used throughout EXPERIMENTS.md."""
     total_ip = plan.total_ip
     return {
+        "n_shards": 1 if mesh is None else int(np.prod(
+            np.asarray(mesh.devices).shape)),
         "nnz_a": int(np.asarray(a.nnz)),
         "nnz_b": int(np.asarray(b.nnz)),
         "nnz_c": int(nnz_c),

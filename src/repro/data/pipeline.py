@@ -14,7 +14,6 @@ import dataclasses
 from typing import Dict, Iterator, Optional
 
 import numpy as np
-import jax.numpy as jnp
 
 
 @dataclasses.dataclass

@@ -12,7 +12,6 @@ import os
 from typing import Literal
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import aia_gather as _aia
 from repro.kernels import ref as _ref

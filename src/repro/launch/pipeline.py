@@ -12,7 +12,6 @@ block as ``stage_fn`` with per-stage stacked weights.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -81,6 +81,39 @@ def constrain(x, spec):
 UNSHARDED = Shardings()
 
 
+# ---------------------------------------------------------------------------
+# SpGEMM executor shard placement (1-D ("shard",) meshes, but any mesh works)
+# ---------------------------------------------------------------------------
+
+def shard_devices(mesh) -> list:
+    """Flat device list a sharded executor round-robins work over.
+
+    ``mesh=None`` → ``[None]``: one logical shard on the default device, so
+    the single- and multi-device code paths are the same loop.
+    """
+    if mesh is None:
+        return [None]
+    import numpy as np
+
+    return list(np.asarray(mesh.devices).reshape(-1))
+
+
+def replicate_to(x, device):
+    """Place ``x`` on ``device`` (the per-shard B replication / all-gather
+    analogue); identity for the unsharded ``device=None`` path."""
+    if device is None:
+        return x
+    return jax.device_put(x, device)
+
+
+def row_sharding(mesh, ndim: int = 2):
+    """NamedSharding splitting dim 0 (rows) over the mesh's first axis,
+    replicating the rest — the layout for SpMM outputs and CSR row work."""
+    from jax.sharding import NamedSharding
+
+    return NamedSharding(mesh, P(mesh.axis_names[0], *([None] * (ndim - 1))))
+
+
 def make_shardings(mesh, sequence_parallel: bool = False) -> Shardings:
     names = mesh.axis_names
     batch_axes = tuple(n for n in ("pod", "data") if n in names)

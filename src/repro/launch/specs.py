@@ -16,9 +16,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeSpec
-from repro.launch.sharding import Shardings, make_shardings
 from repro.models import transformer as tf
-from repro.models import mamba2 as m2
 
 
 def _batch_axes(mesh) -> Tuple[str, ...]:
@@ -70,7 +68,6 @@ def param_sds(cfg: ArchConfig, mesh):
 
 def train_state_sds(cfg: ArchConfig, mesh, zero1: bool = True):
     """TrainState ShapeDtypeStructs: params + AdamW moments (ZeRO-1)."""
-    from repro.optim.zero import zero1_state_specs
     from repro.train.step import TrainState
     from repro.optim.adamw import AdamWState
 

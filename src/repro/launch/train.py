@@ -18,7 +18,7 @@ import jax
 
 from repro.configs import get_config, smoke_config
 from repro.data.pipeline import TokenPipeline
-from repro.launch.sharding import make_shardings, UNSHARDED
+from repro.launch.sharding import UNSHARDED
 from repro.optim import adamw, linear_warmup_cosine
 from repro.train import Trainer, TrainerConfig, init_train_state, make_train_step
 

@@ -1,8 +1,6 @@
 """Shared model substrate: norms, RoPE, inits, chunked losses."""
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -18,12 +18,10 @@ Public API: ``init_transformer`` (params + PartitionSpecs), ``train_loss``,
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig

@@ -10,7 +10,7 @@ prefill instead (launch/dryrun.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -83,14 +83,16 @@ def csr_spmv(a: CSR, x: jax.Array) -> jax.Array:
     return jnp.zeros(a.n_rows + 1, contrib.dtype).at[rid].add(contrib)[: a.n_rows]
 
 
-def csr_spmm(a: CSR, x: jax.Array, gather: str = "xla") -> jax.Array:
+def csr_spmm(a: CSR, x: jax.Array, gather: str = "xla", mesh=None) -> jax.Array:
     """Y = A @ X for dense X (n_cols, d): the GNN aggregation primitive.
 
     This is the *two-level indirect access* the paper targets: ``indices``
     selects rows of ``X`` (ranged access of length d), results are
     segment-summed by row.  ``gather="aia"`` serves that gather with the
     scalar-prefetch Pallas kernels (Fig. 7 ablation); ``"auto"`` picks AIA
-    on TPU and XLA elsewhere.
+    on TPU and XLA elsewhere.  ``mesh`` constrains the output to be
+    row-sharded over the mesh's first axis so GSPMD partitions the gather +
+    segment-sum across devices (jit-safe: constraint only, no placement).
     """
     from repro.core.executor import resolve_gather  # lazy: avoids pkg cycle
     gather = resolve_gather(gather)  # validates + honors REPRO_KERNEL_BACKEND
@@ -99,7 +101,11 @@ def csr_spmm(a: CSR, x: jax.Array, gather: str = "xla") -> jax.Array:
     contrib = jnp.where(valid[:, None], a.data[:, None] * rows_of_x, 0)
     rid = a.row_ids()
     out = jnp.zeros((a.n_rows + 1, x.shape[1]), contrib.dtype).at[rid].add(contrib)
-    return out[: a.n_rows]
+    out = out[: a.n_rows]
+    if mesh is not None:
+        from repro.launch.sharding import row_sharding
+        out = jax.lax.with_sharding_constraint(out, row_sharding(mesh, out.ndim))
+    return out
 
 
 def csr_scale_rows(a: CSR, s: jax.Array) -> CSR:

@@ -8,7 +8,6 @@ compute (DESIGN.md §6).  Cross-pod int8 gradient compression is applied via
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional
 
 import jax

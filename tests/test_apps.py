@@ -9,7 +9,6 @@ from repro.apps import (
     GNNConfig, init_gnn, gnn_forward, train_gnn,
 )
 from repro.apps.graph_contraction import label_matrix
-from repro.apps.markov_clustering import add_self_loops
 from repro.apps.gnn import normalize_adjacency
 from repro.sparse.formats import csr_to_dense, csr_from_dense
 from repro.sparse.ops import csr_column_sums

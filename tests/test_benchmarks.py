@@ -1,6 +1,4 @@
 """Benchmark-harness correctness: locality simulator, roofline math."""
-import numpy as np
-
 from benchmarks.bench_locality import simulate
 from benchmarks.roofline import (
     Roofline, model_flops, wire_bytes_per_chip, roofline_from_record,

@@ -1,20 +1,15 @@
 """Distribution tests — each runs in a subprocess with its own device count
 (XLA_FLAGS must be set before jax import, and must NOT leak into the main
-test session which expects 1 device)."""
+test session which expects 1 device).
+
+Mesh contexts go through ``launch.mesh.use_mesh`` (``jax.set_mesh`` on new
+jax, the legacy ``with mesh:`` resource env otherwise) and all array
+placement uses explicit ``NamedSharding``s, so these run on every
+supported jax version — no version skips."""
 import os
 import subprocess
 import sys
 import textwrap
-
-import jax
-import pytest
-
-# The sharded-training substrate uses jax.set_mesh (jax >= 0.5); on older
-# jax the tests exercising it fail on import, not on the logic under test.
-needs_set_mesh = pytest.mark.skipif(
-    not hasattr(jax, "set_mesh"),
-    reason="jax.set_mesh not available in this jax version",
-)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -30,7 +25,6 @@ def run_py(body: str, n_devices: int = 8, timeout: int = 900):
     return proc.stdout
 
 
-@needs_set_mesh
 def test_sharded_train_step_matches_single_device():
     """Same params+batch: loss on a (2,2) data×model mesh == 1-device loss."""
     run_py("""
@@ -39,7 +33,7 @@ def test_sharded_train_step_matches_single_device():
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs import smoke_config
     from repro.models.transformer import init_transformer, train_loss
-    from repro.launch.mesh import make_test_mesh
+    from repro.launch.mesh import make_test_mesh, use_mesh
     from repro.launch.sharding import make_shardings
 
     cfg = dc.replace(smoke_config("granite-3-2b"), n_layers=2)
@@ -53,7 +47,7 @@ def test_sharded_train_step_matches_single_device():
     sh = make_shardings(mesh)
     from repro.models.transformer import param_specs
     specs = param_specs(cfg, params, model_size=2)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         p_sharded = jax.tree.map(
             lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs)
         b_sharded = jax.tree.map(
@@ -71,15 +65,16 @@ def test_elastic_checkpoint_reshard():
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.checkpoint import save_checkpoint, restore_checkpoint
+    from repro.launch.mesh import compat_make_mesh
 
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
             "b": jnp.ones(8)}
-    mesh8 = jax.make_mesh((8,), ("data",))
+    mesh8 = compat_make_mesh((8,), ("data",))
     sharded = jax.device_put(tree["w"], NamedSharding(mesh8, P("data", None)))
     tree8 = {"w": sharded, "b": tree["b"]}
     with tempfile.TemporaryDirectory() as d:
         save_checkpoint(d, 1, tree8)
-        mesh4 = jax.make_mesh((4,), ("data",), devices=jax.devices()[:4])
+        mesh4 = compat_make_mesh((4,), ("data",), devices=jax.devices()[:4])
         sh4 = {"w": NamedSharding(mesh4, P(None, "data")), "b": None}
         restored = restore_checkpoint(d, 1, tree, shardings=sh4)
         np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
@@ -96,8 +91,9 @@ def test_compressed_psum_shard_map():
     from jax.sharding import NamedSharding, PartitionSpec as P
     from jax.experimental.shard_map import shard_map
     from repro.optim import compressed_psum
+    from repro.launch.mesh import compat_make_mesh
 
-    mesh = jax.make_mesh((8,), ("data",))
+    mesh = compat_make_mesh((8,), ("data",))
     x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8) / 13.0
 
     @functools.partial(shard_map, mesh=mesh, in_specs=P("data", None),
@@ -122,8 +118,9 @@ def test_pipeline_parallel_shard_map():
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.launch.pipeline import pipeline_apply
+    from repro.launch.mesh import compat_make_mesh
 
-    mesh = jax.make_mesh((4,), ("pipe",))
+    mesh = compat_make_mesh((4,), ("pipe",))
     # 4 stages, each a simple affine layer; verify against sequential apply
     rng = np.random.default_rng(0)
     ws = jnp.asarray(rng.standard_normal((4, 8, 8)).astype(np.float32) * 0.3)
@@ -141,7 +138,6 @@ def test_pipeline_parallel_shard_map():
     """)
 
 
-@needs_set_mesh
 def test_dryrun_single_cell_multipod():
     """The real contract: one cell lowered+compiled on BOTH production meshes
     (512 host devices).  Uses the smallest arch × decode shape for speed."""
@@ -163,17 +159,23 @@ def test_dryrun_single_cell_multipod():
     assert out.count("CELL OK") == 2
 
 
-@needs_set_mesh
-def test_moe_shard_map_matches_gspmd():
-    """The §Perf EP rewrite must be numerically identical to the baseline."""
+def test_moe_shard_map_matches_unsharded():
+    """The §Perf EP rewrite must be numerically identical to the unsharded
+    single-device forward.  On jax >= 0.6 the mesh-sharded gspmd baseline
+    is additionally held to the same truth; on jax 0.4.x that comparison is
+    skipped — the sharded gspmd path itself miscompiles the expert
+    scatter-add under a mesh (every model shard contributes every expert
+    and the combine all-reduce double-counts), so the mesh-free forward is
+    the only trustworthy reference there."""
     run_py("""
     import dataclasses as dc
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs import smoke_config
-    from repro.models.transformer import init_transformer, train_loss, param_specs
-    from repro.launch.mesh import make_test_mesh
-    from repro.launch.sharding import make_shardings
+    from repro.models.transformer import init_transformer, param_specs
+    from repro.models.transformer import forward_hidden
+    from repro.launch.mesh import make_test_mesh, use_mesh
+    from repro.launch.sharding import make_shardings, UNSHARDED
 
     base = smoke_config("llama4-scout-17b-a16e")
     # capacity large enough that no tokens drop: global- vs per-shard
@@ -184,20 +186,26 @@ def test_moe_shard_map_matches_gspmd():
                        moe=dc.replace(moe_full, impl="shard_map"))
     params, _ = init_transformer(cfg_g, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(rng.integers(0, cfg_g.vocab, (4, 32))),
-             "labels": jnp.asarray(rng.integers(0, cfg_g.vocab, (4, 32)))}
+    tokens = jnp.asarray(rng.integers(0, cfg_g.vocab, (4, 32)))
+
+    # unsharded single-device ground truth (gspmd token-choice impl)
+    hg, _ = jax.jit(lambda p: forward_hidden(cfg_g, p, tokens, UNSHARDED))(params)
 
     mesh = make_test_mesh((2, 2), ("data", "model"))
     sh = make_shardings(mesh)
     specs = param_specs(cfg_g, params, model_size=2)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         ps = jax.tree.map(lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
                           params, specs)
-        bs = jax.tree.map(lambda x: jax.device_put(
-            x, NamedSharding(mesh, P("data", None))), batch)
-        from repro.models.transformer import forward_hidden
-        hg, _ = jax.jit(lambda p: forward_hidden(cfg_g, p, bs["tokens"], sh))(ps)
-        hs, _ = jax.jit(lambda p: forward_hidden(cfg_s, p, bs["tokens"], sh))(ps)
+        ts = jax.device_put(tokens, NamedSharding(mesh, P("data", None)))
+        hs, _ = jax.jit(lambda p: forward_hidden(cfg_s, p, ts, sh))(ps)
+        if hasattr(jax, "set_mesh"):
+            # new jax: the mesh-sharded gspmd baseline is also correct —
+            # hold it to the same unsharded truth
+            hgm, _ = jax.jit(lambda p: forward_hidden(cfg_g, p, ts, sh))(ps)
+            np.testing.assert_allclose(np.asarray(hgm, np.float32),
+                                       np.asarray(hg, np.float32),
+                                       rtol=2e-3, atol=2e-4)
     # identical expert math; only the aux-loss *estimator* differs
     np.testing.assert_allclose(np.asarray(hs, np.float32),
                                np.asarray(hg, np.float32), rtol=2e-3, atol=2e-4)

@@ -1,0 +1,226 @@
+"""Sharded multi-device SpGEMM executor.
+
+Two layers of coverage:
+
+* **In-process** (1 device, cheap, always runs): ``partition_plan`` shard
+  assignment invariants, and the ``mesh=`` code path on a 1-device
+  ``("shard",)`` mesh — same loop the multi-device path takes.
+* **Subprocess** (forced host device counts, the acceptance bar):
+  1/2/4/8 devices must produce CSR output *bit-identical* to both the
+  single-device executor and the dense oracle for every engine × gather
+  combination, and repeated MCL-style iterations under a mesh must reuse
+  cached per-shard programs instead of re-tracing.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import executor
+from repro.core.grouping import group_rows
+from repro.core.ref import spgemm_dense
+from repro.core.spgemm import spgemm
+from repro.sparse.formats import csr_from_dense, csr_to_dense
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(body: str, n_devices: int = 8, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    script = "import os\n" + textwrap.dedent(body)
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def int_sparse(rng, n, m, density=0.3):
+    x = rng.integers(-4, 5, (n, m)).astype(np.float32)
+    mask = rng.random((n, m)) < density
+    return np.where(mask, x, 0.0).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# partition_plan: host-side shard assignment invariants (no devices needed)
+# ---------------------------------------------------------------------------
+
+def _plan_fixture():
+    rng = np.random.default_rng(2)
+    a = csr_from_dense(int_sparse(rng, 64, 48, 0.25))
+    b = csr_from_dense(int_sparse(rng, 48, 52, 0.25))
+    plan = group_rows(a, b)
+    nnz = np.diff(np.asarray(a.indptr))
+    return plan, nnz
+
+
+def test_partition_plan_covers_every_row_exactly_once():
+    plan, nnz = _plan_fixture()
+    for n_shards in (1, 2, 4, 8):
+        items = executor.partition_plan(plan, nnz, 4096, n_shards=n_shards)
+        rows = np.concatenate([i.rows for i in items])
+        assert sorted(rows.tolist()) == sorted(plan.map_rows.tolist())
+        assert all(0 <= i.shard < n_shards for i in items)
+
+
+def test_partition_plan_round_robin_balances_groups():
+    """The shard cursor carries across groups: chunks of one group spread
+    over consecutive shards instead of piling onto shard 0."""
+    plan, nnz = _plan_fixture()
+    items = executor.partition_plan(plan, nnz, 4096, n_shards=4)
+    # every populated group's chunks land on distinct consecutive shards
+    by_group = {}
+    for it in items:
+        by_group.setdefault(it.group, []).append(it.shard)
+    multi = [shards for shards in by_group.values() if len(shards) > 1]
+    for shards in multi:
+        assert len(set(shards)) == len(shards)
+    # and the whole item list uses more than one shard
+    assert len({i.shard for i in items}) > 1
+
+
+def test_partition_plan_single_shard_matches_row_chunking():
+    plan, nnz = _plan_fixture()
+    items = executor.partition_plan(plan, nnz, 16, n_shards=1)
+    assert all(i.shard == 0 for i in items)
+    assert all(len(i.rows) <= 16 for i in items)
+
+
+def test_partition_plan_shrinks_chunks_to_feed_all_shards():
+    plan, nnz = _plan_fixture()
+    items = executor.partition_plan(plan, nnz, 4096, n_shards=8)
+    biggest_group = max(plan.group_sizes)
+    per_shard = max(len(i.rows) for i in items)
+    assert per_shard <= max(
+        int(np.ceil(biggest_group / 8 / executor.ROW_QUANTUM))
+        * executor.ROW_QUANTUM, executor.ROW_QUANTUM)
+
+
+# ---------------------------------------------------------------------------
+# mesh= code path on a single device (runs in the main session)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ("sort", "hash"))
+def test_mesh_single_device_matches_unsharded(engine):
+    from repro.launch.mesh import make_spgemm_mesh
+
+    rng = np.random.default_rng(5)
+    a = csr_from_dense(int_sparse(rng, 30, 24, 0.3))
+    b = csr_from_dense(int_sparse(rng, 24, 28, 0.3))
+    mesh = make_spgemm_mesh(1)
+    r0 = spgemm(a, b, engine=engine)
+    r1 = spgemm(a, b, engine=engine, mesh=mesh)
+    assert r1.info["n_shards"] == 1
+    np.testing.assert_array_equal(
+        np.asarray(csr_to_dense(r0.c)), np.asarray(csr_to_dense(r1.c)))
+    np.testing.assert_array_equal(
+        np.asarray(csr_to_dense(r1.c)), np.asarray(spgemm_dense(a, b)))
+
+
+def test_make_spgemm_mesh_rejects_oversubscription():
+    from repro.launch.mesh import make_spgemm_mesh
+    import jax
+
+    with pytest.raises(ValueError, match="shard devices"):
+        make_spgemm_mesh(len(jax.devices()) + 1)
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: forced device counts (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+INVARIANCE_BODY = """
+import jax, numpy as np
+from repro.core.spgemm import spgemm
+from repro.core.ref import spgemm_dense
+from repro.launch.mesh import make_spgemm_mesh
+from repro.sparse.formats import csr_from_dense, csr_to_dense
+
+n_dev = {n_devices}
+assert len(jax.devices()) == n_dev, jax.devices()
+rng = np.random.default_rng(7)
+def sp(n, m, d):
+    x = rng.integers(-4, 5, (n, m)).astype(np.float32)
+    return np.where(rng.random((n, m)) < d, x, 0.0).astype(np.float32)
+a = csr_from_dense(sp(96, 72, 0.22))
+b = csr_from_dense(sp(72, 80, 0.28))
+oracle = np.asarray(spgemm_dense(a, b))
+mesh = make_spgemm_mesh(n_dev)
+for engine in ("sort", "hash"):
+    for gather in ("xla", "aia"):
+        single = spgemm(a, b, engine=engine, gather=gather)
+        sharded = spgemm(a, b, engine=engine, gather=gather, mesh=mesh)
+        assert sharded.info["n_shards"] == n_dev
+        d_single = np.asarray(csr_to_dense(single.c))
+        d_sharded = np.asarray(csr_to_dense(sharded.c))
+        np.testing.assert_array_equal(d_sharded, d_single)
+        np.testing.assert_array_equal(d_sharded, oracle)
+        # CSR layout itself is identical, not just the densified view
+        np.testing.assert_array_equal(np.asarray(sharded.c.indptr),
+                                      np.asarray(single.c.indptr))
+        print("OK", engine, gather, n_dev)
+"""
+
+
+@pytest.mark.parametrize("n_devices", (1, 2, 4, 8))
+def test_shard_count_invariance_bit_exact(n_devices):
+    """1/2/4/8 forced host devices: sharded CSR == single-device CSR ==
+    dense oracle, bit-exact, for every engine × gather combination."""
+    out = run_py(INVARIANCE_BODY.format(n_devices=n_devices),
+                 n_devices=n_devices)
+    assert out.count("OK") == 4
+
+
+def test_sharded_program_cache_reused_across_mcl_iterations():
+    """Two same-support MCL-style iterations under a 4-device mesh: the
+    second must be all program-cache hits (no re-tracing per shard)."""
+    run_py("""
+    import numpy as np
+    from repro.core import executor
+    from repro.core.spgemm import spgemm
+    from repro.launch.mesh import make_spgemm_mesh
+    from repro.sparse.formats import csr_from_dense
+
+    rng = np.random.default_rng(9)
+    pattern = rng.random((48, 48)) < 0.2
+    x1 = np.where(pattern, rng.integers(1, 5, (48, 48)), 0).astype(np.float32)
+    x2 = np.where(pattern, rng.integers(1, 5, (48, 48)), 0).astype(np.float32)
+    mesh = make_spgemm_mesh(4)
+    executor.clear_program_cache()
+    spgemm(csr_from_dense(x1), csr_from_dense(x1), engine="sort", mesh=mesh)
+    first = executor.cache_stats()
+    assert first["misses"] > 0
+    spgemm(csr_from_dense(x2), csr_from_dense(x2), engine="sort", mesh=mesh)
+    second = executor.cache_stats()
+    assert second["misses"] == first["misses"], (
+        "second sharded MCL iteration re-traced", first, second)
+    assert second["hits"] > first["hits"]
+    print("CACHE OK", first, second)
+    """, n_devices=4)
+
+
+def test_sharded_mcl_end_to_end_matches_unsharded():
+    """Full MCL app on a 4-device mesh: same clusters as mesh=None."""
+    run_py("""
+    import numpy as np
+    from repro.apps.markov_clustering import mcl
+    from repro.launch.mesh import make_spgemm_mesh
+    from repro.sparse.formats import csr_from_dense, csr_to_dense
+
+    rng = np.random.default_rng(3)
+    n = 40
+    blocks = np.kron(np.eye(4), np.ones((n // 4, n // 4)))
+    noise = rng.random((n, n)) < 0.02
+    adj = ((blocks + noise + noise.T) > 0).astype(np.float32)
+    g = csr_from_dense(adj)
+    r0 = mcl(g, max_iters=3, tol=0.0)
+    r1 = mcl(g, max_iters=3, tol=0.0, mesh=make_spgemm_mesh(4))
+    np.testing.assert_array_equal(
+        np.asarray(csr_to_dense(r0.matrix)), np.asarray(csr_to_dense(r1.matrix)))
+    np.testing.assert_array_equal(r0.clusters, r1.clusters)
+    print("MCL OK", r0.n_iterations)
+    """, n_devices=4)

@@ -6,7 +6,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.sparse import (
-    CSR, csr_from_dense, csr_to_dense, ell_from_dense, ell_to_dense,
+    csr_from_dense, csr_to_dense, ell_from_dense, ell_to_dense,
     csr_to_ell, ell_to_csr, bsr_from_dense, bsr_to_dense, csr_from_coo,
     csr_transpose, csr_spmm, csr_spmv, csr_permute_rows,
     csr_column_normalize, csr_column_sums, csr_hadamard_power,

@@ -5,9 +5,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import (
-    intermediate_products, ip_histogram, group_rows, spgemm, TABLE_I,
-)
+from repro.core import intermediate_products, ip_histogram, spgemm
 from repro.core.grouping import assign_groups, build_map
 from repro.core.ref import spgemm_dense, intermediate_products_dense
 from repro.core.spgemm import spgemm_ell_fixed
