@@ -51,13 +51,13 @@ def bench_contraction(names=("RoadTX", "web-Google", "Economics", "amazon0601",
 
 def bench_mcl(names=("web-Google", "Economics", "Protein"),
               max_iters=3, n_override=None, engine="sort",
-              gather="auto", mesh=None) -> List[Dict]:
+              gather="auto", mesh=None, reuse_plan=True) -> List[Dict]:
     rows = []
     for name in names:
         g = table_ii_matrix(name, n_override=n_override)
         t_sp, res = _wall(lambda: mcl(g, e=2, max_iters=max_iters, tol=0.0,
                                       method=engine, gather=gather,
-                                      mesh=mesh))
+                                      mesh=mesh, reuse_plan=reuse_plan))
         # dense baseline: same loop with dense matmul expansion
         import jax.numpy as jnp
         from repro.apps.markov_clustering import add_self_loops
@@ -79,6 +79,44 @@ def bench_mcl(names=("web-Google", "Economics", "Protein"),
             "spgemm_ms": t_sp * 1e3, "dense_ms": t_dense * 1e3,
             "reduction_vs_dense_pct": 100 * (1 - t_sp / t_dense),
             "n_clusters": int(len(np.unique(res.clusters))),
+            "plan_hits": res.plan_cache_hits,
+        })
+    return rows
+
+
+def bench_batched_selfprod(names=("Economics", "Protein"), batch=4,
+                           n_override=None, engine="sort", gather="auto",
+                           mesh=None) -> List[Dict]:
+    """Amortized batched SpGEMM vs a per-matrix loop (same-pattern batch).
+
+    Each workload's matrix spawns ``batch`` value variants sharing its
+    support (random positive rescaling of the edge weights — the GNN
+    mini-batch / iterative-reweighting regime); the batched executor runs
+    the plan once for all of them, the loop pays setup per member.
+    """
+    from repro.apps.sampling import _weighted_members
+    from repro.core.spgemm import spgemm, spgemm_batched
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for name in names:
+        g = table_ii_matrix(name, n_override=n_override)
+        nnz = int(np.asarray(g.indptr)[-1])
+        weights = np.asarray(g.data)[None, :nnz] * rng.uniform(
+            0.5, 1.5, (batch, nnz)).astype(np.float32)
+        members = _weighted_members(g, weights)
+        spgemm_batched(members, g, engine=engine, gather=gather, mesh=mesh)
+        for m in members:
+            spgemm(m, g, engine=engine, gather=gather, mesh=mesh)
+        t_batched, res = _wall(lambda: spgemm_batched(
+            members, g, engine=engine, gather=gather, mesh=mesh))
+        t_loop, _ = _wall(lambda: [spgemm(
+            m, g, engine=engine, gather=gather, mesh=mesh) for m in members])
+        rows.append({
+            "workload": name, "n": g.n_rows, "batch": batch,
+            "batched_ms": t_batched * 1e3, "loop_ms": t_loop * 1e3,
+            "speedup_x": t_loop / max(t_batched, 1e-12),
+            "nnz_c": res.info["nnz_c"],
         })
     return rows
 

@@ -8,11 +8,17 @@ order-of-magnitude events).
 
 Usage:
     python benchmarks/check_regression.py BENCH_ci.json \
-        benchmarks/BENCH_baseline.json --max-ratio 2.0
+        benchmarks/BENCH_baseline.json --max-ratio 2.0 [--require-all]
 
-Records with ``us == 0`` (pure-counter rows) and records missing from
-either side are skipped — new benchmarks don't need a baseline update to
-land, but renaming one silently drops its gate, so keep names stable.
+Records with ``us == 0`` (pure-counter rows) are never gated.  Record-set
+*drift* is reported as a WARN by default: records present in the fresh
+JSON but absent from the baseline (a PR adding a benchmark) and records
+present in the baseline but absent from the fresh run (a renamed/removed
+benchmark whose gate would otherwise silently vanish) both print warnings
+without failing, so landing a new bench record doesn't require a lockstep
+baseline commit.  ``--require-all`` turns both warnings into failures —
+used on main, where the baseline is expected to be regenerated in the
+same commit that changes the record set.
 """
 from __future__ import annotations
 
@@ -40,12 +46,24 @@ def compare(current: dict, baseline: dict, max_ratio: float) -> list:
     return regressions
 
 
+def record_drift(current: dict, baseline: dict) -> tuple:
+    """(new_names, missing_names): fresh-only records and baseline-only
+    records — warnings by default, failures under ``--require-all``."""
+    new = sorted(n for n in current if n not in baseline)
+    missing = sorted(n for n in baseline if n not in current)
+    return new, missing
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="fresh run.py --json output")
     ap.add_argument("baseline", help="committed baseline JSON")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail if current/baseline wall-time exceeds this")
+    ap.add_argument("--require-all", action="store_true",
+                    help="fail (not warn) when the record sets differ — "
+                         "strict mode for main, where the baseline must be "
+                         "regenerated alongside record-set changes")
     args = ap.parse_args()
 
     current = load_records(args.current)
@@ -55,6 +73,16 @@ def main() -> int:
         print("no comparable records between current and baseline",
               file=sys.stderr)
         return 1
+
+    new, missing = record_drift(current, baseline)
+    for name in new:
+        print(f"WARN: record {name!r} has no baseline entry (new benchmark?"
+              " regenerate benchmarks/BENCH_baseline.json to gate it)",
+              file=sys.stderr)
+    for name in missing:
+        print(f"WARN: baseline record {name!r} missing from the fresh run"
+              " (renamed/removed benchmark? its gate no longer applies)",
+              file=sys.stderr)
 
     regressions = compare(current, baseline, args.max_ratio)
     for name in shared:
@@ -67,6 +95,11 @@ def main() -> int:
         for name, cur, base, ratio in regressions:
             print(f"  {name}: {cur:.0f}us vs {base:.0f}us ({ratio:.2f}x)",
                   file=sys.stderr)
+        return 1
+    if args.require_all and (new or missing):
+        print(f"\nFAIL (--require-all): record sets differ "
+              f"({len(new)} new, {len(missing)} missing) — regenerate "
+              "benchmarks/BENCH_baseline.json", file=sys.stderr)
         return 1
     print(f"\nOK: {len(shared)} record(s) within {args.max_ratio}x of baseline")
     return 0

@@ -12,6 +12,12 @@ CI: ``--ci`` runs a tiny synthetic-graph smoke suite and ``--json PATH``
 writes the records for the bench-smoke regression gate
 (``benchmarks/check_regression.py`` compares against the committed
 ``benchmarks/BENCH_baseline.json``).
+
+Amortized paths: ``--batch N`` adds batched-vs-looped SpGEMM records
+(one plan serving N same-pattern value sets vs N independent ``spgemm``
+calls) and ``--reuse-plan`` adds a plan-cache-served self-product record;
+both also fold the executor's ``cache_stats()`` into the JSON meta so CI
+can assert nonzero plan-cache hits from the artifact alone.
 """
 from __future__ import annotations
 
@@ -38,18 +44,20 @@ def _make_mesh(n_devices: int):
     return make_spgemm_mesh(n_devices)
 
 
-def ci_smoke(mesh) -> None:
+def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False) -> None:
     """Tiny synthetic-graph smoke run for the bench-smoke CI job.
 
     One spgemm self-product and a 2-iteration MCL on a 256-node random
     graph; small enough for an ubuntu-latest runner, large enough that a
     pathological slowdown (re-tracing per iteration, broken cache keys)
-    blows past the 2x regression gate.
+    blows past the 2x regression gate.  ``batch``/``reuse_plan`` add the
+    amortized-path records (batched vs per-matrix loop; plan-cache-served
+    self-product) the workflow asserts on.
     """
     import numpy as np
     from repro.apps.markov_clustering import mcl
-    from repro.core.spgemm import spgemm
-    from repro.sparse.formats import csr_from_dense
+    from repro.core.spgemm import PlanCache, spgemm, spgemm_batched
+    from repro.sparse.formats import csr_from_dense, csr_to_dense
 
     rng = np.random.default_rng(0)
     n = 256
@@ -68,11 +76,53 @@ def ci_smoke(mesh) -> None:
         _emit(f"ci_selfprod_{engine}", best * 1e6,
               f"nnz_c={res.info['nnz_c']};shards={res.info['n_shards']}")
 
+    if reuse_plan:
+        # Plan-cache-served self-product: first call plans + populates,
+        # timed calls skip Alg. 1 + Table-I binning entirely.
+        cache = PlanCache()
+        spgemm(a, a, engine="sort", mesh=mesh, plan=cache)
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            spgemm(a, a, engine="sort", mesh=mesh, plan=cache)
+            best = min(best, time.perf_counter() - t0)
+        _emit("ci_selfprod_sort_reuse", best * 1e6,
+              f"plan_hits={cache.hits};plan_misses={cache.misses}")
+
+    if batch > 1:
+        # Same-pattern value variants: one planned batched run vs a
+        # per-matrix Python loop (the amortization headline).
+        pattern = rng.random((n, n)) < 0.04
+        mats = [csr_from_dense(np.where(
+            pattern, rng.integers(1, 5, (n, n)), 0.0).astype(np.float32))
+            for _ in range(batch)]
+        b = mats[0]
+        spgemm_batched(mats, b, engine="sort", mesh=mesh)       # warm
+        for m in mats:
+            spgemm(m, b, engine="sort", mesh=mesh)              # warm
+        best_b = best_l = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            res_b = spgemm_batched(mats, b, engine="sort", mesh=mesh)
+            best_b = min(best_b, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            res_l = [spgemm(m, b, engine="sort", mesh=mesh) for m in mats]
+            best_l = min(best_l, time.perf_counter() - t0)
+        for cb, rl in zip(res_b.cs, res_l):  # artifact-path sanity
+            assert np.array_equal(np.asarray(csr_to_dense(cb)),
+                                  np.asarray(csr_to_dense(rl.c)))
+        _emit("ci_batched_sort", best_b * 1e6,
+              f"batch={batch};nnz_c={res_b.info['nnz_c']};"
+              f"shards={res_b.info['n_shards']}")
+        _emit("ci_batched_loop_sort", best_l * 1e6,
+              f"batch={batch};nnz_c={res_l[0].info['nnz_c']}")
+
     t0 = time.perf_counter()
     r = mcl(a, e=2, max_iters=2, tol=0.0, mesh=mesh)
     us = (time.perf_counter() - t0) * 1e6
     _emit("ci_mcl", us, f"iters={r.n_iterations};"
-          f"clusters={len(np.unique(r.clusters))}")
+          f"clusters={len(np.unique(r.clusters))};"
+          f"plan_hits={r.plan_cache_hits}")
 
 
 def main() -> None:
@@ -89,7 +139,16 @@ def main() -> None:
                     help="also write records as JSON (bench-smoke artifact)")
     ap.add_argument("--ci", action="store_true",
                     help="tiny synthetic smoke suite for the CI gate")
+    ap.add_argument("--batch", type=int, default=0, metavar="N",
+                    help="add batched-SpGEMM records: one plan serving N "
+                         "same-pattern value sets vs a per-matrix loop")
+    ap.add_argument("--reuse-plan", action="store_true",
+                    help="add plan-cache records (grouping skipped on "
+                         "repeated sparsity patterns)")
     args = ap.parse_args()
+    if args.batch == 1:
+        ap.error("--batch needs N >= 2 (a batch of one has no loop to "
+                 "amortize against); omit the flag to skip batched records")
     eng = args.engine
 
     if args.devices > 1:
@@ -104,7 +163,7 @@ def main() -> None:
     mesh = _make_mesh(args.devices)
 
     if args.ci:
-        ci_smoke(mesh)
+        ci_smoke(mesh, batch=args.batch, reuse_plan=args.reuse_plan)
         if args.json:
             _write_json(args.json, args)
         return
@@ -152,7 +211,18 @@ def main() -> None:
             engine=eng, gather=args.gather, mesh=mesh):
         _emit(f"mcl_{r['workload']}", r["spgemm_ms"] * 1e3,
               f"vs_dense_pct={r['reduction_vs_dense_pct']:.1f};"
-              f"clusters={r['n_clusters']}")
+              f"clusters={r['n_clusters']};plan_hits={r['plan_hits']}")
+
+    # --- Amortized batched path: one plan, N same-pattern value sets ---
+    if args.batch > 1:
+        for r in bench_graph_apps.bench_batched_selfprod(
+                names=("Economics", "Protein") if not args.full else
+                ("RoadTX", "web-Google", "Economics", "Protein"),
+                batch=args.batch, n_override=None if args.full else 1024,
+                engine=eng, gather=args.gather, mesh=mesh):
+            _emit(f"batched_{r['workload']}", r["batched_ms"] * 1e3,
+                  f"batch={r['batch']};loop_ms={r['loop_ms']:.1f};"
+                  f"speedup_x={r['speedup_x']:.2f}")
 
     # --- Fig 10/11: GNN training ---
     for r in bench_gnn.run(
@@ -178,11 +248,15 @@ def main() -> None:
 
 
 def _write_json(path: str, args) -> None:
+    from repro.core.executor import cache_stats
+
     with open(path, "w") as f:
         json.dump({
             "meta": {"devices": args.devices, "engine": args.engine,
                      "gather": args.gather, "ci": bool(args.ci),
-                     "full": bool(args.full)},
+                     "full": bool(args.full), "batch": args.batch,
+                     "reuse_plan": bool(args.reuse_plan),
+                     "cache_stats": cache_stats()},
             "records": RECORDS,
         }, f, indent=2)
     print(f"wrote {len(RECORDS)} records to {path}", file=sys.stderr)

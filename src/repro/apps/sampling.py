@@ -14,14 +14,27 @@ Returns the per-layer sampled adjacency list A^0..A^{L-1} used by layer-wise
 aggregation in mini-batch training.  Sampling randomness is host-side
 (deterministic per seed) — the data-dependent shapes make this the natural
 split, mirroring the distributed implementations the paper cites.
+
+Amortization hooks (the mini-batch regime is exactly where SpGEMM setup
+cost repeats):
+
+* ``plan_cache=`` — every SpGEMM in the chain consults one ``PlanCache``;
+  epoch-revisited mini-batches re-issue the same probability patterns
+  (Q^l is deterministic per batch), so their Algorithm-1 setups are
+  skipped.
+* ``weight_sets=`` — a stack of alternative A edge-value sets sharing A's
+  support (DropEdge-style reweightings / importance ensembles).  The
+  probability step P = Q^l · A then runs **one batched SpGEMM** over the
+  ensemble (structure shared, values differ) and samples from the
+  ensemble-averaged distribution.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.spgemm import spgemm
+from repro.core.spgemm import spgemm, spgemm_batched
 from repro.sparse.formats import CSR, csr_from_coo
 from repro.sparse.ops import csr_scale_rows, csr_transpose
 
@@ -64,13 +77,47 @@ def sample_rows(p: CSR, s: int, rng: np.random.Generator) -> np.ndarray:
 
 
 def extract(a: CSR, rows: np.ndarray, cols: np.ndarray,
-            engine: str = "sort", gather: str = "auto", mesh=None) -> CSR:
+            engine: str = "sort", gather: str = "auto", mesh=None,
+            plan_cache=None) -> CSR:
     """A[rows, cols] via SpGEMM with selection matrices: R · A · Cᵀ."""
     r = selection_matrix(rows, a.n_rows)
     c = selection_matrix(cols, a.n_cols)
-    ra = spgemm(r, a, engine=engine, gather=gather, mesh=mesh).c
+    ra = spgemm(r, a, engine=engine, gather=gather, mesh=mesh,
+                plan=plan_cache).c
     return spgemm(ra, csr_transpose(c), engine=engine, gather=gather,
-                  mesh=mesh).c
+                  mesh=mesh, plan=plan_cache).c
+
+
+def _weighted_members(a: CSR, weight_sets: np.ndarray) -> List[CSR]:
+    """CSRs sharing ``a``'s support with per-member edge values.
+
+    ``weight_sets``: (W, nnz) — one row of alternative values per member
+    (e.g. DropEdge masks as 0/scale factors).
+    """
+    import jax.numpy as jnp
+
+    weight_sets = np.asarray(weight_sets, np.asarray(a.data).dtype)
+    nnz = int(np.asarray(a.indptr)[-1])
+    if weight_sets.ndim != 2 or weight_sets.shape[1] != nnz:
+        raise ValueError(
+            f"weight_sets must be (n_members, nnz={nnz}), "
+            f"got {weight_sets.shape}")
+    cap = int(a.indices.shape[0])
+    members = []
+    for w in weight_sets:
+        data = np.zeros(cap, weight_sets.dtype)
+        data[:nnz] = w
+        members.append(CSR(a.indptr, a.indices, jnp.asarray(data), a.shape))
+    return members
+
+
+def _ensemble_mean(cs: List[CSR]) -> CSR:
+    """Average same-structure CSRs (batched-SpGEMM outputs share layout)."""
+    import jax.numpy as jnp
+
+    data = jnp.mean(jnp.stack([c.data for c in cs]), axis=0)
+    t = cs[0]
+    return CSR(t.indptr, t.indices, data, t.shape)
 
 
 def bulk_sample(
@@ -82,6 +129,8 @@ def bulk_sample(
     engine: str = "sort",
     gather: str = "auto",
     mesh=None,
+    plan_cache=None,
+    weight_sets: Optional[np.ndarray] = None,
 ) -> Tuple[List[CSR], List[np.ndarray]]:
     """GraphSAGE-style L-layer sampling for one minibatch.
 
@@ -89,20 +138,34 @@ def bulk_sample(
     Q^L..Q^0).  A^l has shape (|Q^{l+1}|, |Q^l|).  ``engine``/``gather``
     select the SpGEMM executor's accumulation engine and B-row gather;
     ``mesh`` runs every sampling-chain SpGEMM through the sharded executor.
+    ``plan_cache`` (a ``core.spgemm.PlanCache``) amortizes the chain's
+    Algorithm-1 setups across repeated calls (epochs revisit the same
+    probability patterns).  ``weight_sets`` (W, nnz) supplies an ensemble
+    of edge reweightings of A sharing its support: the probability step
+    becomes one batched SpGEMM and sampling draws from the averaged
+    distribution (``None`` = the single-matrix path, unchanged).
     """
     rng = np.random.default_rng(seed)
     frontiers = [np.asarray(batch_vertices, np.int64)]
     adjs: List[CSR] = []
     q_cur = frontiers[0]
+    members = (None if weight_sets is None
+               else _weighted_members(a, weight_sets))
     for _ in range(n_layers):
         q_mat = selection_matrix(q_cur, a.n_rows)
-        p = spgemm(q_mat, a, engine=engine, gather=gather,
-                   mesh=mesh).c                     # P = Q^l · A
+        if members is None:
+            p = spgemm(q_mat, a, engine=engine, gather=gather,
+                       mesh=mesh, plan=plan_cache).c  # P = Q^l · A
+        else:
+            # P_w = Q^l · A_w for every reweighting, one planned run
+            batch = spgemm_batched(q_mat, members, engine=engine,
+                                   gather=gather, mesh=mesh, plan=plan_cache)
+            p = _ensemble_mean(batch.cs)
         p = norm_rows(p)                            # NORM
         sampled = sample_rows(p, fanout, rng)       # SAMPLE
         q_next = np.unique(np.concatenate([q_cur, sampled]))  # self + nbrs
         adjs.append(extract(a, q_cur, q_next, engine=engine, gather=gather,
-                            mesh=mesh))
+                            mesh=mesh, plan_cache=plan_cache))
         frontiers.append(q_next)
         q_cur = q_next
     return adjs, frontiers

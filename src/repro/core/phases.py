@@ -47,6 +47,26 @@ def combine_products(cols_a, vals_a, bi, bv):
     return keys, vals
 
 
+def combine_products_batched(cols_a, vals_a_b, bi, bv_b):
+    """``combine_products`` over a leading batch of same-pattern values.
+
+    The sparsity pattern (and therefore ``keys``) is shared across the
+    batch; only the values carry the batch axis, so the key tensor is
+    computed once and the product values broadcast over it.
+
+    cols_a: (R, a_cap) shared structure; vals_a_b: (B, R, a_cap).
+    bi: (R, a_cap, kb) shared gathered B structure; bv_b: (B, R, a_cap, kb).
+    Returns keys (R, a_cap*kb) and vals (B, R, a_cap*kb).
+    """
+    r, a_cap = cols_a.shape
+    kb = bi.shape[2]
+    batch = vals_a_b.shape[0]
+    valid = (cols_a >= 0)[:, :, None] & (bi >= 0)
+    keys = jnp.where(valid, bi, -1).reshape(r, a_cap * kb)
+    vals = jnp.where(valid[None], vals_a_b[:, :, :, None] * bv_b, 0)
+    return keys, vals.reshape(batch, r, a_cap * kb)
+
+
 def enumerate_products(cols_a, vals_a, b_idx, b_val):
     """Per-row intermediate products (XLA-gather variant).
 
@@ -77,6 +97,26 @@ def gather_group_rows(indptr, indices, data, rows, a_cap):
     pos = jnp.where(ok, pos, 0)
     cols = jnp.where(ok, indices[pos], -1)
     vals = jnp.where(ok, data[pos], 0)
+    return cols, vals
+
+
+def gather_group_rows_batched(indptr, indices, data_b, rows, a_cap):
+    """``gather_group_rows`` with a leading batch of value sets.
+
+    The CSR structure (indptr/indices) is shared; ``data_b`` is (B, cap).
+    Returns (cols (R, a_cap), vals (B, R, a_cap)) — one structural gather
+    serving every batch member.
+    """
+    n_rows = indptr.shape[0] - 1
+    safe_rows = jnp.clip(rows, 0, n_rows - 1)
+    starts = indptr[safe_rows]  # (R,)
+    counts = indptr[safe_rows + 1] - starts
+    offs = jnp.arange(a_cap, dtype=jnp.int32)[None, :]
+    pos = starts[:, None] + offs
+    ok = (offs < counts[:, None]) & (rows >= 0)[:, None]
+    pos = jnp.where(ok, pos, 0)
+    cols = jnp.where(ok, indices[pos], -1)
+    vals = jnp.where(ok[None], data_b[:, pos], 0)  # (B, R, a_cap)
     return cols, vals
 
 

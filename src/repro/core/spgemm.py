@@ -13,20 +13,34 @@
 This module is a thin façade: engine registration, capacity policy, gather
 backends, the program cache, and reassembly all live in the executor.
 
+Amortized entry points (both delegate to the executor's amortization
+layer):
+
+* ``spgemm(..., plan=)`` — pass a ``GroupPlan`` to skip phase 1 outright,
+  or a ``PlanCache`` to skip it whenever the operands' sparsity patterns
+  were seen before (iterative workloads: MCL expansion at fixpoint,
+  epoch-revisited GNN mini-batches).
+* ``spgemm_batched`` — one planned pipeline run for a batch of
+  same-pattern operands (values differ, structure shared); bit-identical
+  to a per-matrix loop.
+
 ``spgemm_ell_fixed`` is the fully-jitted single-group variant (no host
 syncs) for use inside ``scan``/training graphs (MCL iterations, GNN layers).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Literal, Optional
+from typing import Dict, List, Literal, Optional, Sequence, Union
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import executor, phases
+from repro.core.executor import PlanCache
 from repro.core.grouping import GroupPlan, group_rows
 from repro.sparse.formats import CSR, ELL
+
+PlanLike = Union[GroupPlan, PlanCache, None]
 
 
 @dataclasses.dataclass
@@ -34,6 +48,29 @@ class SpGEMMResult:
     c: CSR
     plan: GroupPlan
     info: Dict[str, float]
+
+
+@dataclasses.dataclass
+class SpGEMMBatchResult:
+    """Batched product: ``cs[i] = a_batch[i] @ b_batch[i]``; every member
+    shares one output structure (indptr/indices are the same arrays)."""
+
+    cs: List[CSR]
+    plan: GroupPlan
+    info: Dict[str, float]
+
+
+def _resolve_plan(a: CSR, b: CSR, plan: PlanLike) -> GroupPlan:
+    """Phase 1, amortized: reuse a given plan, consult a PlanCache, or run
+    ``group_rows`` (the paper's per-matrix setup)."""
+    if isinstance(plan, PlanCache):
+        return plan.plan_for(a, b)
+    if isinstance(plan, GroupPlan):
+        return plan
+    if plan is not None:
+        raise TypeError(
+            f"plan must be a GroupPlan, PlanCache, or None; got {type(plan)!r}")
+    return group_rows(a, b)
 
 
 def spgemm(
@@ -45,6 +82,7 @@ def spgemm(
     engine: Optional[str] = None,
     gather: executor.Gather = "auto",
     mesh=None,
+    plan: PlanLike = None,
 ) -> SpGEMMResult:
     """C = A @ B via the paper's multi-phase pipeline (plan-compiled).
 
@@ -59,6 +97,10 @@ def spgemm(
     ``mesh`` (a ``jax.Mesh``, e.g. ``launch.mesh.make_spgemm_mesh()``)
     partitions the plan's row ranges across the mesh's devices and runs the
     group programs shard-locally; results are bit-identical to ``mesh=None``.
+    ``plan`` amortizes phase 1: a ``GroupPlan`` is used as-is (caller
+    guarantees it matches the operands' support), a ``PlanCache`` skips
+    ``group_rows`` whenever the operands' sparsity patterns were seen
+    before (hits/misses surface in ``executor.cache_stats()``).
     """
     assert a.n_cols == b.n_rows, (a.shape, b.shape)
     if engine is None:
@@ -66,17 +108,18 @@ def spgemm(
     elif method is not None and method != engine:
         raise ValueError(
             f"conflicting method={method!r} (legacy alias) and engine={engine!r}")
-    # ---- Phase 1: row grouping (one host sync, as in the paper) ----
-    plan = group_rows(a, b)
+    # ---- Phase 1: row grouping (one host sync, amortized via ``plan``) ----
+    plan = _resolve_plan(a, b, plan)
+    run_plan = plan
     if schedule == "natural":
-        plan = executor.ungrouped_plan(plan)
+        run_plan = executor.ungrouped_plan(plan)
     # ---- Phases 2+3: compiled group pipeline + vectorized reassembly ----
     c, nnz = executor.execute_plan(
-        a, b, plan, engine=engine, gather=gather, row_chunk=row_chunk,
+        a, b, run_plan, engine=engine, gather=gather, row_chunk=row_chunk,
         mesh=mesh,
     )
-    info = spgemm_info(a, b, plan, nnz, mesh=mesh)
-    return SpGEMMResult(c=c, plan=plan, info=info)
+    info = spgemm_info(a, b, run_plan, nnz, mesh=mesh)
+    return SpGEMMResult(c=c, plan=run_plan, info=info)
 
 
 def spgemm_info(a: CSR, b: CSR, plan: GroupPlan, nnz_c: int,
@@ -95,6 +138,110 @@ def spgemm_info(a: CSR, b: CSR, plan: GroupPlan, nnz_c: int,
         "group_sizes": list(plan.group_sizes),
         "max_ip": plan.max_ip,
     }
+
+
+# ---------------------------------------------------------------------------
+# Batched SpGEMM over same-pattern operands
+# ---------------------------------------------------------------------------
+
+def _as_members(x, what: str) -> List[CSR]:
+    if isinstance(x, CSR):
+        return [x]
+    members = list(x)
+    if not members:
+        raise ValueError(f"{what} must contain at least one matrix")
+    return members
+
+
+def _require_same_pattern(mats: List[CSR], what: str) -> None:
+    t = mats[0]
+    t_indptr = None
+    for i, m in enumerate(mats[1:], 1):
+        if (m.shape == t.shape and m.indptr is t.indptr
+                and m.indices is t.indices):
+            continue  # shared structure arrays (e.g. reweighted members)
+        if t_indptr is None:
+            t_indptr = np.asarray(t.indptr)
+            nnz = int(t_indptr[-1])
+            t_indices = np.asarray(t.indices)[:nnz]
+        if (m.shape != t.shape
+                or not np.array_equal(np.asarray(m.indptr), t_indptr)
+                or not np.array_equal(np.asarray(m.indices)[:nnz], t_indices)):
+            raise ValueError(
+                f"{what}[{i}] does not share {what}[0]'s sparsity pattern; "
+                "spgemm_batched requires structure-identical operands "
+                "(values may differ)")
+
+
+def _stack_values(mats: List[CSR], template: CSR, batch: int) -> np.ndarray:
+    """(batch, capacity) value stack aligned to the template's slots."""
+    cap = int(template.indices.shape[0])
+    nnz = int(np.asarray(template.indptr)[-1])
+    out = np.zeros((batch, cap), np.asarray(template.data).dtype)
+    for i in range(batch):
+        m = mats[i % len(mats)]  # len 1 broadcasts
+        out[i, :nnz] = np.asarray(m.data)[:nnz]
+    return out
+
+
+def spgemm_batched(
+    a_batch: Union[CSR, Sequence[CSR]],
+    b_batch: Union[CSR, Sequence[CSR]],
+    method: Optional[Literal["hash", "sort"]] = None,
+    row_chunk: int = 4096,
+    schedule: Literal["grouped", "natural"] = "grouped",
+    engine: Optional[str] = None,
+    gather: executor.Gather = "auto",
+    mesh=None,
+    plan: PlanLike = None,
+) -> SpGEMMBatchResult:
+    """``cs[i] = a_batch[i] @ b_batch[i]`` for same-pattern operand batches.
+
+    Either side may be a single ``CSR`` (its values are shared by every
+    batch member) or a sequence of CSRs that all share one sparsity pattern
+    (values free to differ) — the GNN mini-batch / iterative-reweighting
+    regime.  The plan runs **once** for the whole batch; enumerate keys,
+    allocation host syncs, output structure, and reassembly offsets are all
+    amortized, and only the value streams are vmapped.  Results are
+    bit-identical to looping ``spgemm`` over the members, for every
+    engine × gather combination, single- and multi-device (``mesh=``).
+    """
+    a_members = _as_members(a_batch, "a_batch")
+    b_members = _as_members(b_batch, "b_batch")
+    batch = max(len(a_members), len(b_members))
+    if len(a_members) not in (1, batch) or len(b_members) not in (1, batch):
+        raise ValueError(
+            f"batch mismatch: {len(a_members)} A members vs "
+            f"{len(b_members)} B members")
+    a, b = a_members[0], b_members[0]
+    assert a.n_cols == b.n_rows, (a.shape, b.shape)
+    if engine is None:
+        engine = method or "sort"
+    elif method is not None and method != engine:
+        raise ValueError(
+            f"conflicting method={method!r} (legacy alias) and engine={engine!r}")
+    _require_same_pattern(a_members, "a_batch")
+    _require_same_pattern(b_members, "b_batch")
+
+    plan = _resolve_plan(a, b, plan)
+    run_plan = plan
+    if schedule == "natural":
+        run_plan = executor.ungrouped_plan(plan)
+
+    a_data = _stack_values(a_members, a, batch)
+    b_data = None if len(b_members) == 1 else _stack_values(b_members, b, batch)
+    indptr, indices, data_batch, nnz = executor.execute_plan_batched(
+        a, b, a_data, b_data, run_plan, engine=engine, gather=gather,
+        row_chunk=row_chunk, mesh=mesh,
+    )
+    indptr_j = jnp.asarray(indptr)
+    indices_j = jnp.asarray(indices)
+    shape = (a.n_rows, b.n_cols)
+    cs = [CSR(indptr_j, indices_j, jnp.asarray(data_batch[i]), shape)
+          for i in range(batch)]
+    info = spgemm_info(a, b, run_plan, nnz, mesh=mesh)
+    info["batch"] = batch
+    return SpGEMMBatchResult(cs=cs, plan=run_plan, info=info)
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,7 @@
-"""Benchmark-harness correctness: locality simulator, roofline math."""
+"""Benchmark-harness correctness: locality simulator, roofline math,
+regression-gate record comparison."""
 from benchmarks.bench_locality import simulate
+from benchmarks.check_regression import compare, record_drift
 from benchmarks.roofline import (
     Roofline, model_flops, wire_bytes_per_chip, roofline_from_record,
     PEAK_FLOPS_BF16, HBM_BW,
@@ -24,6 +26,35 @@ def test_locality_round_trips_always_reduce():
     a = rmat_graph(512, 8.0, seed=0)
     r = simulate(a, cache_kib=32)
     assert r["with_aia_round_trips"] < r["without_aia_round_trips"]
+
+
+def _recs(**kw):
+    return {k: {"name": k, "us": v} for k, v in kw.items()}
+
+
+def test_check_regression_flags_only_real_regressions():
+    base = _recs(a=100.0, b=100.0, zero=0.0)
+    cur = _recs(a=150.0, b=250.0, zero=0.0)
+    regs = compare(cur, base, max_ratio=2.0)
+    assert [r[0] for r in regs] == ["b"]
+    name, cur_us, base_us, ratio = regs[0]
+    assert (cur_us, base_us, ratio) == (250.0, 100.0, 2.5)
+
+
+def test_check_regression_skips_zero_and_missing_records():
+    base = _recs(a=100.0, gone=80.0, zero=0.0)
+    cur = _recs(a=120.0, new=999999.0, zero=0.0)
+    # 'new' has no baseline, 'gone' no current, 'zero' is a counter row:
+    # none of them can regress — drift is reported separately as warnings.
+    assert compare(cur, base, max_ratio=2.0) == []
+    new, missing = record_drift(cur, base)
+    assert new == ["new"] and missing == ["gone"]
+
+
+def test_check_regression_drift_empty_when_sets_match():
+    base = _recs(a=1.0, b=2.0)
+    cur = _recs(a=1.0, b=2.0)
+    assert record_drift(cur, base) == ([], [])
 
 
 def test_roofline_terms_and_dominance():

@@ -4,16 +4,25 @@ The acceptance bar: every engine/gather combination produces *bit-identical*
 CSR output to the dense oracle (test data is integer-valued so accumulation
 order cannot introduce float noise), edge cases included, and repeated
 MCL-style iterations reuse compiled programs instead of re-tracing.
+
+The amortization layer carries its own bars: ``PlanCache`` must hit on
+same-support/different-values operands and miss when a single column index
+mutates (same nnz), converged MCL iterations must skip ``group_rows``, and
+``spgemm_batched`` must be bit-identical to a per-matrix loop for every
+engine × gather combination.
 """
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import executor
 from repro.core.grouping import group_rows
 from repro.core.ref import spgemm_dense
-from repro.core.spgemm import spgemm, spgemm_ell_fixed
+from repro.core.spgemm import (
+    PlanCache, spgemm, spgemm_batched, spgemm_ell_fixed,
+)
 from repro.sparse.formats import (
-    csr_from_dense, csr_to_dense, ell_from_dense, ell_to_dense,
+    CSR, csr_from_dense, csr_to_dense, ell_from_dense, ell_to_dense,
 )
 
 ENGINES = ("sort", "hash")
@@ -30,6 +39,14 @@ def int_sparse(rng, n, m, density=0.3):
 
 def _dense(c):
     return np.asarray(csr_to_dense(c))
+
+
+def same_pattern_batch(rng, pattern, k, lo=1, hi=5):
+    """k CSRs sharing ``pattern``'s support with independent integer values
+    (never zero, so the structure is identical by construction)."""
+    return [csr_from_dense(np.where(
+        pattern, rng.integers(lo, hi, pattern.shape), 0.0
+    ).astype(np.float32)) for _ in range(k)]
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +176,199 @@ def test_cache_keys_engine_and_gather_disjoint():
     spgemm(a, a, engine="sort", gather="aia")
     m3 = executor.cache_stats()["misses"]
     assert m1 < m2 < m3  # each axis value compiles its own programs
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: same-support reuse + invalidation
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hits_on_same_support_different_values():
+    """A converged MCL expansion keeps the support: the second lookup must
+    skip group_rows, and the counters must surface in cache_stats()."""
+    rng = np.random.default_rng(21)
+    pattern = rng.random((24, 24)) < 0.25
+    m1, m2 = same_pattern_batch(rng, pattern, 2)
+    executor.clear_program_cache()
+    cache = PlanCache()
+    r1 = spgemm(m1, m1, engine="sort", plan=cache)
+    assert cache.stats() == {"hits": 0, "misses": 1, "entries": 1}
+    r2 = spgemm(m2, m2, engine="sort", plan=cache)
+    assert cache.stats() == {"hits": 1, "misses": 1, "entries": 1}
+    stats = executor.cache_stats()
+    assert stats["plan_hits"] == 1 and stats["plan_misses"] == 1
+    # the reused plan is the *same object* — group_rows really was skipped
+    assert r2.plan is r1.plan
+    np.testing.assert_array_equal(_dense(r2.c), np.asarray(spgemm_dense(m2, m2)))
+
+
+def test_plan_cache_invalidated_by_index_mutation():
+    """Same nnz, one column index changed → different support → miss."""
+    rng = np.random.default_rng(22)
+    a = csr_from_dense(int_sparse(rng, 16, 16, 0.3))
+    b = csr_from_dense(int_sparse(rng, 16, 12, 0.3))
+    cache = PlanCache()
+    spgemm(a, b, engine="sort", plan=cache)
+    ind = np.asarray(a.indices).copy()
+    row0 = np.asarray(a.indptr)[:2]
+    assert row0[1] > row0[0], "fixture needs a nonempty row 0"
+    ind[row0[0]] = (ind[row0[0]] + 1) % a.n_cols
+    mutated = CSR(a.indptr, jnp.asarray(ind), a.data, a.shape)
+    res = spgemm(mutated, b, engine="sort", plan=cache)
+    assert cache.stats() == {"hits": 0, "misses": 2, "entries": 2}
+    np.testing.assert_array_equal(
+        _dense(res.c), np.asarray(spgemm_dense(mutated, b)))
+
+
+def test_plan_cache_keys_on_both_operands():
+    """B's support is part of the fingerprint (kb caps derive from it)."""
+    rng = np.random.default_rng(23)
+    a = csr_from_dense(int_sparse(rng, 14, 14, 0.3))
+    b1 = csr_from_dense(int_sparse(rng, 14, 10, 0.3))
+    b2 = csr_from_dense(int_sparse(rng, 14, 10, 0.3))
+    cache = PlanCache()
+    spgemm(a, b1, plan=cache)
+    spgemm(a, b2, plan=cache)
+    assert cache.misses == 2 and cache.hits == 0
+
+
+def test_plan_cache_lru_bound():
+    rng = np.random.default_rng(24)
+    cache = PlanCache(max_entries=2)
+    mats = [csr_from_dense(int_sparse(rng, 10, 10, 0.4)) for _ in range(3)]
+    for m in mats:
+        spgemm(m, m, plan=cache)
+    assert len(cache) == 2
+    spgemm(mats[0], mats[0], plan=cache)  # evicted → miss again
+    assert cache.misses == 4 and cache.hits == 0
+
+
+def test_spgemm_accepts_explicit_plan():
+    rng = np.random.default_rng(25)
+    a = csr_from_dense(int_sparse(rng, 20, 15, 0.3))
+    b = csr_from_dense(int_sparse(rng, 15, 18, 0.3))
+    plan = group_rows(a, b)
+    res = spgemm(a, b, engine="sort", plan=plan)
+    assert res.plan is plan
+    np.testing.assert_array_equal(_dense(res.c), np.asarray(spgemm_dense(a, b)))
+    with pytest.raises(TypeError, match="plan must be"):
+        spgemm(a, b, plan="yes")
+
+
+def test_converged_mcl_iterations_hit_plan_cache():
+    """The headline iterative workload: once MCL's support stabilizes,
+    further expansions must be plan-cache hits (reuse_plan=True default)."""
+    from repro.apps.markov_clustering import mcl
+
+    n = 16
+    x = np.zeros((n, n), np.float32)
+    x[:8, :8] = 1.0
+    x[8:, 8:] = 1.0
+    np.fill_diagonal(x, 0)
+    x[7, 8] = x[8, 7] = 0.1
+    g = csr_from_dense(x)
+    res = mcl(g, e=2, r=2.0, k=16, max_iters=6, tol=0.0)
+    assert res.plan_cache_hits > 0
+    off = mcl(g, e=2, r=2.0, k=16, max_iters=6, tol=0.0, reuse_plan=False)
+    assert off.plan_cache_hits == 0
+    np.testing.assert_array_equal(
+        _dense(res.matrix), _dense(off.matrix))
+    np.testing.assert_array_equal(res.clusters, off.clusters)
+
+
+# ---------------------------------------------------------------------------
+# Batched SpGEMM: bit-exact vs the per-matrix loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("gather", GATHERS)
+def test_spgemm_batched_matches_per_matrix_loop(engine, gather):
+    """The acceptance bar: batched output CSRs (values *and* layout) are
+    bit-identical to looping spgemm over the members."""
+    rng = np.random.default_rng(31)
+    pat_a = rng.random((18, 14)) < 0.3
+    pat_b = rng.random((14, 16)) < 0.35
+    a_mats = same_pattern_batch(rng, pat_a, 3)
+    b_mats = same_pattern_batch(rng, pat_b, 3)
+    res = spgemm_batched(a_mats, b_mats, engine=engine, gather=gather)
+    assert res.info["batch"] == 3
+    for i in range(3):
+        single = spgemm(a_mats[i], b_mats[i], engine=engine, gather=gather)
+        np.testing.assert_array_equal(
+            np.asarray(res.cs[i].indptr), np.asarray(single.c.indptr))
+        np.testing.assert_array_equal(
+            np.asarray(res.cs[i].indices), np.asarray(single.c.indices))
+        np.testing.assert_array_equal(
+            np.asarray(res.cs[i].data), np.asarray(single.c.data))
+        np.testing.assert_array_equal(
+            _dense(res.cs[i]), np.asarray(spgemm_dense(a_mats[i], b_mats[i])))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_spgemm_batched_shared_b_broadcast(engine):
+    """A single CSR on either side broadcasts its values to every member."""
+    rng = np.random.default_rng(32)
+    pat_a = rng.random((16, 12)) < 0.3
+    a_mats = same_pattern_batch(rng, pat_a, 4)
+    b = csr_from_dense(int_sparse(rng, 12, 10, 0.35))
+    res = spgemm_batched(a_mats, b, engine=engine)
+    for i in range(4):
+        single = spgemm(a_mats[i], b, engine=engine)
+        np.testing.assert_array_equal(_dense(res.cs[i]), _dense(single.c))
+    # and the symmetric case: one A, many B
+    b_mats = same_pattern_batch(rng, rng.random((12, 10)) < 0.35, 2)
+    a = a_mats[0]
+    res2 = spgemm_batched(a, b_mats, engine=engine)
+    for i in range(2):
+        np.testing.assert_array_equal(
+            _dense(res2.cs[i]), _dense(spgemm(a, b_mats[i], engine=engine).c))
+
+
+def test_spgemm_batched_output_structure_is_shared():
+    rng = np.random.default_rng(33)
+    a_mats = same_pattern_batch(rng, rng.random((15, 15)) < 0.3, 3)
+    res = spgemm_batched(a_mats, a_mats[0], engine="sort")
+    assert all(c.indptr is res.cs[0].indptr for c in res.cs)
+    assert all(c.indices is res.cs[0].indices for c in res.cs)
+
+
+def test_spgemm_batched_natural_schedule_and_empty():
+    rng = np.random.default_rng(34)
+    a_mats = same_pattern_batch(rng, rng.random((12, 10)) < 0.3, 2)
+    b = csr_from_dense(int_sparse(rng, 10, 8, 0.3))
+    res = spgemm_batched(a_mats, b, engine="sort", schedule="natural")
+    for i in range(2):
+        np.testing.assert_array_equal(
+            _dense(res.cs[i]), np.asarray(spgemm_dense(a_mats[i], b)))
+    # all-zero members: nnz_c == 0, shapes intact
+    z = csr_from_dense(np.zeros((6, 5), np.float32))
+    rz = spgemm_batched([z, z], csr_from_dense(int_sparse(rng, 5, 4, 0.5)))
+    assert rz.info["nnz_c"] == 0
+    np.testing.assert_array_equal(_dense(rz.cs[1]), np.zeros((6, 4)))
+
+
+def test_spgemm_batched_rejects_mismatched_patterns():
+    rng = np.random.default_rng(35)
+    a1 = csr_from_dense(int_sparse(rng, 10, 10, 0.3))
+    a2 = csr_from_dense(int_sparse(rng, 10, 10, 0.3))
+    b = csr_from_dense(int_sparse(rng, 10, 8, 0.3))
+    with pytest.raises(ValueError, match="sparsity pattern"):
+        spgemm_batched([a1, a2], b)
+    with pytest.raises(ValueError, match="batch mismatch"):
+        spgemm_batched([a1, a1], [b, b, b])
+
+
+def test_spgemm_batched_amortizes_allocation_and_plan():
+    """One batched call shares the allocate programs with the unbatched
+    path (same signature) and a PlanCache feeds both entry points."""
+    rng = np.random.default_rng(36)
+    pat = rng.random((20, 20)) < 0.25
+    mats = same_pattern_batch(rng, pat, 3)
+    cache = PlanCache()
+    spgemm(mats[0], mats[0], engine="sort", plan=cache)
+    res = spgemm_batched(mats, mats[0], engine="sort", plan=cache)
+    assert cache.hits == 1  # batched call reused the single-matrix plan
+    np.testing.assert_array_equal(
+        _dense(res.cs[1]), np.asarray(spgemm_dense(mats[1], mats[0])))
 
 
 # ---------------------------------------------------------------------------

@@ -51,6 +51,75 @@ def test_sample_rows_subset_and_deterministic():
     assert set(s1.tolist()) <= support  # sampled ⊆ neighbors
 
 
+def test_bulk_sample_plan_cache_hits_on_repeat():
+    """Epoch-revisited mini-batches: the second identical call's SpGEMM
+    chain must be served from the PlanCache (same patterns throughout)."""
+    from repro.core.spgemm import PlanCache
+
+    g = rmat_graph(96, 5.0, seed=5)
+    batch = np.asarray([1, 4, 9])
+    cache = PlanCache()
+    a0, f0 = bulk_sample(g, batch, fanout=2, n_layers=2, seed=3,
+                         plan_cache=cache)
+    misses_after_first = cache.misses
+    hits_after_first = cache.hits  # P = Q·A and extract's R·A share a
+    assert misses_after_first > 0  # pattern, so intra-call hits are fine
+    a1, f1 = bulk_sample(g, batch, fanout=2, n_layers=2, seed=3,
+                         plan_cache=cache)
+    assert cache.misses == misses_after_first, "repeat call re-planned"
+    assert cache.hits == 2 * hits_after_first + misses_after_first
+    # cache must not change results
+    for u, v in zip(f0, f1):
+        np.testing.assert_array_equal(u, v)
+    for u, v in zip(a0, a1):
+        np.testing.assert_array_equal(
+            np.asarray(csr_to_dense(u)), np.asarray(csr_to_dense(v)))
+
+
+def test_bulk_sample_weight_ensemble_identity():
+    """An ensemble of identical weight copies must reproduce the
+    single-matrix path exactly (mean of 2 equal floats is exact), while
+    routing the probability step through the batched executor."""
+    from repro.core import executor
+
+    g = rmat_graph(96, 5.0, seed=6)
+    batch = np.asarray([0, 2, 5, 7])
+    nnz = int(np.asarray(g.indptr)[-1])
+    ws = np.stack([np.asarray(g.data)[:nnz]] * 2)
+    a0, f0 = bulk_sample(g, batch, fanout=2, n_layers=2, seed=1)
+    executor.clear_program_cache()
+    a1, f1 = bulk_sample(g, batch, fanout=2, n_layers=2, seed=1,
+                         weight_sets=ws)
+    for u, v in zip(f0, f1):
+        np.testing.assert_array_equal(u, v)
+    for u, v in zip(a0, a1):
+        np.testing.assert_array_equal(
+            np.asarray(csr_to_dense(u)), np.asarray(csr_to_dense(v)))
+
+
+def test_bulk_sample_weight_ensemble_reweights_probabilities():
+    """A member with zeroed weights halves the averaged distribution's
+    support contribution; the call must still produce valid frontiers."""
+    g = rmat_graph(64, 4.0, seed=7)
+    nnz = int(np.asarray(g.indptr)[-1])
+    base = np.asarray(g.data)[:nnz]
+    ws = np.stack([base, base * 3.0])
+    adjs, frontiers = bulk_sample(g, np.asarray([0, 1]), fanout=2,
+                                  n_layers=1, seed=2, weight_sets=ws)
+    assert len(adjs) == 1 and len(frontiers) == 2
+    g_dense = np.asarray(csr_to_dense(g))
+    np.testing.assert_allclose(
+        np.asarray(csr_to_dense(adjs[0])),
+        g_dense[np.ix_(frontiers[0], frontiers[1])], rtol=1e-5)
+
+
+def test_bulk_sample_weight_sets_shape_validated():
+    g = rmat_graph(32, 3.0, seed=8)
+    with pytest.raises(ValueError, match="weight_sets"):
+        bulk_sample(g, np.asarray([0]), fanout=2, n_layers=1,
+                    weight_sets=np.ones((2, 3), np.float32))
+
+
 def test_bulk_sample_chain():
     g = rmat_graph(128, 6.0, seed=4)
     batch = np.asarray([0, 1, 2, 3])
