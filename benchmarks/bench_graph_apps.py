@@ -9,6 +9,7 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
+import jax
 import numpy as np
 
 from repro.apps.graph_contraction import graph_contraction, label_matrix
@@ -20,14 +21,18 @@ from repro.sparse.formats import csr_to_dense
 def _wall(f, reps=1):
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = f()
+        # async dispatch: drain device work before stopping the clock
+        # (pytree-aware; non-array leaves like result dataclasses pass
+        # through untouched)
+        out = jax.block_until_ready(f())
     return (time.perf_counter() - t0) / reps, out
 
 
 def bench_contraction(names=("RoadTX", "web-Google", "Economics", "amazon0601",
                              "WindTunnel", "Protein"),
                       n_override=None, engine="sort",
-                      gather="auto", mesh=None) -> List[Dict]:
+                      gather="auto", mesh=None,
+                      pipeline="two_wave") -> List[Dict]:
     rows = []
     rng = np.random.default_rng(0)
     for name in names:
@@ -35,7 +40,7 @@ def bench_contraction(names=("RoadTX", "web-Google", "Economics", "amazon0601",
         labels = rng.integers(0, max(g.n_rows // 64, 2), g.n_rows)
         t_sp, (c, infos) = _wall(
             lambda: graph_contraction(g, labels, engine, gather=gather,
-                                      mesh=mesh))
+                                      mesh=mesh, pipeline=pipeline))
         # dense baseline: S G S^T with dense matmuls
         s = csr_to_dense(label_matrix(labels, n=g.n_rows))
         gd = csr_to_dense(g)
@@ -51,13 +56,15 @@ def bench_contraction(names=("RoadTX", "web-Google", "Economics", "amazon0601",
 
 def bench_mcl(names=("web-Google", "Economics", "Protein"),
               max_iters=3, n_override=None, engine="sort",
-              gather="auto", mesh=None, reuse_plan=True) -> List[Dict]:
+              gather="auto", mesh=None, reuse_plan=True,
+              pipeline="two_wave") -> List[Dict]:
     rows = []
     for name in names:
         g = table_ii_matrix(name, n_override=n_override)
         t_sp, res = _wall(lambda: mcl(g, e=2, max_iters=max_iters, tol=0.0,
                                       method=engine, gather=gather,
-                                      mesh=mesh, reuse_plan=reuse_plan))
+                                      mesh=mesh, reuse_plan=reuse_plan,
+                                      pipeline=pipeline))
         # dense baseline: same loop with dense matmul expansion
         import jax.numpy as jnp
         from repro.apps.markov_clustering import add_self_loops
@@ -86,7 +93,7 @@ def bench_mcl(names=("web-Google", "Economics", "Protein"),
 
 def bench_batched_selfprod(names=("Economics", "Protein"), batch=4,
                            n_override=None, engine="sort", gather="auto",
-                           mesh=None) -> List[Dict]:
+                           mesh=None, pipeline="two_wave") -> List[Dict]:
     """Amortized batched SpGEMM vs a per-matrix loop (same-pattern batch).
 
     Each workload's matrix spawns ``batch`` value variants sharing its
@@ -105,13 +112,17 @@ def bench_batched_selfprod(names=("Economics", "Protein"), batch=4,
         weights = np.asarray(g.data)[None, :nnz] * rng.uniform(
             0.5, 1.5, (batch, nnz)).astype(np.float32)
         members = _weighted_members(g, weights)
-        spgemm_batched(members, g, engine=engine, gather=gather, mesh=mesh)
+        spgemm_batched(members, g, engine=engine, gather=gather, mesh=mesh,
+                       pipeline=pipeline)
         for m in members:
-            spgemm(m, g, engine=engine, gather=gather, mesh=mesh)
+            spgemm(m, g, engine=engine, gather=gather, mesh=mesh,
+                   pipeline=pipeline)
         t_batched, res = _wall(lambda: spgemm_batched(
-            members, g, engine=engine, gather=gather, mesh=mesh))
+            members, g, engine=engine, gather=gather, mesh=mesh,
+            pipeline=pipeline))
         t_loop, _ = _wall(lambda: [spgemm(
-            m, g, engine=engine, gather=gather, mesh=mesh) for m in members])
+            m, g, engine=engine, gather=gather, mesh=mesh,
+            pipeline=pipeline) for m in members])
         rows.append({
             "workload": name, "n": g.n_rows, "batch": batch,
             "batched_ms": t_batched * 1e3, "loop_ms": t_loop * 1e3,

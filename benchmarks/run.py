@@ -18,6 +18,12 @@ Amortized paths: ``--batch N`` adds batched-vs-looped SpGEMM records
 calls) and ``--reuse-plan`` adds a plan-cache-served self-product record;
 both also fold the executor's ``cache_stats()`` into the JSON meta so CI
 can assert nonzero plan-cache hits from the artifact alone.
+
+Pipelining: the CI smoke always emits a ``ci_selfprod_pipelined`` vs
+``ci_selfprod_legacy`` pair on a forced multi-chunk plan and writes a
+``pipeline_probe`` into the JSON meta (blocking allocate syncs per call on
+each path) so the workflow can gate ``host_sync_count`` ≤ waves, not
+per-chunk; ``--pipeline`` switches the sync structure for the full suite.
 """
 from __future__ import annotations
 
@@ -28,6 +34,9 @@ import sys
 import time
 
 RECORDS: list = []
+# Filled by the CI smoke's pipeline probe; written into the JSON meta so the
+# workflow can gate host_sync_count ≤ waves (not per-chunk) from the artifact.
+PIPELINE_PROBE: dict = {}
 
 
 def _emit(name, us, derived):
@@ -44,7 +53,8 @@ def _make_mesh(n_devices: int):
     return make_spgemm_mesh(n_devices)
 
 
-def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False) -> None:
+def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
+             pipeline: str = "two_wave") -> None:
     """Tiny synthetic-graph smoke run for the bench-smoke CI job.
 
     One spgemm self-product and a 2-iteration MCL on a 256-node random
@@ -52,8 +62,11 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False) -> None:
     pathological slowdown (re-tracing per iteration, broken cache keys)
     blows past the 2x regression gate.  ``batch``/``reuse_plan`` add the
     amortized-path records (batched vs per-matrix loop; plan-cache-served
-    self-product) the workflow asserts on.
+    self-product) the workflow asserts on.  ``pipeline`` switches the
+    executor sync structure for every record except the explicit
+    pipelined-vs-legacy probe pair, which always runs both paths.
     """
+    import jax
     import numpy as np
     from repro.apps.markov_clustering import mcl
     from repro.core.spgemm import PlanCache, spgemm, spgemm_batched
@@ -66,25 +79,56 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False) -> None:
     a = csr_from_dense(x)
 
     for engine in ("sort", "hash"):
-        spgemm(a, a, engine=engine, mesh=mesh)  # warm the program cache
+        spgemm(a, a, engine=engine, mesh=mesh,
+               pipeline=pipeline)  # warm the program cache
         # min over reps: the noise-robust statistic for a shared CI runner
         best = float("inf")
         for _ in range(3):
             t0 = time.perf_counter()
-            res = spgemm(a, a, engine=engine, mesh=mesh)
+            res = spgemm(a, a, engine=engine, mesh=mesh, pipeline=pipeline)
+            jax.block_until_ready(res.c)  # async dispatch: time ALL the work
             best = min(best, time.perf_counter() - t0)
         _emit(f"ci_selfprod_{engine}", best * 1e6,
               f"nnz_c={res.info['nnz_c']};shards={res.info['n_shards']}")
+
+    # Two-wave vs legacy pipeline on a deliberately multi-chunk plan
+    # (row_chunk=64 on a 256-row graph): the probe counts the blocking
+    # allocate syncs of one call on each path — the pipelined one must pay
+    # per *wave* (≤ 1), the legacy one per chunk.
+    from repro.core.executor import cache_stats
+
+    for pipe in ("two_wave", "legacy"):
+        spgemm(a, a, engine="sort", mesh=mesh, row_chunk=64,
+               pipeline=pipe)  # warm
+        s0 = cache_stats()["host_sync_count"]
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            res = spgemm(a, a, engine="sort", mesh=mesh, row_chunk=64,
+                         pipeline=pipe)
+            jax.block_until_ready(res.c)  # the benchmark's sync, not the
+            # executor's: host_sync_count only counts pipeline-internal syncs
+            best = min(best, time.perf_counter() - t0)
+        syncs = (cache_stats()["host_sync_count"] - s0) // 3
+        name = "ci_selfprod_pipelined" if pipe == "two_wave" \
+            else "ci_selfprod_legacy"
+        _emit(name, best * 1e6,
+              f"host_syncs={syncs};nnz_c={res.info['nnz_c']};"
+              f"shards={res.info['n_shards']}")
+        key = "host_syncs_pipelined" if pipe == "two_wave" \
+            else "host_syncs_legacy"
+        PIPELINE_PROBE[key] = syncs
 
     if reuse_plan:
         # Plan-cache-served self-product: first call plans + populates,
         # timed calls skip Alg. 1 + Table-I binning entirely.
         cache = PlanCache()
-        spgemm(a, a, engine="sort", mesh=mesh, plan=cache)
+        spgemm(a, a, engine="sort", mesh=mesh, plan=cache, pipeline=pipeline)
         best = float("inf")
         for _ in range(3):
             t0 = time.perf_counter()
-            spgemm(a, a, engine="sort", mesh=mesh, plan=cache)
+            jax.block_until_ready(spgemm(a, a, engine="sort", mesh=mesh,
+                                         plan=cache, pipeline=pipeline).c)
             best = min(best, time.perf_counter() - t0)
         _emit("ci_selfprod_sort_reuse", best * 1e6,
               f"plan_hits={cache.hits};plan_misses={cache.misses}")
@@ -97,16 +141,21 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False) -> None:
             pattern, rng.integers(1, 5, (n, n)), 0.0).astype(np.float32))
             for _ in range(batch)]
         b = mats[0]
-        spgemm_batched(mats, b, engine="sort", mesh=mesh)       # warm
+        spgemm_batched(mats, b, engine="sort", mesh=mesh,
+                       pipeline=pipeline)                       # warm
         for m in mats:
-            spgemm(m, b, engine="sort", mesh=mesh)              # warm
+            spgemm(m, b, engine="sort", mesh=mesh, pipeline=pipeline)  # warm
         best_b = best_l = float("inf")
         for _ in range(3):
             t0 = time.perf_counter()
-            res_b = spgemm_batched(mats, b, engine="sort", mesh=mesh)
+            res_b = spgemm_batched(mats, b, engine="sort", mesh=mesh,
+                                   pipeline=pipeline)
+            jax.block_until_ready(res_b.cs)
             best_b = min(best_b, time.perf_counter() - t0)
             t0 = time.perf_counter()
-            res_l = [spgemm(m, b, engine="sort", mesh=mesh) for m in mats]
+            res_l = [spgemm(m, b, engine="sort", mesh=mesh,
+                            pipeline=pipeline) for m in mats]
+            jax.block_until_ready([r.c for r in res_l])
             best_l = min(best_l, time.perf_counter() - t0)
         for cb, rl in zip(res_b.cs, res_l):  # artifact-path sanity
             assert np.array_equal(np.asarray(csr_to_dense(cb)),
@@ -118,7 +167,7 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False) -> None:
               f"batch={batch};nnz_c={res_l[0].info['nnz_c']}")
 
     t0 = time.perf_counter()
-    r = mcl(a, e=2, max_iters=2, tol=0.0, mesh=mesh)
+    r = mcl(a, e=2, max_iters=2, tol=0.0, mesh=mesh, pipeline=pipeline)
     us = (time.perf_counter() - t0) * 1e6
     _emit("ci_mcl", us, f"iters={r.n_iterations};"
           f"clusters={len(np.unique(r.clusters))};"
@@ -132,6 +181,11 @@ def main() -> None:
                     help="accumulation engine for the SpGEMM benchmarks")
     ap.add_argument("--gather", default="xla", choices=("auto", "xla", "aia"),
                     help="B-row gather backend (Fig. 7 ablation axis)")
+    ap.add_argument("--pipeline", default="two_wave",
+                    choices=("two_wave", "legacy"),
+                    help="executor sync structure: two_wave = one coalesced "
+                         "allocate sync + device-side reassembly; legacy = "
+                         "per-chunk syncs + NumPy reassembly (A/B baseline)")
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the SpGEMM executor over N forced host "
                          "devices (sets XLA_FLAGS before importing jax)")
@@ -163,7 +217,8 @@ def main() -> None:
     mesh = _make_mesh(args.devices)
 
     if args.ci:
-        ci_smoke(mesh, batch=args.batch, reuse_plan=args.reuse_plan)
+        ci_smoke(mesh, batch=args.batch, reuse_plan=args.reuse_plan,
+                 pipeline=args.pipeline)
         if args.json:
             _write_json(args.json, args)
         return
@@ -200,7 +255,8 @@ def main() -> None:
             ("RoadTX", "web-Google", "Economics", "amazon0601",
              "WindTunnel", "Protein"),
             n_override=None if args.full else 1024,
-            engine=eng, gather=args.gather, mesh=mesh):
+            engine=eng, gather=args.gather, mesh=mesh,
+            pipeline=args.pipeline):
         _emit(f"contraction_{r['workload']}", r["spgemm_ms"] * 1e3,
               f"vs_dense_pct={r['reduction_vs_dense_pct']:.1f};ip={r['total_ip']}")
     for r in bench_graph_apps.bench_mcl(
@@ -208,7 +264,8 @@ def main() -> None:
             ("web-Google", "Economics", "Protein"),
             max_iters=2 if not args.full else 3,
             n_override=None if args.full else 1024,
-            engine=eng, gather=args.gather, mesh=mesh):
+            engine=eng, gather=args.gather, mesh=mesh,
+            pipeline=args.pipeline):
         _emit(f"mcl_{r['workload']}", r["spgemm_ms"] * 1e3,
               f"vs_dense_pct={r['reduction_vs_dense_pct']:.1f};"
               f"clusters={r['n_clusters']};plan_hits={r['plan_hits']}")
@@ -219,7 +276,8 @@ def main() -> None:
                 names=("Economics", "Protein") if not args.full else
                 ("RoadTX", "web-Google", "Economics", "Protein"),
                 batch=args.batch, n_override=None if args.full else 1024,
-                engine=eng, gather=args.gather, mesh=mesh):
+                engine=eng, gather=args.gather, mesh=mesh,
+                pipeline=args.pipeline):
             _emit(f"batched_{r['workload']}", r["batched_ms"] * 1e3,
                   f"batch={r['batch']};loop_ms={r['loop_ms']:.1f};"
                   f"speedup_x={r['speedup_x']:.2f}")
@@ -250,15 +308,15 @@ def main() -> None:
 def _write_json(path: str, args) -> None:
     from repro.core.executor import cache_stats
 
+    meta = {"devices": args.devices, "engine": args.engine,
+            "gather": args.gather, "ci": bool(args.ci),
+            "full": bool(args.full), "batch": args.batch,
+            "reuse_plan": bool(args.reuse_plan),
+            "cache_stats": cache_stats()}
+    if PIPELINE_PROBE:
+        meta["pipeline_probe"] = dict(PIPELINE_PROBE)
     with open(path, "w") as f:
-        json.dump({
-            "meta": {"devices": args.devices, "engine": args.engine,
-                     "gather": args.gather, "ci": bool(args.ci),
-                     "full": bool(args.full), "batch": args.batch,
-                     "reuse_plan": bool(args.reuse_plan),
-                     "cache_stats": cache_stats()},
-            "records": RECORDS,
-        }, f, indent=2)
+        json.dump({"meta": meta, "records": RECORDS}, f, indent=2)
     print(f"wrote {len(RECORDS)} records to {path}", file=sys.stderr)
 
 

@@ -205,6 +205,7 @@ def train_gnn_minibatch(
     mesh=None,
     weight_sets: Optional[np.ndarray] = None,
     reuse_plan: bool = True,
+    pipeline: str = "two_wave",
 ) -> Tuple[Dict, List[float], Dict[str, int]]:
     """Mini-batch training on ``bulk_sample`` subgraph chains.
 
@@ -219,8 +220,10 @@ def train_gnn_minibatch(
     the sampler's planning cost is amortized away (hits reported in the
     stats).  ``weight_sets``
     forwards an edge-reweighting ensemble to ``bulk_sample``, turning each
-    probability product into one batched SpGEMM.  ``a`` should already be
-    normalized as the architecture expects (e.g. ``normalize_adjacency``).
+    probability product into one batched SpGEMM.  ``pipeline`` forwards
+    the executor sync structure to every sampling-chain SpGEMM.  ``a``
+    should already be normalized as the architecture expects
+    (e.g. ``normalize_adjacency``).
     """
     from repro.apps.sampling import bulk_sample
     from repro.core.spgemm import PlanCache
@@ -248,6 +251,7 @@ def train_gnn_minibatch(
                 seed=seed * 100_000 + bi,
                 engine=engine, gather=cfg.gather, mesh=mesh,
                 plan_cache=plan_cache, weight_sets=weight_sets,
+                pipeline=pipeline,
             )
             y = jnp.asarray(labels_np[frontiers[0]])
 

@@ -86,6 +86,7 @@ def mcl(
     schedule: str = "grouped",
     mesh=None,
     reuse_plan: bool = True,
+    pipeline: str = "two_wave",
 ) -> MCLResult:
     """Algorithm 6.  ``e=2`` expansion = one SpGEMM self-product per iter.
 
@@ -99,6 +100,9 @@ def mcl(
     value convergence), every further iteration skips Algorithm 1 IP
     counting and Table-I binning entirely — the hit count is reported as
     ``MCLResult.plan_cache_hits``.
+    ``pipeline`` selects the executor sync structure (``"two_wave"`` =
+    one coalesced allocate sync + device-side reassembly per expansion;
+    ``"legacy"`` = the per-chunk-sync reference path).
     """
     a = add_self_loops(g)
     a = csr_column_normalize(a)
@@ -111,7 +115,8 @@ def mcl(
         b = a
         for _ in range(e - 1):
             res = spgemm(b, a, engine=method, gather=gather,
-                         schedule=schedule, mesh=mesh, plan=plan_cache)
+                         schedule=schedule, mesh=mesh, plan=plan_cache,
+                         pipeline=pipeline)
             infos.append(res.info)
             b = res.c
         # Prune: drop < theta, keep top-k per column

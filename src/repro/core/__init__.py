@@ -15,8 +15,9 @@ MXU-native block variant used by the LM integration.
 from repro.core.ip_count import intermediate_products, ip_histogram
 from repro.core.grouping import group_rows, GroupPlan, TABLE_I
 from repro.core.executor import (
-    Engine, available_engines, cache_stats, clear_program_cache,
-    execute_plan, get_engine, register_engine, resolve_gather,
+    Engine, OperandCache, PlanCache, available_engines, cache_stats,
+    clear_program_cache, execute_plan, get_engine, register_engine,
+    resolve_gather,
 )
 from repro.core.spgemm import spgemm, spgemm_info, SpGEMMResult
 from repro.core.spgemm_bsr import bsr_spgemm_dense_rhs
@@ -26,6 +27,7 @@ __all__ = [
     "group_rows", "GroupPlan", "TABLE_I",
     "Engine", "register_engine", "get_engine", "available_engines",
     "execute_plan", "resolve_gather", "cache_stats", "clear_program_cache",
+    "OperandCache", "PlanCache",
     "spgemm", "spgemm_info", "SpGEMMResult",
     "bsr_spgemm_dense_rhs",
 ]

@@ -27,20 +27,39 @@ Three pluggable axes, each resolved per group:
 
 Per group-chunk the executor runs three cached programs — *enumerate*
 (A-row gather → B-row gather → intermediate products; output stays on
-device), *allocate* (Algorithms 2/3: uniqueCount, one host sync to size the
-output), and *accumulate* (Algorithm 5 on the same device-resident keys).
-Programs live in a module-level cache keyed on every static quantity that
-shapes their trace: ``(padded_rows, a_cap, kb_cap, table_cap, out_cap,
-engine, gather, dtype)``.  ``a_cap``/``kb_cap`` stay exact (their product is
-the sort engine's dominant cost — rounding it up is superlinearly
-expensive) while ``out_cap`` is pow2-quantized and row chunks are padded to
-a fixed quantum, so iterative workloads (MCL expansion, GNN layers) hit the
-cache instead of re-tracing; ``cache_stats()`` exposes hit/miss counters
-for tests and benchmarks.
+device), *allocate* (Algorithms 2/3: uniqueCount), and *accumulate*
+(Algorithm 5 on the same device-resident keys) — plus a fourth, the
+*scatter* epilogue that reassembles the CSR on device.  Programs live in a
+module-level cache keyed on every static quantity that shapes their trace:
+``(padded_rows, a_cap, kb_cap, table_cap, out_cap, engine, gather,
+dtype)``.  ``a_cap``/``kb_cap`` stay exact (their product is the sort
+engine's dominant cost — rounding it up is superlinearly expensive) while
+``out_cap`` and the epilogue's total-nnz capacity are pow2-quantized and
+row chunks are padded to a fixed quantum, so iterative workloads (MCL
+expansion, GNN layers) hit the cache instead of re-tracing;
+``cache_stats()`` exposes hit/miss counters for tests and benchmarks.
 
-CSR reassembly is a vectorized inverse-permutation scatter: per group-chunk
-output block, flat destination offsets are computed from the (host) indptr
-and written with one boolean-mask scatter — no ``out_cols[r]`` row loop.
+**Two-wave pipelining**: the blocking point of the whole flow is the
+allocate sizing — the host must learn uniqueCount before it can pick
+``out_cap``.  Instead of paying that sync once per group-chunk (which
+serializes multi-chunk and multi-shard runs on the host exactly where the
+paper's AIA pipeline overlaps memory traffic with compute), wave 1
+dispatches *every* chunk's enumerate + allocate programs across all shards
+without syncing, then one coalesced ``jax.block_until_ready`` over the
+stacked uniqueCounts sizes every ``out_cap`` at once; wave 2 runs
+accumulate on the already-device-resident keys.  ``cache_stats()`` reports
+``host_sync_count`` — exactly one per ``execute_plan`` call on this path,
+and CI gates on it.  ``pipeline="legacy"`` keeps the per-chunk-sync
+reference path for A/B benchmarks and equivalence tests.
+
+CSR reassembly is a vectorized inverse-permutation scatter.  The two-wave
+path runs it as a jitted device epilogue (``phases.reassemble_device``):
+flat destination offsets derive from the (host) indptr, and each chunk's
+rows are scattered into pow2-quantized int32 ``indices`` / ``data``
+buffers *on device* — shard outputs merge device-side and ``np``
+conversion happens only when the caller materializes the CSR (nnz beyond
+int32 raises instead of silently downcasting).  The legacy path keeps the
+host-side NumPy scatter.
 
 **Sharded multi-device execution** (``mesh=``): the paper's AIA scheduling
 partitions SpGEMM work so each memory stack serves *local* indirection
@@ -76,12 +95,16 @@ different values.  Two mechanisms exploit that:
   partition.
 * ``execute_plan_batched`` — runs the plan once for a whole batch of
   same-pattern operands (values differ, structure shared).  The key
-  tensor, allocation sizing (the per-chunk host sync!), output structure,
+  tensor, allocation sizing (the coalesced host sync), output structure,
   and reassembly offsets are computed once per chunk for the entire batch;
   only the value streams are vmapped through the cached accumulate
   programs.  Under ``mesh=`` the batch rides the same shard assignment as
   the single-matrix path, and results are bit-identical to a per-matrix
   Python loop for every engine × gather combination.
+* ``OperandCache`` — B's replicated ELL buffers (conversion + per-shard
+  placement) keyed on the operand's identity and the device set, shared
+  across batched/iterative calls instead of re-replicated per call;
+  ``operand_hits``/``operand_misses`` in ``cache_stats()``.
 """
 from __future__ import annotations
 
@@ -98,11 +121,12 @@ import numpy as np
 
 from repro.core import phases
 from repro.core.grouping import GroupPlan, group_rows
-from repro.launch.sharding import replicate_to, shard_devices
+from repro.launch.sharding import merge_device, replicate_to, shard_devices
 from repro.sparse.formats import CSR, ELL, csr_to_ell
 
 Gather = Literal["auto", "xla", "aia"]
 Schedule = Literal["grouped", "natural"]
+Pipeline = Literal["two_wave", "legacy"]
 
 # Rows per program dispatch are padded to a multiple of this so repeated
 # calls with slightly different group sizes reuse compiled programs.
@@ -252,22 +276,44 @@ BATCHED_GATHERS: Dict[str, Callable] = {
 _PROGRAM_CACHE: Dict[tuple, Callable] = {}
 _CACHE_STATS = {"hits": 0, "misses": 0}
 _PLAN_STATS = {"plan_hits": 0, "plan_misses": 0}
+# One increment per *blocking* host synchronization.  The two-wave pipeline
+# pays exactly one per execute_plan call (the coalesced allocate sync); the
+# legacy pipeline pays one per group-chunk.  CI gates on this.
+_SYNC_STATS = {"host_sync_count": 0}
+# OperandCache lookups: a hit means the B-side replicated ELL buffers were
+# served without any re-replication (zero device transfers).
+_OPERAND_STATS = {"operand_hits": 0, "operand_misses": 0}
 
 
 def cache_stats() -> Dict[str, int]:
-    """Global cache counters: jitted-program ``hits``/``misses`` plus the
-    plan-cache ``plan_hits``/``plan_misses`` (every ``PlanCache`` instance
-    folds its lookups into the same counters)."""
-    return {**_CACHE_STATS, **_PLAN_STATS}
+    """Global cache counters: jitted-program ``hits``/``misses``, plan-cache
+    ``plan_hits``/``plan_misses`` (every ``PlanCache`` instance folds its
+    lookups into the same counters), the pipeline's blocking
+    ``host_sync_count``, and the B-operand replication cache's
+    ``operand_hits``/``operand_misses``."""
+    return {**_CACHE_STATS, **_PLAN_STATS, **_SYNC_STATS, **_OPERAND_STATS}
 
 
 def clear_program_cache() -> None:
     _PROGRAM_CACHE.clear()
     _PARTITION_CACHE.clear()
+    _OPERAND_CACHE.clear()
     _CACHE_STATS["hits"] = 0
     _CACHE_STATS["misses"] = 0
     _PLAN_STATS["plan_hits"] = 0
     _PLAN_STATS["plan_misses"] = 0
+    _SYNC_STATS["host_sync_count"] = 0
+    _OPERAND_STATS["operand_hits"] = 0
+    _OPERAND_STATS["operand_misses"] = 0
+
+
+def _coalesced_sync(arrays: Sequence[jax.Array]) -> List[np.ndarray]:
+    """The pipeline's single blocking host sync: every pending device
+    computation was already dispatched, so one ``block_until_ready`` over
+    the whole list drains them together instead of serializing per chunk."""
+    _SYNC_STATS["host_sync_count"] += 1
+    arrays = jax.block_until_ready(list(arrays))
+    return [np.asarray(x) for x in arrays]
 
 
 # ---------------------------------------------------------------------------
@@ -335,6 +381,88 @@ class PlanCache:
                 "entries": len(self._entries)}
 
 
+# ---------------------------------------------------------------------------
+# Operand cache — B-side replicated ELL buffers shared across calls
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _OperandEntry:
+    """Cached B operands: the ELL conversion plus its per-shard replicas.
+
+    ``source`` pins the origin CSR arrays so their ``id()``s (the cache key)
+    cannot be recycled while the entry is alive — jax arrays are immutable,
+    so identical ids imply identical contents.
+    """
+
+    source: tuple
+    b_ell: ELL
+    shards: List[Tuple[jax.Array, jax.Array]]  # per-device (b_idx, b_val)
+
+
+class OperandCache:
+    """(B identity, kb_cap, devices)-keyed cache of replicated ELL buffers.
+
+    Iterative (MCL with a fixed B, the sampling chain's shared adjacency)
+    and batched workloads re-multiply against the *same* B object call after
+    call; previously every call re-ran ``csr_to_ell`` and re-replicated the
+    result onto every shard device.  A hit serves both from the cache —
+    zero conversions, zero device transfers.  Lookups fold into the
+    module-level ``cache_stats()`` as ``operand_hits``/``operand_misses``.
+
+    Identity keying is only sound for immutable arrays, so CSRs backed by
+    mutable buffers (plain NumPy arrays) are *never cached* — they take the
+    uncached build path every call, exactly the pre-cache behavior (an
+    in-place edit of a NumPy-backed B must be honored, not served stale).
+    """
+
+    def __init__(self, max_entries: int = 8):
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[tuple, _OperandEntry]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    @staticmethod
+    def _build(b: CSR, kb_cap: int, devices) -> _OperandEntry:
+        b_ell = csr_to_ell(b, kb_cap)
+        return _OperandEntry(
+            source=(b.indptr, b.indices, b.data),
+            b_ell=b_ell,
+            shards=[
+                (replicate_to(b_ell.indices, dev),
+                 replicate_to(b_ell.data, dev))
+                for dev in devices
+            ],
+        )
+
+    def b_operands(self, b: CSR, kb_cap: int, devices) -> _OperandEntry:
+        if not all(isinstance(x, jax.Array)
+                   for x in (b.indptr, b.indices, b.data)):
+            _OPERAND_STATS["operand_misses"] += 1
+            return self._build(b, kb_cap, devices)  # mutable: never cache
+        key = (
+            id(b.indptr), id(b.indices), id(b.data), int(kb_cap),
+            tuple(getattr(d, "id", None) for d in devices),
+        )
+        entry = self._entries.get(key)
+        if entry is None:
+            _OPERAND_STATS["operand_misses"] += 1
+            entry = self._build(b, kb_cap, devices)
+            self._entries[key] = entry
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+        else:
+            _OPERAND_STATS["operand_hits"] += 1
+            self._entries.move_to_end(key)
+        return entry
+
+
+_OPERAND_CACHE = OperandCache()
+
+
 def _build_enumerate(a_cap: int, gather: str) -> Callable:
     """Compile the product-enumeration program: A-row gather → B-row gather
     (xla or AIA stream) → intermediate products.  Output stays on device and
@@ -392,12 +520,29 @@ def _build_accumulate_batched(table_cap: int, out_cap: int,
         lambda v: eng.accumulate(keys, v, table_cap, out_cap))(vals_b))
 
 
+def _build_scatter() -> Callable:
+    """Jitted device-side reassembly epilogue (one chunk → final buffers).
+    Keyed on (padded, out_cap, cap, dtype) like every other program, so
+    pow2-quantized capacities keep iterative workloads on cached traces.
+    The CSR buffers are *donated*: XLA updates them in place instead of
+    copying the whole pow2-capacity output once per chunk (the executor
+    rebinds the returned buffers, never touching the donated ones again;
+    backends without donation fall back to a copy, still correct)."""
+    return jax.jit(phases.reassemble_device, donate_argnums=(0, 1))
+
+
+def _build_scatter_batched() -> Callable:
+    return jax.jit(phases.reassemble_device_batched, donate_argnums=(0, 1))
+
+
 _BUILDERS = {
     "enumerate": _build_enumerate,
     "allocate": _build_allocate,
     "accumulate": _build_accumulate,
     "benumerate": _build_enumerate_batched,
     "baccumulate": _build_accumulate_batched,
+    "scatter": _build_scatter,
+    "bscatter": _build_scatter_batched,
 }
 
 
@@ -527,24 +672,14 @@ class _ChunkOut:
     counts: np.ndarray    # (R_pad,)
 
 
-@dataclasses.dataclass(frozen=True)
-class _ShardOperands:
-    """A + B(ELL) arrays resident on one shard device (B replication is the
+def _shard_a_operands(a_arrays: Sequence, devices) -> List[tuple]:
+    """Replicate A-side arrays onto every shard device.  A is placed per
+    call (its values change across iterations); the B-side ELL replicas are
+    the expensive, reusable half and ride the ``OperandCache`` (the
     software analogue of the paper's per-stack all-gather: every shard
     serves its two-level indirection from local memory)."""
-
-    a_indptr: jax.Array
-    a_indices: jax.Array
-    a_data: jax.Array
-    b_idx: jax.Array
-    b_val: jax.Array
-
-
-def _place_operands(a: CSR, b_ell: ELL, devices) -> List[_ShardOperands]:
     return [
-        _ShardOperands(*(replicate_to(x, dev) for x in (
-            a.indptr, a.indices, a.data, b_ell.indices, b_ell.data)))
-        for dev in devices
+        tuple(replicate_to(x, dev) for x in a_arrays) for dev in devices
     ]
 
 
@@ -579,18 +714,82 @@ def _chunk_rows_padded(chunk: np.ndarray, dev):
     return padded, rows_j
 
 
-def _size_out_cap(keys, padded: int, table_cap: int, engine: str,
-                  ncol_cap: int) -> int:
-    """Allocation (Algorithms 2/3): one host sync sizing the chunk's output
-    rows.  pow2 quantization keeps the accumulate signature stable across
-    iterative calls (MCL/GNN) while tracking actual occupancy.  Keys depend
-    only on structure, so the batched lane shares this program (same cache
-    key) and the single sync sizes every batch member."""
+def _alloc_counts(keys, padded: int, table_cap: int, engine: str) -> jax.Array:
+    """Dispatch the allocation program (Algorithms 2/3) — uniqueCount per
+    row, returned *on device* so the caller chooses when to sync.  Keys
+    depend only on structure, so the batched lane shares this program (same
+    cache key) and one sizing serves every batch member."""
     ip_cap = keys.shape[1]
     alloc = _get_program("allocate", (padded, ip_cap, table_cap, engine),
                          table_cap, engine)
-    max_unique = int(np.asarray(alloc(keys)).max(initial=0))
+    return alloc(keys)
+
+
+def _out_cap_from_counts(unique_counts: np.ndarray, table_cap: int,
+                         ncol_cap: int) -> int:
+    """pow2-quantized chunk output capacity from host-resident uniqueCounts
+    (keeps the accumulate signature stable across iterative calls)."""
+    max_unique = int(unique_counts.max(initial=0))
     return max(min(next_pow2(max_unique), max(table_cap, 1), ncol_cap), 1)
+
+
+def _size_out_cap(keys, padded: int, table_cap: int, engine: str,
+                  ncol_cap: int) -> int:
+    """Legacy per-chunk allocation sizing: one *blocking* host sync per
+    group-chunk (the serialization the two-wave pipeline removes)."""
+    counts = _alloc_counts(keys, padded, table_cap, engine)
+    _SYNC_STATS["host_sync_count"] += 1
+    return _out_cap_from_counts(np.asarray(counts), table_cap, ncol_cap)
+
+
+_INT32_MAX = int(np.iinfo(np.int32).max)
+
+
+def _int32_nnz_capacity(nnz: int) -> int:
+    """Total-nnz capacity of the device epilogue's CSR buffers.
+
+    pow2-quantized so iterative workloads reuse compiled scatter programs;
+    the epilogue emits int32 ``indptr``/``indices`` throughout, so a result
+    whose nnz does not fit int32 must fail loudly instead of silently
+    downcasting (the pre-PR reassembly ``astype(np.int32)`` drift).  If the
+    pow2 quantum itself would overflow int32 while the nnz still fits, fall
+    back to the exact capacity.
+    """
+    if nnz > _INT32_MAX:
+        raise OverflowError(
+            f"SpGEMM output has {nnz} nonzeros, which does not fit the "
+            "int32 CSR index space used by the device reassembly epilogue")
+    cap = next_pow2(max(nnz, 1))
+    return cap if cap <= _INT32_MAX else max(int(nnz), 1)
+
+
+def _coalesce_and_size(pend: List[tuple], n: int):
+    """The two-wave pipeline's single blocking point, shared by the
+    single-matrix and batched lanes: drain every pending chunk's allocate
+    counts with one coalesced sync, assemble the int32 ``indptr``, and size
+    the epilogue's pow2-quantized total-nnz capacity (overflow-guarded).
+
+    ``pend`` entries are ``(item, padded, keys, vals, alloc_counts)``;
+    returns ``(unique_counts, indptr, nnz, cap)``.
+    """
+    unique_counts = _coalesced_sync([p[4] for p in pend]) if pend else []
+    counts_all = np.zeros(n, np.int64)
+    for (item, _, _, _, _), uc in zip(pend, unique_counts):
+        counts_all[item.rows] = uc[: len(item.rows)]
+    indptr64 = np.zeros(n + 1, np.int64)
+    np.cumsum(counts_all, out=indptr64[1:])
+    nnz = int(indptr64[-1])
+    cap = _int32_nnz_capacity(nnz)
+    return unique_counts, indptr64.astype(np.int32), nnz, cap
+
+
+def _chunk_starts(indptr: np.ndarray, rows: np.ndarray, padded: int,
+                  merge_dev) -> jax.Array:
+    """int32 CSR start offset of each chunk row, padded rows parked at 0
+    (their counts are 0, so the epilogue scatter drops them)."""
+    starts = np.zeros(padded, np.int32)
+    starts[: len(rows)] = indptr[rows]
+    return replicate_to(jnp.asarray(starts), merge_dev)
 
 
 def _scatter_positions(indptr: np.ndarray, rows: np.ndarray,
@@ -615,38 +814,102 @@ def execute_plan(
     gather: Gather = "auto",
     row_chunk: int = 4096,
     mesh=None,
+    pipeline: Pipeline = "two_wave",
 ) -> Tuple[CSR, int]:
     """Run the compiled group pipeline; returns (C, nnz_C).
 
-    One device dispatch per work item (group × chunk, shard-local under
-    ``mesh=``); counts sync back once per chunk and the CSR is reassembled
-    with vectorized scatters (no per-row Python).  ``mesh`` partitions the
-    plan across the mesh's devices (round-robin by group); ``mesh=None``
-    is the single-device path — both run the same loop, and their outputs
-    are bit-identical.
+    ``pipeline="two_wave"`` (default) dispatches *every* chunk's
+    enumerate + allocate programs across all shards first, pays **one**
+    coalesced blocking host sync to size every chunk's output at once, then
+    runs accumulate on the still-device-resident keys and reassembles the
+    CSR with the jitted device epilogue (``phases.reassemble_device``) —
+    multi-chunk and multi-shard runs no longer serialize on per-chunk
+    allocate syncs, and ``indices``/``data`` never round-trip through
+    NumPy.  The tradeoff: wave 1 keeps every chunk's intermediate products
+    device-resident until wave 2 consumes them (each is freed right after
+    its accumulate), so peak memory approaches the *total* intermediate
+    products instead of one chunk's worth.  ``pipeline="legacy"`` is the
+    pre-pipelined reference path (one blocking sync per chunk, host-side
+    reassembly, per-chunk peak memory), kept for A/B benchmarking,
+    bit-exactness tests, and memory-bound runs.  ``mesh`` partitions the plan
+    across the mesh's devices (round-robin by group); ``mesh=None`` is the
+    single-device path — all four combinations produce bit-identical rows.
     """
+    if pipeline not in ("two_wave", "legacy"):
+        raise ValueError(f"unknown pipeline {pipeline!r}")
     gather, kb_cap, ncol_cap, devices, items = _setup_execution(
         a, b, plan, engine, gather, row_chunk, mesh)
     n = a.n_rows
-    dtype = np.asarray(a.data).dtype
-    dt = np.dtype(dtype).str
-    b_ell = csr_to_ell(b, kb_cap)
-    operands = _place_operands(a, b_ell, devices)
+    dtype = np.dtype(a.data.dtype)  # no host round-trip: dtype is metadata
+    dt = dtype.str
+    b_entry = _OPERAND_CACHE.b_operands(b, kb_cap, devices)
+    a_ops = _shard_a_operands((a.indptr, a.indices, a.data), devices)
+    shape = (a.n_rows, b.n_cols)
+    if pipeline == "legacy":
+        return _execute_plan_legacy(
+            items, devices, a_ops, b_entry, n, shape, dtype, dt, kb_cap,
+            ncol_cap, gather, engine)
 
+    # ---- Wave 1: dispatch every chunk's enumerate + allocate, no syncs ----
+    pend = []
+    for item in items:
+        dev = devices[item.shard]
+        a_ip, a_ix, a_dt = a_ops[item.shard]
+        b_ix, b_vl = b_entry.shards[item.shard]
+        padded, rows_j = _chunk_rows_padded(item.rows, dev)
+        enum = _get_program(
+            "enumerate", (padded, item.a_cap, kb_cap, gather, dt),
+            item.a_cap, gather)
+        keys, vals = enum(a_ip, a_ix, a_dt, rows_j, b_ix, b_vl)
+        pend.append((item, padded, keys, vals,
+                     _alloc_counts(keys, padded, item.table_cap, engine)))
+
+    # ---- The one coalesced host sync: size every out_cap at once ----
+    unique_counts, indptr, nnz, cap = _coalesce_and_size(pend, n)
+
+    # ---- Wave 2: accumulate on device-resident keys + device epilogue ----
+    merge_dev = merge_device(devices)
+    idx_buf = replicate_to(jnp.zeros(cap, jnp.int32), merge_dev)
+    dat_buf = replicate_to(jnp.zeros(cap, dtype), merge_dev)
+    for i, uc in enumerate(unique_counts):
+        item, padded, keys, vals, _ = pend[i]
+        pend[i] = None  # free this chunk's intermediates once consumed
+        out_cap = _out_cap_from_counts(uc, item.table_cap, ncol_cap)
+        ip_cap = keys.shape[1]
+        accum = _get_program(
+            "accumulate",
+            (padded, ip_cap, item.table_cap, out_cap, engine, dt),
+            item.table_cap, out_cap, engine)
+        cols_r, vals_r, counts_r = accum(keys, vals)
+        scat = _get_program("scatter", (padded, out_cap, cap, dt))
+        idx_buf, dat_buf = scat(
+            idx_buf, dat_buf,
+            replicate_to(cols_r, merge_dev),
+            replicate_to(vals_r, merge_dev),
+            replicate_to(counts_r, merge_dev),
+            _chunk_starts(indptr, item.rows, padded, merge_dev),
+        )
+
+    c = CSR(jnp.asarray(indptr), idx_buf, dat_buf, shape)
+    return c, nnz
+
+
+def _execute_plan_legacy(items, devices, a_ops, b_entry, n, shape, dtype, dt,
+                         kb_cap, ncol_cap, gather, engine) -> Tuple[CSR, int]:
+    """Pre-pipelined reference: one blocking allocate sync per group-chunk
+    and NumPy host-side reassembly (``np.asarray`` round-trips)."""
     chunks: List[_ChunkOut] = []
     counts_all = np.zeros(n, np.int64)
     for item in items:
         chunk = item.rows
         dev = devices[item.shard]
-        ops = operands[item.shard]
+        a_ip, a_ix, a_dt = a_ops[item.shard]
+        b_ix, b_vl = b_entry.shards[item.shard]
         a_cap, table_cap = item.a_cap, item.table_cap
         padded, rows_j = _chunk_rows_padded(chunk, dev)
         enum = _get_program("enumerate", (padded, a_cap, kb_cap, gather, dt),
                             a_cap, gather)
-        keys, vals = enum(
-            ops.a_indptr, ops.a_indices, ops.a_data, rows_j,
-            ops.b_idx, ops.b_val
-        )
+        keys, vals = enum(a_ip, a_ix, a_dt, rows_j, b_ix, b_vl)
         ip_cap = keys.shape[1]
         out_cap = _size_out_cap(keys, padded, table_cap, engine, ncol_cap)
         # ---- Accumulation (Algorithm 5) on the same device arrays ----
@@ -680,7 +943,7 @@ def execute_plan(
         jnp.asarray(indptr.astype(np.int32)),
         jnp.asarray(indices),
         jnp.asarray(data),
-        (a.n_rows, b.n_cols),
+        shape,
     )
     return c, nnz
 
@@ -697,52 +960,24 @@ class _BatchChunkOut:
     counts: np.ndarray    # (R_pad,)
 
 
-def execute_plan_batched(
-    a: CSR,
-    b: CSR,
-    a_data_batch: Sequence,
-    b_data_batch: Optional[Sequence] = None,
-    plan: Optional[GroupPlan] = None,
-    engine: str = "sort",
-    gather: Gather = "auto",
-    row_chunk: int = 4096,
-    mesh=None,
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
-    """Run the compiled pipeline once for a whole batch of same-pattern
-    operands; returns ``(indptr, indices, data_batch, nnz)``.
-
-    ``a``/``b`` carry the shared sparsity structure; ``a_data_batch`` is a
-    ``(batch, capacity)`` stack of A value sets, ``b_data_batch`` the same
-    for B (``None`` = ``b.data`` is shared by every member).  Because the
-    key tensor depends only on structure, the enumerate gathers, the
-    allocation sizing (one host sync per chunk for the *entire* batch), the
-    output structure, and the reassembly offsets all run once; only the
-    value streams are vmapped through the cached accumulate programs.  The
-    output structure is shared by construction, so member i's result is
-    ``CSR(indptr, indices, data_batch[i], (a.n_rows, b.n_cols))``.
-
-    ``mesh=`` shards exactly like ``execute_plan`` — the (memoized) work
-    item partition of the shared plan is computed once and every batch
-    member rides the same shard assignment.  Results are bit-identical to
-    a per-matrix Python loop for every engine × gather combination.
-    """
-    if plan is None:
-        plan = group_rows(a, b)
-    gather, kb_cap, ncol_cap, devices, items = _setup_execution(
-        a, b, plan, engine, gather, row_chunk, mesh)
-    n = a.n_rows
+def _batched_operands(a: CSR, b: CSR, a_data_batch, b_data_batch, kb_cap: int,
+                      devices):
+    """Per-shard batched operand placement.  The B-side structural buffers
+    (ELL indices + the shared value plane) come from the ``OperandCache``;
+    only per-call value stacks are replicated fresh."""
     a_data_batch = np.asarray(a_data_batch)
     if a_data_batch.ndim != 2:
         raise ValueError(
             f"a_data_batch must be (batch, capacity), got {a_data_batch.shape}")
     batch = a_data_batch.shape[0]
-    dtype = a_data_batch.dtype
-    dt = np.dtype(dtype).str
-
-    b_ell = csr_to_ell(b, kb_cap)
+    b_entry = _OPERAND_CACHE.b_operands(b, kb_cap, devices)
     if b_data_batch is None:
-        b_val_b = jnp.broadcast_to(
-            b_ell.data[None], (batch,) + tuple(b_ell.data.shape))
+        # shared B values: broadcast each shard's cached replica in place
+        # (a broadcast of a device-resident array stays on that device)
+        b_shards = [
+            (b_ix, jnp.broadcast_to(b_vl[None], (batch,) + tuple(b_vl.shape)))
+            for b_ix, b_vl in b_entry.shards
+        ]
     else:
         b_data_batch = np.asarray(b_data_batch)
         if b_data_batch.shape[0] != batch:
@@ -753,20 +988,119 @@ def execute_plan_batched(
         to_ell_data = jax.vmap(lambda d: csr_to_ell(
             CSR(b.indptr, b.indices, d, b.shape), kb_cap).data)
         b_val_b = to_ell_data(jnp.asarray(b_data_batch))
+        b_shards = [
+            (b_ix, replicate_to(b_val_b, dev))
+            for (b_ix, _), dev in zip(b_entry.shards, devices)
+        ]
+    a_shards = _shard_a_operands(
+        (a.indptr, a.indices, jnp.asarray(a_data_batch)), devices)
+    return a_data_batch, batch, a_shards, b_shards
 
-    a_data_j = jnp.asarray(a_data_batch)
-    operands = [
-        tuple(replicate_to(x, dev) for x in (
-            a.indptr, a.indices, a_data_j, b_ell.indices, b_val_b))
-        for dev in devices
-    ]
 
+def execute_plan_batched(
+    a: CSR,
+    b: CSR,
+    a_data_batch: Sequence,
+    b_data_batch: Optional[Sequence] = None,
+    plan: Optional[GroupPlan] = None,
+    engine: str = "sort",
+    gather: Gather = "auto",
+    row_chunk: int = 4096,
+    mesh=None,
+    pipeline: Pipeline = "two_wave",
+) -> Tuple[jax.Array, jax.Array, jax.Array, int]:
+    """Run the compiled pipeline once for a whole batch of same-pattern
+    operands; returns ``(indptr, indices, data_batch, nnz)``.
+
+    ``a``/``b`` carry the shared sparsity structure; ``a_data_batch`` is a
+    ``(batch, capacity)`` stack of A value sets, ``b_data_batch`` the same
+    for B (``None`` = ``b.data`` is shared by every member).  Because the
+    key tensor depends only on structure, the enumerate gathers, the
+    allocation sizing (under ``pipeline="two_wave"`` one coalesced host
+    sync for *all* chunks of the *entire* batch), the output structure, and
+    the reassembly offsets all run once; only the value streams are vmapped
+    through the cached accumulate programs.  The output structure is shared
+    by construction, so member i's result is
+    ``CSR(indptr, indices, data_batch[i], (a.n_rows, b.n_cols))``.
+
+    ``mesh=`` shards exactly like ``execute_plan`` — the (memoized) work
+    item partition of the shared plan is computed once and every batch
+    member rides the same shard assignment; B's replicated ELL buffers are
+    served by the ``OperandCache`` across calls.  Results are bit-identical
+    to a per-matrix Python loop for every engine × gather combination.
+    """
+    if pipeline not in ("two_wave", "legacy"):
+        raise ValueError(f"unknown pipeline {pipeline!r}")
+    if plan is None:
+        plan = group_rows(a, b)
+    gather, kb_cap, ncol_cap, devices, items = _setup_execution(
+        a, b, plan, engine, gather, row_chunk, mesh)
+    n = a.n_rows
+    a_data_batch, batch, a_shards, b_shards = _batched_operands(
+        a, b, a_data_batch, b_data_batch, kb_cap, devices)
+    dtype = a_data_batch.dtype
+    dt = np.dtype(dtype).str
+    if pipeline == "legacy":
+        return _execute_plan_batched_legacy(
+            items, devices, a_shards, b_shards, n, batch, dtype, dt, kb_cap,
+            ncol_cap, gather, engine)
+
+    # ---- Wave 1: every chunk's benumerate + allocate, no syncs ----
+    pend = []
+    for item in items:
+        dev = devices[item.shard]
+        a_ip, a_ix, a_db = a_shards[item.shard]
+        b_ix, b_vb = b_shards[item.shard]
+        padded, rows_j = _chunk_rows_padded(item.rows, dev)
+        benum = _get_program(
+            "benumerate", (batch, padded, item.a_cap, kb_cap, gather, dt),
+            item.a_cap, gather)
+        keys, vals_b = benum(a_ip, a_ix, a_db, rows_j, b_ix, b_vb)
+        pend.append((item, padded, keys, vals_b,
+                     _alloc_counts(keys, padded, item.table_cap, engine)))
+
+    # ---- One coalesced host sync sizes all chunks for the whole batch ----
+    unique_counts, indptr, nnz, cap = _coalesce_and_size(pend, n)
+
+    # ---- Wave 2: batched accumulate + device epilogue (value scatter
+    # broadcast over the batch axis) ----
+    merge_dev = merge_device(devices)
+    idx_buf = replicate_to(jnp.zeros(cap, jnp.int32), merge_dev)
+    dat_buf_b = replicate_to(jnp.zeros((batch, cap), dtype), merge_dev)
+    for i, uc in enumerate(unique_counts):
+        item, padded, keys, vals_b, _ = pend[i]
+        pend[i] = None  # free this chunk's intermediates once consumed
+        out_cap = _out_cap_from_counts(uc, item.table_cap, ncol_cap)
+        ip_cap = keys.shape[1]
+        bacc = _get_program(
+            "baccumulate",
+            (batch, padded, ip_cap, item.table_cap, out_cap, engine, dt),
+            item.table_cap, out_cap, engine)
+        cols_rb, vals_rb, counts_rb = bacc(keys, vals_b)
+        scat = _get_program("bscatter", (batch, padded, out_cap, cap, dt))
+        idx_buf, dat_buf_b = scat(
+            idx_buf, dat_buf_b,
+            replicate_to(cols_rb[0], merge_dev),
+            replicate_to(vals_rb, merge_dev),
+            replicate_to(counts_rb[0], merge_dev),
+            _chunk_starts(indptr, item.rows, padded, merge_dev),
+        )
+
+    return jnp.asarray(indptr), idx_buf, dat_buf_b, nnz
+
+
+def _execute_plan_batched_legacy(items, devices, a_shards, b_shards, n,
+                                 batch, dtype, dt, kb_cap, ncol_cap, gather,
+                                 engine):
+    """Pre-pipelined batched reference: per-chunk allocate syncs + NumPy
+    shared-structure reassembly."""
     chunks: List[_BatchChunkOut] = []
     counts_all = np.zeros(n, np.int64)
     for item in items:
         chunk = item.rows
         dev = devices[item.shard]
-        a_ip, a_ix, a_db, b_ix, b_vb = operands[item.shard]
+        a_ip, a_ix, a_db = a_shards[item.shard]
+        b_ix, b_vb = b_shards[item.shard]
         a_cap, table_cap = item.a_cap, item.table_cap
         padded, rows_j = _chunk_rows_padded(chunk, dev)
         benum = _get_program(
@@ -804,4 +1138,5 @@ def execute_plan_batched(
         indices[pos_ok] = ck.cols[:r][ok]
         data_batch[:, pos_ok] = ck.vals[:, :r][:, ok]
 
-    return indptr.astype(np.int32), indices, data_batch, nnz
+    return (jnp.asarray(indptr.astype(np.int32)), jnp.asarray(indices),
+            jnp.asarray(data_batch), nnz)

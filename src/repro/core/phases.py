@@ -121,6 +121,52 @@ def gather_group_rows_batched(indptr, indices, data_b, rows, a_cap):
 
 
 # ---------------------------------------------------------------------------
+# Device-side CSR reassembly epilogue (inverse-permutation scatter on device)
+# ---------------------------------------------------------------------------
+
+def reassemble_device(idx_buf, dat_buf, cols, vals, counts, starts):
+    """Scatter one chunk's accumulated rows into the final CSR buffers.
+
+    The device-side half of CSR reassembly: each chunk's column-sorted rows
+    are written to their flat CSR destinations with one vectorized scatter,
+    so the output ``indices``/``data`` never round-trip through NumPy.
+
+    idx_buf, dat_buf: (cap,) int32 / dtype — the output CSR's index and
+                      value buffers (functionally updated and returned).
+    cols, vals:       (R_pad, out_cap) the chunk's accumulated rows.
+    counts:           (R_pad,) int32 per-row occupancy; padding rows are 0.
+    starts:           (R_pad,) int32 CSR start offset of each row.
+
+    Everything stays int32 (the CSR index convention); positions past a
+    row's count are redirected to ``cap`` and dropped by the scatter, which
+    also silently retires padding rows (count 0).
+    """
+    cap = idx_buf.shape[0]
+    out_cap = cols.shape[1]
+    offs = jnp.arange(out_cap, dtype=jnp.int32)[None, :]
+    pos = jnp.where(offs < counts[:, None], starts[:, None] + offs, cap)
+    idx_buf = idx_buf.at[pos].set(cols, mode="drop")
+    dat_buf = dat_buf.at[pos].set(vals, mode="drop")
+    return idx_buf, dat_buf
+
+
+def reassemble_device_batched(idx_buf, dat_buf_b, cols, vals_b, counts, starts):
+    """``reassemble_device`` with the value scatter broadcast over a batch.
+
+    The output structure is shared by every batch member, so the position
+    tensor is computed once; ``dat_buf_b`` is (batch, cap) and ``vals_b``
+    (batch, R_pad, out_cap).
+    """
+    cap = idx_buf.shape[0]
+    out_cap = cols.shape[1]
+    offs = jnp.arange(out_cap, dtype=jnp.int32)[None, :]
+    pos = jnp.where(offs < counts[:, None], starts[:, None] + offs, cap)
+    idx_buf = idx_buf.at[pos].set(cols, mode="drop")
+    dat_buf_b = dat_buf_b.at[:, pos].set(vals_b, mode="drop")
+    return idx_buf, dat_buf_b
+
+
+# ---------------------------------------------------------------------------
 # Hash engine (Algorithm 2/3 allocation; Algorithm 5 accumulation)
 # ---------------------------------------------------------------------------
 

@@ -83,6 +83,7 @@ def spgemm(
     gather: executor.Gather = "auto",
     mesh=None,
     plan: PlanLike = None,
+    pipeline: executor.Pipeline = "two_wave",
 ) -> SpGEMMResult:
     """C = A @ B via the paper's multi-phase pipeline (plan-compiled).
 
@@ -101,6 +102,10 @@ def spgemm(
     guarantees it matches the operands' support), a ``PlanCache`` skips
     ``group_rows`` whenever the operands' sparsity patterns were seen
     before (hits/misses surface in ``executor.cache_stats()``).
+    ``pipeline`` selects the executor's sync structure: ``"two_wave"``
+    (default) pays one coalesced allocate host sync for all chunks and
+    reassembles the CSR on device; ``"legacy"`` is the per-chunk-sync
+    NumPy-reassembly reference path (A/B benchmarking).
     """
     assert a.n_cols == b.n_rows, (a.shape, b.shape)
     if engine is None:
@@ -113,10 +118,10 @@ def spgemm(
     run_plan = plan
     if schedule == "natural":
         run_plan = executor.ungrouped_plan(plan)
-    # ---- Phases 2+3: compiled group pipeline + vectorized reassembly ----
+    # ---- Phases 2+3: compiled group pipeline + device-side reassembly ----
     c, nnz = executor.execute_plan(
         a, b, run_plan, engine=engine, gather=gather, row_chunk=row_chunk,
-        mesh=mesh,
+        mesh=mesh, pipeline=pipeline,
     )
     info = spgemm_info(a, b, run_plan, nnz, mesh=mesh)
     return SpGEMMResult(c=c, plan=run_plan, info=info)
@@ -194,6 +199,7 @@ def spgemm_batched(
     gather: executor.Gather = "auto",
     mesh=None,
     plan: PlanLike = None,
+    pipeline: executor.Pipeline = "two_wave",
 ) -> SpGEMMBatchResult:
     """``cs[i] = a_batch[i] @ b_batch[i]`` for same-pattern operand batches.
 
@@ -232,7 +238,7 @@ def spgemm_batched(
     b_data = None if len(b_members) == 1 else _stack_values(b_members, b, batch)
     indptr, indices, data_batch, nnz = executor.execute_plan_batched(
         a, b, a_data, b_data, run_plan, engine=engine, gather=gather,
-        row_chunk=row_chunk, mesh=mesh,
+        row_chunk=row_chunk, mesh=mesh, pipeline=pipeline,
     )
     indptr_j = jnp.asarray(indptr)
     indices_j = jnp.asarray(indices)

@@ -100,10 +100,22 @@ def shard_devices(mesh) -> list:
 
 def replicate_to(x, device):
     """Place ``x`` on ``device`` (the per-shard B replication / all-gather
-    analogue); identity for the unsharded ``device=None`` path."""
+    analogue); identity for the unsharded ``device=None`` path.
+
+    Also the executor epilogue's device-to-device move: shard outputs are
+    ``replicate_to``'d onto the merge device *without* a host round-trip
+    (``jax.device_put`` between devices is an async transfer, not a sync).
+    """
     if device is None:
         return x
     return jax.device_put(x, device)
+
+
+def merge_device(devices):
+    """The device that accumulates the reassembled CSR buffers (the
+    device-side epilogue's merge point): the first shard device, or
+    ``None`` (uncommitted default placement) on the unsharded path."""
+    return devices[0] if devices else None
 
 
 def row_sharding(mesh, ndim: int = 2):

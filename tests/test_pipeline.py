@@ -1,0 +1,329 @@
+"""Two-wave pipelined executor: sync budget, device epilogue, OperandCache.
+
+Three bars from the pipelining PR:
+
+* **Sync budget** — a multi-chunk ``execute_plan`` pays exactly **one**
+  blocking allocate host sync (``cache_stats()["host_sync_count"]``) on the
+  two-wave path, and one *per chunk* on the legacy path (the structure the
+  pipeline removes).
+* **Device epilogue** — the jitted device-side CSR reassembly
+  (``phases.reassemble_device``) is bit-exact vs the legacy NumPy
+  reassembly for every engine × gather combination, in-process and under
+  1/2/4-device meshes (subprocess), and emits int32 ``indptr``/``indices``
+  throughout with an explicit overflow guard instead of a silent downcast.
+* **OperandCache** — B's replicated ELL buffers are shared across
+  batched/iterative calls: the second call against the same B object
+  re-replicates zero buffers (``operand_misses`` unchanged).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import executor
+from repro.core.ref import spgemm_dense
+from repro.core.spgemm import spgemm, spgemm_batched
+from repro.sparse.formats import csr_from_dense, csr_to_dense
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ENGINES = ("sort", "hash")
+GATHERS = ("xla", "aia")
+
+
+def run_py(body: str, n_devices: int = 4, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    script = "import os\n" + textwrap.dedent(body)
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def int_sparse(rng, n, m, density=0.3):
+    x = rng.integers(-4, 5, (n, m)).astype(np.float32)
+    mask = rng.random((n, m)) < density
+    return np.where(mask, x, 0.0).astype(np.float32)
+
+
+def _dense(c):
+    return np.asarray(csr_to_dense(c))
+
+
+def _sync_delta(fn):
+    before = executor.cache_stats()["host_sync_count"]
+    out = fn()
+    return out, executor.cache_stats()["host_sync_count"] - before
+
+
+def _fixture(seed=5, n=40, k=30, m=25):
+    rng = np.random.default_rng(seed)
+    a = csr_from_dense(int_sparse(rng, n, k, 0.25))
+    b = csr_from_dense(int_sparse(rng, k, m, 0.25))
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# Sync budget: one coalesced allocate sync per call, not one per chunk
+# ---------------------------------------------------------------------------
+
+def _n_work_items(res, a, row_chunk):
+    nnz = np.diff(np.asarray(a.indptr))
+    return len(executor.partition_plan(res.plan, nnz, row_chunk))
+
+
+def test_two_wave_multichunk_single_allocate_sync():
+    """The acceptance bar: a plan that splits into many group-chunks still
+    performs exactly one blocking host sync on the two-wave path."""
+    a, b = _fixture()
+    executor.clear_program_cache()
+    res, syncs = _sync_delta(lambda: spgemm(a, b, engine="sort", row_chunk=8))
+    assert _n_work_items(res, a, 8) > 1, "fixture must be multi-chunk"
+    assert syncs == 1, f"two-wave pipeline paid {syncs} host syncs"
+    np.testing.assert_array_equal(_dense(res.c), np.asarray(spgemm_dense(a, b)))
+
+
+def test_legacy_pipeline_syncs_once_per_chunk():
+    a, b = _fixture()
+    executor.clear_program_cache()
+    res, syncs = _sync_delta(
+        lambda: spgemm(a, b, engine="sort", row_chunk=8, pipeline="legacy"))
+    n_items = _n_work_items(res, a, 8)
+    assert n_items > 1
+    assert syncs == n_items, (
+        f"legacy path paid {syncs} syncs for {n_items} chunks")
+
+
+def test_two_wave_batched_single_allocate_sync():
+    rng = np.random.default_rng(31)
+    pat = rng.random((40, 30)) < 0.25
+    mats = [csr_from_dense(np.where(
+        pat, rng.integers(1, 5, pat.shape), 0.0).astype(np.float32))
+        for _ in range(3)]
+    b = csr_from_dense(int_sparse(rng, 30, 25, 0.25))
+    executor.clear_program_cache()
+    res, syncs = _sync_delta(
+        lambda: spgemm_batched(mats, b, engine="sort", row_chunk=8))
+    assert syncs == 1, f"batched two-wave paid {syncs} host syncs"
+    for i in range(3):
+        np.testing.assert_array_equal(
+            _dense(res.cs[i]), np.asarray(spgemm_dense(mats[i], b)))
+
+
+def test_unknown_pipeline_rejected():
+    a, b = _fixture()
+    with pytest.raises(ValueError, match="unknown pipeline"):
+        spgemm(a, b, pipeline="three_wave")
+
+
+# ---------------------------------------------------------------------------
+# Device epilogue: bit-exact vs the legacy NumPy reassembly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("gather", GATHERS)
+def test_device_epilogue_matches_numpy_reassembly(engine, gather):
+    """Every engine × gather: the device-side scatter epilogue reproduces
+    the legacy host-side reassembly bit-for-bit (indptr, occupied indices
+    and values; the epilogue's capacity is pow2-quantized so only the
+    padding tail may differ)."""
+    a, b = _fixture(seed=11)
+    tw = spgemm(a, b, engine=engine, gather=gather, row_chunk=8)
+    lg = spgemm(a, b, engine=engine, gather=gather, row_chunk=8,
+                pipeline="legacy")
+    nnz = tw.info["nnz_c"]
+    assert nnz == lg.info["nnz_c"]
+    np.testing.assert_array_equal(
+        np.asarray(tw.c.indptr), np.asarray(lg.c.indptr))
+    np.testing.assert_array_equal(
+        np.asarray(tw.c.indices)[:nnz], np.asarray(lg.c.indices)[:nnz])
+    np.testing.assert_array_equal(
+        np.asarray(tw.c.data)[:nnz], np.asarray(lg.c.data)[:nnz])
+    np.testing.assert_array_equal(_dense(tw.c), np.asarray(spgemm_dense(a, b)))
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_device_epilogue_batched_matches_legacy(engine):
+    rng = np.random.default_rng(13)
+    pat_a = rng.random((18, 14)) < 0.3
+    pat_b = rng.random((14, 16)) < 0.35
+    def members(pat, k):
+        return [csr_from_dense(np.where(
+            pat, rng.integers(1, 5, pat.shape), 0.0).astype(np.float32))
+            for _ in range(k)]
+    a_mats, b_mats = members(pat_a, 3), members(pat_b, 3)
+    tw = spgemm_batched(a_mats, b_mats, engine=engine, row_chunk=8)
+    lg = spgemm_batched(a_mats, b_mats, engine=engine, row_chunk=8,
+                        pipeline="legacy")
+    nnz = tw.info["nnz_c"]
+    for i in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(tw.cs[i].indptr), np.asarray(lg.cs[i].indptr))
+        np.testing.assert_array_equal(
+            np.asarray(tw.cs[i].indices)[:nnz],
+            np.asarray(lg.cs[i].indices)[:nnz])
+        np.testing.assert_array_equal(
+            np.asarray(tw.cs[i].data)[:nnz], np.asarray(lg.cs[i].data)[:nnz])
+
+
+def test_epilogue_emits_int32_throughout():
+    """No silent downcast at materialization: the CSR leaves the executor
+    already int32 (indptr *and* indices), values in the input dtype."""
+    a, b = _fixture(seed=17)
+    res = spgemm(a, b, engine="sort")
+    assert res.c.indptr.dtype == jnp.int32
+    assert res.c.indices.dtype == jnp.int32
+    assert res.c.data.dtype == jnp.float32
+
+
+def test_int32_overflow_guard():
+    """nnz beyond int32 must raise, not wrap; the pow2 quantum falls back
+    to the exact capacity when the quantum alone would overflow."""
+    with pytest.raises(OverflowError, match="int32"):
+        executor._int32_nnz_capacity(2**31)
+    assert executor._int32_nnz_capacity(0) == 1
+    assert executor._int32_nnz_capacity(1000) == 1024
+    # 2^30 quantizes to itself; 2^30+1 would quantize to 2^31 (> int32max)
+    # and falls back to the exact nnz instead of downcasting.
+    assert executor._int32_nnz_capacity(2**30) == 2**30
+    assert executor._int32_nnz_capacity(2**30 + 1) == 2**30 + 1
+
+
+# ---------------------------------------------------------------------------
+# OperandCache: B replicas shared across batched/iterative calls
+# ---------------------------------------------------------------------------
+
+def test_operand_cache_zero_rereplication_across_batched_calls():
+    """Two batched calls against the same B object: the second must serve
+    B's replicated ELL buffers from the OperandCache (operand_misses
+    unchanged = zero buffers re-replicated)."""
+    rng = np.random.default_rng(23)
+    pat = rng.random((20, 20)) < 0.25
+    def member():
+        return csr_from_dense(np.where(
+            pat, rng.integers(1, 5, (20, 20)), 0.0).astype(np.float32))
+    b = csr_from_dense(int_sparse(rng, 20, 18, 0.3))
+    executor.clear_program_cache()
+    spgemm_batched([member(), member()], b, engine="sort")
+    s1 = executor.cache_stats()
+    assert s1["operand_misses"] == 1 and s1["operand_hits"] == 0
+    spgemm_batched([member(), member()], b, engine="sort")
+    s2 = executor.cache_stats()
+    assert s2["operand_misses"] == s1["operand_misses"], (
+        "second batched call re-replicated B's ELL buffers")
+    assert s2["operand_hits"] == s1["operand_hits"] + 1
+
+
+def test_operand_cache_hits_iterative_single_matrix_calls():
+    """MCL-at-fixpoint shape: same B object re-multiplied with fresh A
+    values — every call after the first is an operand-cache hit, and a
+    *different* B object (same contents) is a miss (identity-keyed)."""
+    rng = np.random.default_rng(24)
+    xb = int_sparse(rng, 16, 14, 0.3)
+    b = csr_from_dense(xb)
+    executor.clear_program_cache()
+    for _ in range(3):
+        a = csr_from_dense(int_sparse(rng, 12, 16, 0.3))
+        spgemm(a, b, engine="sort")
+    stats = executor.cache_stats()
+    assert stats["operand_misses"] == 1 and stats["operand_hits"] == 2
+    spgemm(csr_from_dense(int_sparse(rng, 12, 16, 0.3)),
+           csr_from_dense(xb), engine="sort")  # new B object → miss
+    assert executor.cache_stats()["operand_misses"] == 2
+
+
+def test_operand_cache_never_serves_mutable_numpy_backed_b():
+    """Identity keying is only sound for immutable arrays: a CSR backed by
+    plain NumPy buffers must bypass the cache, so an in-place edit of B
+    between calls is honored instead of served stale."""
+    rng = np.random.default_rng(26)
+    xa = int_sparse(rng, 12, 16, 0.3)
+    xb = int_sparse(rng, 16, 14, 0.3)
+    from repro.sparse.formats import CSR
+    b_np = csr_from_dense(xb)
+    b_np = CSR(np.asarray(b_np.indptr), np.asarray(b_np.indices),
+               np.asarray(b_np.data).copy(), b_np.shape)
+    a = csr_from_dense(xa)
+    executor.clear_program_cache()
+    r1 = spgemm(a, b_np, engine="sort")
+    b_np.data[:] *= 2.0  # in-place mutation of the NumPy-backed operand
+    r2 = spgemm(a, b_np, engine="sort")
+    assert executor.cache_stats()["operand_hits"] == 0, (
+        "mutable NumPy-backed B must never be cache-served")
+    np.testing.assert_array_equal(_dense(r2.c), 2.0 * _dense(r1.c))
+
+
+def test_operand_cache_lru_bound_and_clear():
+    rng = np.random.default_rng(25)
+    cache = executor.OperandCache(max_entries=2)
+    mats = [csr_from_dense(int_sparse(rng, 10, 10, 0.4)) for _ in range(3)]
+    for m in mats:
+        cache.b_operands(m, 4, [None])
+    assert len(cache) == 2
+    cache.clear()
+    assert len(cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: epilogue bit-exactness under 1/2/4-device meshes
+# ---------------------------------------------------------------------------
+
+PIPELINE_MESH_BODY = """
+import jax, numpy as np
+from repro.core import executor
+from repro.core.spgemm import spgemm
+from repro.core.ref import spgemm_dense
+from repro.launch.mesh import make_spgemm_mesh
+from repro.sparse.formats import csr_from_dense, csr_to_dense
+
+n_dev = {n_devices}
+assert len(jax.devices()) == n_dev, jax.devices()
+rng = np.random.default_rng(19)
+def sp(n, m, d):
+    x = rng.integers(-4, 5, (n, m)).astype(np.float32)
+    return np.where(rng.random((n, m)) < d, x, 0.0).astype(np.float32)
+a = csr_from_dense(sp(64, 48, 0.22))
+b = csr_from_dense(sp(48, 52, 0.28))
+oracle = np.asarray(spgemm_dense(a, b))
+mesh = make_spgemm_mesh(n_dev)
+for engine in ("sort", "hash"):
+    for gather in ("xla", "aia"):
+        tw = spgemm(a, b, engine=engine, gather=gather, mesh=mesh,
+                    row_chunk=16)
+        lg = spgemm(a, b, engine=engine, gather=gather, mesh=mesh,
+                    row_chunk=16, pipeline="legacy")
+        nnz = tw.info["nnz_c"]
+        assert nnz == lg.info["nnz_c"]
+        np.testing.assert_array_equal(np.asarray(tw.c.indptr),
+                                      np.asarray(lg.c.indptr))
+        np.testing.assert_array_equal(np.asarray(tw.c.indices)[:nnz],
+                                      np.asarray(lg.c.indices)[:nnz])
+        np.testing.assert_array_equal(np.asarray(tw.c.data)[:nnz],
+                                      np.asarray(lg.c.data)[:nnz])
+        np.testing.assert_array_equal(np.asarray(csr_to_dense(tw.c)), oracle)
+        print("EPI OK", engine, gather, n_dev)
+# and the sync budget holds under the mesh: one coalesced sync per call
+executor.clear_program_cache()
+spgemm(a, b, engine="sort", mesh=mesh, row_chunk=16)  # warm
+s0 = executor.cache_stats()["host_sync_count"]
+spgemm(a, b, engine="sort", mesh=mesh, row_chunk=16)
+assert executor.cache_stats()["host_sync_count"] - s0 == 1
+print("SYNC OK", n_dev)
+"""
+
+
+@pytest.mark.parametrize("n_devices", (1, 2, 4))
+def test_device_epilogue_bit_exact_under_mesh(n_devices):
+    """1/2/4 forced host devices: the device epilogue == legacy NumPy
+    reassembly == dense oracle for every engine × gather combination, and
+    the sharded two-wave call still pays exactly one allocate sync."""
+    out = run_py(PIPELINE_MESH_BODY.format(n_devices=n_devices),
+                 n_devices=n_devices)
+    assert out.count("EPI OK") == 4
+    assert "SYNC OK" in out
