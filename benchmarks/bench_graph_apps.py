@@ -32,7 +32,7 @@ def bench_contraction(names=("RoadTX", "web-Google", "Economics", "amazon0601",
                              "WindTunnel", "Protein"),
                       n_override=None, engine="sort",
                       gather="auto", mesh=None,
-                      pipeline="two_wave") -> List[Dict]:
+                      pipeline="two_wave", sizing="auto") -> List[Dict]:
     rows = []
     rng = np.random.default_rng(0)
     for name in names:
@@ -40,7 +40,8 @@ def bench_contraction(names=("RoadTX", "web-Google", "Economics", "amazon0601",
         labels = rng.integers(0, max(g.n_rows // 64, 2), g.n_rows)
         t_sp, (c, infos) = _wall(
             lambda: graph_contraction(g, labels, engine, gather=gather,
-                                      mesh=mesh, pipeline=pipeline))
+                                      mesh=mesh, pipeline=pipeline,
+                                      sizing=sizing))
         # dense baseline: S G S^T with dense matmuls
         s = csr_to_dense(label_matrix(labels, n=g.n_rows))
         gd = csr_to_dense(g)
@@ -57,14 +58,14 @@ def bench_contraction(names=("RoadTX", "web-Google", "Economics", "amazon0601",
 def bench_mcl(names=("web-Google", "Economics", "Protein"),
               max_iters=3, n_override=None, engine="sort",
               gather="auto", mesh=None, reuse_plan=True,
-              pipeline="two_wave") -> List[Dict]:
+              pipeline="two_wave", sizing="auto") -> List[Dict]:
     rows = []
     for name in names:
         g = table_ii_matrix(name, n_override=n_override)
         t_sp, res = _wall(lambda: mcl(g, e=2, max_iters=max_iters, tol=0.0,
                                       method=engine, gather=gather,
                                       mesh=mesh, reuse_plan=reuse_plan,
-                                      pipeline=pipeline))
+                                      pipeline=pipeline, sizing=sizing))
         # dense baseline: same loop with dense matmul expansion
         import jax.numpy as jnp
         from repro.apps.markov_clustering import add_self_loops
@@ -93,7 +94,8 @@ def bench_mcl(names=("web-Google", "Economics", "Protein"),
 
 def bench_batched_selfprod(names=("Economics", "Protein"), batch=4,
                            n_override=None, engine="sort", gather="auto",
-                           mesh=None, pipeline="two_wave") -> List[Dict]:
+                           mesh=None, pipeline="two_wave",
+                           sizing="auto") -> List[Dict]:
     """Amortized batched SpGEMM vs a per-matrix loop (same-pattern batch).
 
     Each workload's matrix spawns ``batch`` value variants sharing its
@@ -113,16 +115,16 @@ def bench_batched_selfprod(names=("Economics", "Protein"), batch=4,
             0.5, 1.5, (batch, nnz)).astype(np.float32)
         members = _weighted_members(g, weights)
         spgemm_batched(members, g, engine=engine, gather=gather, mesh=mesh,
-                       pipeline=pipeline)
+                       pipeline=pipeline, sizing=sizing)
         for m in members:
             spgemm(m, g, engine=engine, gather=gather, mesh=mesh,
-                   pipeline=pipeline)
+                   pipeline=pipeline, sizing=sizing)
         t_batched, res = _wall(lambda: spgemm_batched(
             members, g, engine=engine, gather=gather, mesh=mesh,
-            pipeline=pipeline))
+            pipeline=pipeline, sizing=sizing))
         t_loop, _ = _wall(lambda: [spgemm(
             m, g, engine=engine, gather=gather, mesh=mesh,
-            pipeline=pipeline) for m in members])
+            pipeline=pipeline, sizing=sizing) for m in members])
         rows.append({
             "workload": name, "n": g.n_rows, "batch": batch,
             "batched_ms": t_batched * 1e3, "loop_ms": t_loop * 1e3,

@@ -82,8 +82,11 @@ def run(names=None, n_override: int | None = None,
 
 def main():
     import argparse
+
+    from repro.core.executor import available_engines
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", default="sort", choices=("sort", "hash"))
+    ap.add_argument("--engine", default="sort", choices=available_engines())
     ap.add_argument("--gather", default="xla", choices=("auto", "xla", "aia"))
     args = ap.parse_args()
     m = args.engine

@@ -10,6 +10,10 @@ Usage:
     python benchmarks/check_regression.py BENCH_ci.json \
         benchmarks/BENCH_baseline.json --max-ratio 2.0 [--require-all]
 
+Failures name every offending record with its baseline-vs-current µs and
+ratio (plus the worst offender up front), so a red CI log says *what*
+regressed without downloading the artifact.
+
 Records with ``us == 0`` (pure-counter rows) are never gated.  Record-set
 *drift* is reported as a WARN by default: records present in the fresh
 JSON but absent from the baseline (a PR adding a benchmark) and records
@@ -70,7 +74,11 @@ def main() -> int:
     baseline = load_records(args.baseline)
     shared = [n for n in baseline if n in current and baseline[n]["us"] > 0]
     if not shared:
-        print("no comparable records between current and baseline",
+        print(f"FAIL: no comparable records between {args.current} "
+              f"({len(current)} records: {sorted(current) or 'none'}) and "
+              f"{args.baseline} ({len(baseline)} records: "
+              f"{sorted(baseline) or 'none'}) — was the benchmark run "
+              "renamed wholesale, or did run.py emit nothing?",
               file=sys.stderr)
         return 1
 
@@ -90,11 +98,17 @@ def main() -> int:
         print(f"{name}: {current[name]['us']:.0f}us vs "
               f"baseline {baseline[name]['us']:.0f}us ({ratio:.2f}x)")
     if regressions:
-        print(f"\nFAIL: {len(regressions)} record(s) regressed "
-              f">{args.max_ratio}x:", file=sys.stderr)
+        worst = max(regressions, key=lambda r: r[3])
+        print(f"\nFAIL: {len(regressions)} record(s) regressed more than "
+              f"{args.max_ratio}x vs {args.baseline} (worst: {worst[0]} at "
+              f"{worst[3]:.2f}x):", file=sys.stderr)
         for name, cur, base, ratio in regressions:
-            print(f"  {name}: {cur:.0f}us vs {base:.0f}us ({ratio:.2f}x)",
+            print(f"  {name}: baseline {base:.0f}us -> current {cur:.0f}us "
+                  f"({ratio:.2f}x > {args.max_ratio:.1f}x limit)",
                   file=sys.stderr)
+        print("deliberate perf change? regenerate the baseline with the "
+              "same `run.py --ci --json` invocation and commit it",
+              file=sys.stderr)
         return 1
     if args.require_all and (new or missing):
         print(f"\nFAIL (--require-all): record sets differ "

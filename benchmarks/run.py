@@ -24,6 +24,14 @@ Pipelining: the CI smoke always emits a ``ci_selfprod_pipelined`` vs
 ``pipeline_probe`` into the JSON meta (blocking allocate syncs per call on
 each path) so the workflow can gate ``host_sync_count`` ≤ waves, not
 per-chunk; ``--pipeline`` switches the sync structure for the full suite.
+
+Fused engine: the CI smoke loops its self-product records over every
+engine in ``core.executor.available_engines()`` (so ``fused_hash`` and any
+future registration are benched automatically), adds a ``ci_selfprod_fused``
+multi-chunk probe, and writes a ``fused_probe`` into the JSON meta whose
+``host_syncs_fused`` the workflow gates at **zero** — the plan-derived
+sizing contract.  ``--sizing`` switches the sizing policy for the full
+suite.
 """
 from __future__ import annotations
 
@@ -37,6 +45,9 @@ RECORDS: list = []
 # Filled by the CI smoke's pipeline probe; written into the JSON meta so the
 # workflow can gate host_sync_count ≤ waves (not per-chunk) from the artifact.
 PIPELINE_PROBE: dict = {}
+# Filled by the CI smoke's fused probe: blocking syncs of one fused-engine
+# two-wave call (the plan-derived sizing contract is exactly zero).
+FUSED_PROBE: dict = {}
 
 
 def _emit(name, us, derived):
@@ -54,21 +65,25 @@ def _make_mesh(n_devices: int):
 
 
 def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
-             pipeline: str = "two_wave") -> None:
+             pipeline: str = "two_wave", sizing: str = "auto") -> None:
     """Tiny synthetic-graph smoke run for the bench-smoke CI job.
 
-    One spgemm self-product and a 2-iteration MCL on a 256-node random
-    graph; small enough for an ubuntu-latest runner, large enough that a
-    pathological slowdown (re-tracing per iteration, broken cache keys)
-    blows past the 2x regression gate.  ``batch``/``reuse_plan`` add the
-    amortized-path records (batched vs per-matrix loop; plan-cache-served
-    self-product) the workflow asserts on.  ``pipeline`` switches the
-    executor sync structure for every record except the explicit
-    pipelined-vs-legacy probe pair, which always runs both paths.
+    One spgemm self-product per *registered engine* (the loop reads
+    ``core.executor.available_engines()``, so new engines are benched
+    without editing this driver) and a 2-iteration MCL on a 256-node
+    random graph; small enough for an ubuntu-latest runner, large enough
+    that a pathological slowdown (re-tracing per iteration, broken cache
+    keys) blows past the 2x regression gate.  ``batch``/``reuse_plan`` add
+    the amortized-path records (batched vs per-matrix loop;
+    plan-cache-served self-product) the workflow asserts on.  ``pipeline``
+    switches the executor sync structure for every record except the
+    explicit pipelined-vs-legacy and fused probes, which always run their
+    own paths.
     """
     import jax
     import numpy as np
     from repro.apps.markov_clustering import mcl
+    from repro.core.executor import available_engines
     from repro.core.spgemm import PlanCache, spgemm, spgemm_batched
     from repro.sparse.formats import csr_from_dense, csr_to_dense
 
@@ -78,14 +93,15 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
                  rng.integers(1, 5, (n, n)), 0).astype(np.float32)
     a = csr_from_dense(x)
 
-    for engine in ("sort", "hash"):
-        spgemm(a, a, engine=engine, mesh=mesh,
-               pipeline=pipeline)  # warm the program cache
+    for engine in available_engines():
+        spgemm(a, a, engine=engine, mesh=mesh, pipeline=pipeline,
+               sizing=sizing)  # warm the program cache
         # min over reps: the noise-robust statistic for a shared CI runner
         best = float("inf")
         for _ in range(3):
             t0 = time.perf_counter()
-            res = spgemm(a, a, engine=engine, mesh=mesh, pipeline=pipeline)
+            res = spgemm(a, a, engine=engine, mesh=mesh, pipeline=pipeline,
+                         sizing=sizing)
             jax.block_until_ready(res.c)  # async dispatch: time ALL the work
             best = min(best, time.perf_counter() - t0)
         _emit(f"ci_selfprod_{engine}", best * 1e6,
@@ -119,16 +135,38 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
             else "host_syncs_legacy"
         PIPELINE_PROBE[key] = syncs
 
+    # Fused zero-sync probe on the same forced multi-chunk plan: the fused
+    # engine's plan-derived sizing must dispatch the whole call — all
+    # chunks, device indptr, epilogue — without a single blocking host
+    # sync.  The workflow gates host_syncs_fused == 0 from the artifact.
+    spgemm(a, a, engine="fused_hash", mesh=mesh, row_chunk=64)  # warm
+    s0 = cache_stats()["host_sync_count"]
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        res = spgemm(a, a, engine="fused_hash", mesh=mesh, row_chunk=64)
+        jax.block_until_ready(res.c)
+        best = min(best, time.perf_counter() - t0)
+    # raw delta over ALL reps (no per-call averaging): the contract is
+    # zero syncs, and a single stray sync must not floor-divide away
+    syncs = cache_stats()["host_sync_count"] - s0
+    _emit("ci_selfprod_fused", best * 1e6,
+          f"host_syncs={syncs};nnz_c={res.info['nnz_c']};"
+          f"shards={res.info['n_shards']}")
+    FUSED_PROBE["host_syncs_fused"] = syncs
+
     if reuse_plan:
         # Plan-cache-served self-product: first call plans + populates,
         # timed calls skip Alg. 1 + Table-I binning entirely.
         cache = PlanCache()
-        spgemm(a, a, engine="sort", mesh=mesh, plan=cache, pipeline=pipeline)
+        spgemm(a, a, engine="sort", mesh=mesh, plan=cache, pipeline=pipeline,
+               sizing=sizing)
         best = float("inf")
         for _ in range(3):
             t0 = time.perf_counter()
             jax.block_until_ready(spgemm(a, a, engine="sort", mesh=mesh,
-                                         plan=cache, pipeline=pipeline).c)
+                                         plan=cache, pipeline=pipeline,
+                                         sizing=sizing).c)
             best = min(best, time.perf_counter() - t0)
         _emit("ci_selfprod_sort_reuse", best * 1e6,
               f"plan_hits={cache.hits};plan_misses={cache.misses}")
@@ -142,24 +180,27 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
             for _ in range(batch)]
         b = mats[0]
         spgemm_batched(mats, b, engine="sort", mesh=mesh,
-                       pipeline=pipeline)                       # warm
+                       pipeline=pipeline, sizing=sizing)        # warm
         for m in mats:
-            spgemm(m, b, engine="sort", mesh=mesh, pipeline=pipeline)  # warm
+            spgemm(m, b, engine="sort", mesh=mesh, pipeline=pipeline,
+                   sizing=sizing)  # warm
         best_b = best_l = float("inf")
         for _ in range(3):
             t0 = time.perf_counter()
             res_b = spgemm_batched(mats, b, engine="sort", mesh=mesh,
-                                   pipeline=pipeline)
+                                   pipeline=pipeline, sizing=sizing)
             jax.block_until_ready(res_b.cs)
             best_b = min(best_b, time.perf_counter() - t0)
             t0 = time.perf_counter()
             res_l = [spgemm(m, b, engine="sort", mesh=mesh,
-                            pipeline=pipeline) for m in mats]
+                            pipeline=pipeline, sizing=sizing) for m in mats]
             jax.block_until_ready([r.c for r in res_l])
             best_l = min(best_l, time.perf_counter() - t0)
-        for cb, rl in zip(res_b.cs, res_l):  # artifact-path sanity
+        for mi, (cb, rl) in enumerate(zip(res_b.cs, res_l)):
             assert np.array_equal(np.asarray(csr_to_dense(cb)),
-                                  np.asarray(csr_to_dense(rl.c)))
+                                  np.asarray(csr_to_dense(rl.c))), (
+                f"batched member {mi} diverged from its per-matrix "
+                f"spgemm result (engine=sort, pipeline={pipeline})")
         _emit("ci_batched_sort", best_b * 1e6,
               f"batch={batch};nnz_c={res_b.info['nnz_c']};"
               f"shards={res_b.info['n_shards']}")
@@ -167,7 +208,8 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
               f"batch={batch};nnz_c={res_l[0].info['nnz_c']}")
 
     t0 = time.perf_counter()
-    r = mcl(a, e=2, max_iters=2, tol=0.0, mesh=mesh, pipeline=pipeline)
+    r = mcl(a, e=2, max_iters=2, tol=0.0, mesh=mesh, pipeline=pipeline,
+            sizing=sizing)
     us = (time.perf_counter() - t0) * 1e6
     _emit("ci_mcl", us, f"iters={r.n_iterations};"
           f"clusters={len(np.unique(r.clusters))};"
@@ -177,8 +219,12 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--engine", default="sort", choices=("sort", "hash"),
-                    help="accumulation engine for the SpGEMM benchmarks")
+    ap.add_argument("--engine", default="sort",
+                    help="accumulation engine for the SpGEMM benchmarks; "
+                         "validated against core.executor.available_engines()"
+                         " after startup, so registered engines (including "
+                         "fused_hash and future ones) are benchable without "
+                         "editing this driver")
     ap.add_argument("--gather", default="xla", choices=("auto", "xla", "aia"),
                     help="B-row gather backend (Fig. 7 ablation axis)")
     ap.add_argument("--pipeline", default="two_wave",
@@ -186,6 +232,12 @@ def main() -> None:
                     help="executor sync structure: two_wave = one coalesced "
                          "allocate sync + device-side reassembly; legacy = "
                          "per-chunk syncs + NumPy reassembly (A/B baseline)")
+    ap.add_argument("--sizing", default="auto",
+                    choices=("auto", "planned", "measured"),
+                    help="output sizing: planned = sync-free Alg. 1 bounds "
+                         "(zero blocking host syncs; the fused_hash "
+                         "default), measured = the uniqueCount-sync escape "
+                         "hatch, auto = planned for fused engines")
     ap.add_argument("--devices", type=int, default=1,
                     help="shard the SpGEMM executor over N forced host "
                          "devices (sets XLA_FLAGS before importing jax)")
@@ -216,9 +268,17 @@ def main() -> None:
         ).strip()
     mesh = _make_mesh(args.devices)
 
+    # --engine choices come from the live registry (not a frozen argparse
+    # list); imported only now because XLA_FLAGS must precede jax import.
+    from repro.core.executor import available_engines
+
+    if args.engine not in available_engines():
+        ap.error(f"--engine {args.engine!r} is not a registered engine; "
+                 f"available: {', '.join(available_engines())}")
+
     if args.ci:
         ci_smoke(mesh, batch=args.batch, reuse_plan=args.reuse_plan,
-                 pipeline=args.pipeline)
+                 pipeline=args.pipeline, sizing=args.sizing)
         if args.json:
             _write_json(args.json, args)
         return
@@ -231,7 +291,7 @@ def main() -> None:
         names=None if args.full else ["scircuit", "p2p-Gnutella04",
                                       "Economics", "Protein"],
         n_override=None if args.full else 1024,
-        methods=(eng,) if not args.full else ("sort", "hash"),
+        methods=(eng,) if not args.full else available_engines(),
         gathers=(args.gather,), mesh=mesh))
     for r in names:
         _emit(f"selfprod_{r['workload']}", r[f"{eng}_ms"] * 1e3,
@@ -256,7 +316,7 @@ def main() -> None:
              "WindTunnel", "Protein"),
             n_override=None if args.full else 1024,
             engine=eng, gather=args.gather, mesh=mesh,
-            pipeline=args.pipeline):
+            pipeline=args.pipeline, sizing=args.sizing):
         _emit(f"contraction_{r['workload']}", r["spgemm_ms"] * 1e3,
               f"vs_dense_pct={r['reduction_vs_dense_pct']:.1f};ip={r['total_ip']}")
     for r in bench_graph_apps.bench_mcl(
@@ -265,7 +325,7 @@ def main() -> None:
             max_iters=2 if not args.full else 3,
             n_override=None if args.full else 1024,
             engine=eng, gather=args.gather, mesh=mesh,
-            pipeline=args.pipeline):
+            pipeline=args.pipeline, sizing=args.sizing):
         _emit(f"mcl_{r['workload']}", r["spgemm_ms"] * 1e3,
               f"vs_dense_pct={r['reduction_vs_dense_pct']:.1f};"
               f"clusters={r['n_clusters']};plan_hits={r['plan_hits']}")
@@ -277,7 +337,7 @@ def main() -> None:
                 ("RoadTX", "web-Google", "Economics", "Protein"),
                 batch=args.batch, n_override=None if args.full else 1024,
                 engine=eng, gather=args.gather, mesh=mesh,
-                pipeline=args.pipeline):
+                pipeline=args.pipeline, sizing=args.sizing):
             _emit(f"batched_{r['workload']}", r["batched_ms"] * 1e3,
                   f"batch={r['batch']};loop_ms={r['loop_ms']:.1f};"
                   f"speedup_x={r['speedup_x']:.2f}")
@@ -312,9 +372,12 @@ def _write_json(path: str, args) -> None:
             "gather": args.gather, "ci": bool(args.ci),
             "full": bool(args.full), "batch": args.batch,
             "reuse_plan": bool(args.reuse_plan),
+            "sizing": args.sizing,
             "cache_stats": cache_stats()}
     if PIPELINE_PROBE:
         meta["pipeline_probe"] = dict(PIPELINE_PROBE)
+    if FUSED_PROBE:
+        meta["fused_probe"] = dict(FUSED_PROBE)
     with open(path, "w") as f:
         json.dump({"meta": meta, "records": RECORDS}, f, indent=2)
     print(f"wrote {len(RECORDS)} records to {path}", file=sys.stderr)

@@ -206,6 +206,7 @@ def train_gnn_minibatch(
     weight_sets: Optional[np.ndarray] = None,
     reuse_plan: bool = True,
     pipeline: str = "two_wave",
+    sizing: str = "auto",
 ) -> Tuple[Dict, List[float], Dict[str, int]]:
     """Mini-batch training on ``bulk_sample`` subgraph chains.
 
@@ -221,7 +222,9 @@ def train_gnn_minibatch(
     stats).  ``weight_sets``
     forwards an edge-reweighting ensemble to ``bulk_sample``, turning each
     probability product into one batched SpGEMM.  ``pipeline`` forwards
-    the executor sync structure to every sampling-chain SpGEMM.  ``a``
+    the executor sync structure to every sampling-chain SpGEMM, and
+    ``sizing`` its output sizing (planned Alg. 1 bounds vs the measured
+    uniqueCount sync).  ``a``
     should already be normalized as the architecture expects
     (e.g. ``normalize_adjacency``).
     """
@@ -251,7 +254,7 @@ def train_gnn_minibatch(
                 seed=seed * 100_000 + bi,
                 engine=engine, gather=cfg.gather, mesh=mesh,
                 plan_cache=plan_cache, weight_sets=weight_sets,
-                pipeline=pipeline,
+                pipeline=pipeline, sizing=sizing,
             )
             y = jnp.asarray(labels_np[frontiers[0]])
 

@@ -23,18 +23,21 @@ def label_matrix(labels: np.ndarray, n: int | None = None,
 
 def graph_contraction(g: CSR, labels: np.ndarray, method: str = "sort",
                       gather: str = "auto", schedule: str = "grouped",
-                      mesh=None, pipeline: str = "two_wave"):
+                      mesh=None, pipeline: str = "two_wave",
+                      sizing: str = "auto"):
     """Returns (C, infos): contracted adjacency + per-SpGEMM counters.
 
     ``method``/``gather``/``schedule`` select the executor's engine, B-row
     gather backend, and Table-I scheduling (the paper's ablation axes);
-    ``mesh`` runs both SpGEMMs through the sharded multi-device executor
-    and ``pipeline`` picks the two-wave vs legacy sync structure.
+    ``mesh`` runs both SpGEMMs through the sharded multi-device executor,
+    ``pipeline`` picks the two-wave vs legacy sync structure, and
+    ``sizing`` the measured-vs-planned output sizing (planned = zero
+    blocking syncs per SpGEMM for fused engines).
     """
     s = label_matrix(labels, n=g.n_rows)
     st = csr_transpose(s)
     r1 = spgemm(s, g, engine=method, gather=gather, schedule=schedule,
-                mesh=mesh, pipeline=pipeline)
+                mesh=mesh, pipeline=pipeline, sizing=sizing)
     r2 = spgemm(r1.c, st, engine=method, gather=gather, schedule=schedule,
-                mesh=mesh, pipeline=pipeline)
+                mesh=mesh, pipeline=pipeline, sizing=sizing)
     return r2.c, [r1.info, r2.info]

@@ -87,6 +87,7 @@ def mcl(
     mesh=None,
     reuse_plan: bool = True,
     pipeline: str = "two_wave",
+    sizing: str = "auto",
 ) -> MCLResult:
     """Algorithm 6.  ``e=2`` expansion = one SpGEMM self-product per iter.
 
@@ -103,6 +104,9 @@ def mcl(
     ``pipeline`` selects the executor sync structure (``"two_wave"`` =
     one coalesced allocate sync + device-side reassembly per expansion;
     ``"legacy"`` = the per-chunk-sync reference path).
+    ``sizing`` selects the executor's output sizing (``"planned"`` = the
+    sync-free Alg. 1 bound path, the default for ``method="fused_hash"``;
+    ``"measured"`` = the uniqueCount-sync escape hatch).
     """
     a = add_self_loops(g)
     a = csr_column_normalize(a)
@@ -116,7 +120,7 @@ def mcl(
         for _ in range(e - 1):
             res = spgemm(b, a, engine=method, gather=gather,
                          schedule=schedule, mesh=mesh, plan=plan_cache,
-                         pipeline=pipeline)
+                         pipeline=pipeline, sizing=sizing)
             infos.append(res.info)
             b = res.c
         # Prune: drop < theta, keep top-k per column

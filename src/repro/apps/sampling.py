@@ -78,14 +78,16 @@ def sample_rows(p: CSR, s: int, rng: np.random.Generator) -> np.ndarray:
 
 def extract(a: CSR, rows: np.ndarray, cols: np.ndarray,
             engine: str = "sort", gather: str = "auto", mesh=None,
-            plan_cache=None, pipeline: str = "two_wave") -> CSR:
+            plan_cache=None, pipeline: str = "two_wave",
+            sizing: str = "auto") -> CSR:
     """A[rows, cols] via SpGEMM with selection matrices: R · A · Cᵀ."""
     r = selection_matrix(rows, a.n_rows)
     c = selection_matrix(cols, a.n_cols)
     ra = spgemm(r, a, engine=engine, gather=gather, mesh=mesh,
-                plan=plan_cache, pipeline=pipeline).c
+                plan=plan_cache, pipeline=pipeline, sizing=sizing).c
     return spgemm(ra, csr_transpose(c), engine=engine, gather=gather,
-                  mesh=mesh, plan=plan_cache, pipeline=pipeline).c
+                  mesh=mesh, plan=plan_cache, pipeline=pipeline,
+                  sizing=sizing).c
 
 
 def _weighted_members(a: CSR, weight_sets: np.ndarray) -> List[CSR]:
@@ -132,6 +134,7 @@ def bulk_sample(
     plan_cache=None,
     weight_sets: Optional[np.ndarray] = None,
     pipeline: str = "two_wave",
+    sizing: str = "auto",
 ) -> Tuple[List[CSR], List[np.ndarray]]:
     """GraphSAGE-style L-layer sampling for one minibatch.
 
@@ -146,7 +149,9 @@ def bulk_sample(
     becomes one batched SpGEMM and sampling draws from the averaged
     distribution (``None`` = the single-matrix path, unchanged).
     ``pipeline`` selects the executor sync structure (two-wave coalesced
-    allocate sync + device reassembly vs the legacy per-chunk path); the
+    allocate sync + device reassembly vs the legacy per-chunk path) and
+    ``sizing`` the output sizing (planned Alg. 1 bounds = zero blocking
+    syncs for fused engines, vs the measured uniqueCount sync); the
     chain's shared adjacency also makes every step after the first serve
     B's replicated buffers from the executor's ``OperandCache``.
     """
@@ -161,19 +166,19 @@ def bulk_sample(
         if members is None:
             p = spgemm(q_mat, a, engine=engine, gather=gather,
                        mesh=mesh, plan=plan_cache,
-                       pipeline=pipeline).c  # P = Q^l · A
+                       pipeline=pipeline, sizing=sizing).c  # P = Q^l · A
         else:
             # P_w = Q^l · A_w for every reweighting, one planned run
             batch = spgemm_batched(q_mat, members, engine=engine,
                                    gather=gather, mesh=mesh, plan=plan_cache,
-                                   pipeline=pipeline)
+                                   pipeline=pipeline, sizing=sizing)
             p = _ensemble_mean(batch.cs)
         p = norm_rows(p)                            # NORM
         sampled = sample_rows(p, fanout, rng)       # SAMPLE
         q_next = np.unique(np.concatenate([q_cur, sampled]))  # self + nbrs
         adjs.append(extract(a, q_cur, q_next, engine=engine, gather=gather,
                             mesh=mesh, plan_cache=plan_cache,
-                            pipeline=pipeline))
+                            pipeline=pipeline, sizing=sizing))
         frontiers.append(q_next)
         q_cur = q_next
     return adjs, frontiers

@@ -52,6 +52,39 @@ accumulate on the already-device-resident keys.  ``cache_stats()`` reports
 and CI gates on it.  ``pipeline="legacy"`` keeps the per-chunk-sync
 reference path for A/B benchmarks and equivalence tests.
 
+**Fused single-pass engine + sync-free sizing**: the paper's hash flow
+forms intermediate products and inserts them into the table in *one pass*
+over A's row — ``engine="fused_hash"`` restores exactly that: one cached
+program per group-chunk fusing gather → product formation → linear-probe
+insertion (Pallas Algorithm-4 kernel on TPU, the vmapped scan engine
+elsewhere), so the enumerate key/value stream never becomes an HBM-resident
+buffer handed between programs and the allocate pass disappears entirely.
+What allocate used to buy — output sizing — comes for free from phase 1:
+uniqueCount ≤ min(IP, n_cols) per row, and ``GroupPlan.row_ip`` carries the
+Alg. 1 counts, so ``sizing="planned"`` (the fused default) picks every
+``out_cap`` and the epilogue capacity from pow2-quantized host bounds and
+assembles the int32 indptr *on device* — ``host_sync_count`` stays at
+**zero** for the whole call, with ``nnz`` returned as a device scalar that
+blocks only at caller materialization.  (The ``spgemm()`` façade
+materializes it when it builds ``info`` — but only *after* every program
+in the call has been dispatched, so the host never stalls mid-pipeline
+the way the measured sizing sync does; callers that want a fully
+non-blocking handle use ``execute_plan`` directly.)  ``sizing="measured"`` is the
+escape hatch for pathologically overlapping supports where the IP bound is
+loose (it keeps the one coalesced uniqueCount sync and exact capacities);
+``"auto"`` resolves to planned for fused engines and measured otherwise.
+
+**Sharded scatter epilogue**: with more than one shard, chunk outputs no
+longer stream through the lead device one padded block at a time.  Each
+chunk packs densely into its shard's *local* CSR segment on the shard
+device together with a destination map (``phases.reassemble_segment``, a
+running-offset donated-buffer update), and the merge device applies one
+destination-mapped scatter per shard (``phases.merge_segments``) — the
+reassembly compute parallelizes across shards and merge traffic is
+``n_shards`` compact nnz-sized transfers.  Bit-exact vs the direct
+single-device epilogue: shard row sets are disjoint, so every final slot
+is written by exactly one segment.
+
 CSR reassembly is a vectorized inverse-permutation scatter.  The two-wave
 path runs it as a jitted device epilogue (``phases.reassemble_device``):
 flat destination offsets derive from the (host) indptr, and each chunk's
@@ -127,6 +160,7 @@ from repro.sparse.formats import CSR, ELL, csr_to_ell
 Gather = Literal["auto", "xla", "aia"]
 Schedule = Literal["grouped", "natural"]
 Pipeline = Literal["two_wave", "legacy"]
+Sizing = Literal["auto", "planned", "measured"]
 
 # Rows per program dispatch are padded to a multiple of this so repeated
 # calls with slightly different group sizes reuse compiled programs.
@@ -148,12 +182,21 @@ class Engine:
     ``allocate(keys, table_cap)`` → per-row uniqueCount (Algorithms 2/3).
     ``accumulate(keys, vals, table_cap, out_cap)`` → (cols, vals, counts)
     with rows column-sorted and trimmed/padded to ``out_cap`` (Algorithm 5).
+
+    ``fused=True`` marks a single-pass engine: under ``sizing="planned"``
+    the executor compiles one fused program per group-chunk (gather →
+    product formation → table insertion, no allocate pass and no
+    materialized key/value stream between programs) and sizes ``out_cap``
+    from the plan's Alg. 1 IP bounds instead of a uniqueCount host sync.
+    The ``allocate``/``accumulate`` pair is still required — it serves the
+    ``sizing="measured"`` escape hatch and the legacy pipeline.
     """
 
     name: str
     allocate: Callable[[jax.Array, int], jax.Array]
     accumulate: Callable[[jax.Array, jax.Array, int, int],
                          Tuple[jax.Array, jax.Array, jax.Array]]
+    fused: bool = False
 
 
 ENGINES: Dict[str, Engine] = {}
@@ -191,6 +234,13 @@ def _sort_accumulate(keys, vals, table_cap: int, out_cap: int):
 register_engine(Engine("hash", phases.allocate_hash, _hash_accumulate))
 register_engine(Engine("sort", lambda k, cap: phases.allocate_sort(k),
                        _sort_accumulate))
+# The paper's Alg. 2/3/5 as ONE pass over A's row (the multi-phase flow the
+# hash table exists for): gather → product formation → linear-probe insert
+# fused into a single cached program per group-chunk.  The allocate/
+# accumulate pair below only serves sizing="measured" and pipeline="legacy";
+# the planned path never runs them.
+register_engine(Engine("fused_hash", phases.allocate_hash, _hash_accumulate,
+                       fused=True))
 
 
 # ---------------------------------------------------------------------------
@@ -267,6 +317,71 @@ def _gather_b_aia_batched(b_idx, b_val_b, cols_a):
 BATCHED_GATHERS: Dict[str, Callable] = {
     "xla": _gather_b_xla_batched, "aia": _gather_b_aia_batched,
 }
+
+
+# ---------------------------------------------------------------------------
+# Output sizing — measured (uniqueCount sync) vs planned (Alg. 1 bounds)
+# ---------------------------------------------------------------------------
+
+def resolve_sizing(sizing: Sizing, engine: str, plan=None) -> str:
+    """``"auto"`` → ``"planned"`` for fused engines, ``"measured"``
+    otherwise.
+
+    Planned sizing derives every chunk's ``out_cap`` and the epilogue
+    capacity from the plan's per-row Alg. 1 IP counts (uniqueCount ≤
+    min(IP, n_cols) per row — a bound phase 1 already paid for), so the
+    two-wave pipeline dispatches end-to-end with **zero** blocking host
+    syncs.  ``"measured"`` is the escape hatch for pathological overlap
+    (many duplicate columns per row make the IP bound loose, inflating
+    ``out_cap`` and the output buffers): it keeps the single coalesced
+    uniqueCount sync and exact capacities.
+    """
+    if sizing not in ("auto", "planned", "measured"):
+        raise ValueError(f"unknown sizing {sizing!r}")
+    if sizing == "auto":
+        return "planned" if (get_engine(engine).fused
+                             and getattr(plan, "row_ip", None) is not None) \
+            else "measured"
+    if sizing == "planned" and plan is not None \
+            and getattr(plan, "row_ip", None) is None:
+        raise ValueError(
+            "sizing='planned' needs a plan carrying Alg. 1 row IP counts "
+            "(GroupPlan.row_ip); re-plan with core.grouping.group_rows")
+    return sizing
+
+
+def chunk_capacity_bounds(plan: GroupPlan, rows: np.ndarray,
+                          n_cols: int) -> Tuple[int, int]:
+    """(max-unique, total-unique) bounds for one chunk of rows.
+
+    uniqueCount of row r is at most ``min(IP[r], n_cols(B))`` — every
+    intermediate product lands on one output column, and there are only
+    ``n_cols`` distinct columns.  Both bounds are exact host arithmetic on
+    the plan's Alg. 1 counts: no device work, no sync.
+    """
+    ip = np.asarray(plan.row_ip)[rows].astype(np.int64)
+    unique = np.minimum(ip, int(n_cols))
+    return int(unique.max(initial=0)), int(unique.sum())
+
+
+def _planned_out_cap(max_unique: int, table_cap: int, ncol_cap: int) -> int:
+    """pow2-quantized chunk output capacity from the plan-derived bound —
+    the sync-free mirror of ``_out_cap_from_counts``."""
+    return max(min(next_pow2(max(max_unique, 1)), max(table_cap, 1),
+                   ncol_cap), 1)
+
+
+def _fused_kernel_mode(dt: str) -> str:
+    """Algorithm-4 routing inside the fused program: the Pallas kernel
+    (compiled on TPU, interpret under ``REPRO_KERNEL_BACKEND=interpret``)
+    for float32 streams, the vmapped scan engine everywhere else (the
+    kernel's value plane is float32-only)."""
+    if dt != np.dtype(np.float32).str:
+        return "xla"
+    from repro.kernels.ops import resolve_backend
+
+    be = resolve_backend("auto")
+    return be if be in ("pallas", "interpret") else "xla"
 
 
 # ---------------------------------------------------------------------------
@@ -520,6 +635,72 @@ def _build_accumulate_batched(table_cap: int, out_cap: int,
         lambda v: eng.accumulate(keys, v, table_cap, out_cap))(vals_b))
 
 
+def _build_fused(a_cap: int, gather: str, table_cap: int, out_cap: int,
+                 kernel: str) -> Callable:
+    """Compile the fused single-pass program: A-row gather → B-row gather
+    (xla or the AIA stream, feeding the table directly) → product
+    formation → linear-probe insertion → sorted trim, all one jitted
+    program — the enumerate key/value stream never becomes a
+    device-resident buffer handed between programs, and no allocate pass
+    runs (``out_cap`` comes from the plan's Alg. 1 bounds)."""
+    gat = GATHERS[gather]
+
+    @jax.jit
+    def program(a_indptr, a_indices, a_data, rows, b_idx, b_val):
+        cols_a, vals_a = phases.gather_group_rows(
+            a_indptr, a_indices, a_data, rows, a_cap
+        )
+        bi, bv = gat(b_idx, b_val, cols_a)
+        keys, vals = phases.combine_products(cols_a, vals_a, bi, bv)
+        return phases.fused_hash_sorted(keys, vals, table_cap, out_cap,
+                                        kernel=kernel)
+
+    return program
+
+
+def _build_fused_batched(a_cap: int, gather: str, table_cap: int,
+                         out_cap: int) -> Callable:
+    """Batched fused program: the structural gather and key stream run
+    once, the per-member value streams are vmapped through the single-pass
+    insert (scan engine — the batch axis rides XLA's vmap, not the Pallas
+    grid)."""
+    gat = BATCHED_GATHERS[gather]
+
+    @jax.jit
+    def program(a_indptr, a_indices, a_data_b, rows, b_idx, b_val_b):
+        cols_a, vals_a_b = phases.gather_group_rows_batched(
+            a_indptr, a_indices, a_data_b, rows, a_cap
+        )
+        bi, bv_b = gat(b_idx, b_val_b, cols_a)
+        keys, vals_b = phases.combine_products_batched(
+            cols_a, vals_a_b, bi, bv_b)
+        return jax.vmap(lambda v: phases.fused_hash_sorted(
+            keys, v, table_cap, out_cap, kernel="xla"))(vals_b)
+
+    return program
+
+
+def _build_segment() -> Callable:
+    """Shard-local epilogue half (``phases.reassemble_segment``): segment
+    buffers, destination map, and the running offset are donated so chunk
+    after chunk updates in place on the shard device."""
+    return jax.jit(phases.reassemble_segment, donate_argnums=(0, 1, 2, 3))
+
+
+def _build_segment_batched() -> Callable:
+    return jax.jit(phases.reassemble_segment_batched,
+                   donate_argnums=(0, 1, 2, 3))
+
+
+def _build_merge() -> Callable:
+    """Per-shard merge scatter into the (donated) final CSR buffers."""
+    return jax.jit(phases.merge_segments, donate_argnums=(0, 1))
+
+
+def _build_merge_batched() -> Callable:
+    return jax.jit(phases.merge_segments_batched, donate_argnums=(0, 1))
+
+
 def _build_scatter() -> Callable:
     """Jitted device-side reassembly epilogue (one chunk → final buffers).
     Keyed on (padded, out_cap, cap, dtype) like every other program, so
@@ -541,8 +722,14 @@ _BUILDERS = {
     "accumulate": _build_accumulate,
     "benumerate": _build_enumerate_batched,
     "baccumulate": _build_accumulate_batched,
+    "fused": _build_fused,
+    "bfused": _build_fused_batched,
     "scatter": _build_scatter,
     "bscatter": _build_scatter_batched,
+    "segment": _build_segment,
+    "bsegment": _build_segment_batched,
+    "merge": _build_merge,
+    "bmerge": _build_merge_batched,
 }
 
 
@@ -576,6 +763,7 @@ def ungrouped_plan(plan: GroupPlan) -> GroupPlan:
         table_capacities=(cap, cap, cap, cap),
         max_ip=plan.max_ip,
         total_ip=plan.total_ip,
+        row_ip=plan.row_ip,
     )
 
 
@@ -806,6 +994,152 @@ def _scatter_positions(indptr: np.ndarray, rows: np.ndarray,
     return pos[ok], ok, r
 
 
+@dataclasses.dataclass
+class _ChunkRun:
+    """One chunk's accumulated output, still on its shard device."""
+
+    item: WorkItem
+    padded: int
+    out_cap: int
+    cols: jax.Array    # (R_pad, out_cap)
+    vals: jax.Array    # (R_pad, out_cap) or (batch, R_pad, out_cap)
+    counts: jax.Array  # (R_pad,)
+
+
+class _Epilogue:
+    """Device-side CSR scatter epilogue — direct or sharded.
+
+    Direct (one shard): each chunk scatters straight into the final
+    pow2-capacity buffers on the merge device (the pre-PR-5 path).
+
+    Sharded (>1 shard): each chunk is packed *densely* into its shard's
+    local CSR segment on the shard device, together with a destination map
+    into the final buffers (``phases.reassemble_segment``); ``finish()``
+    then moves one compact ``(segment, values, dest)`` triple per shard to
+    the merge device and applies one merge scatter per shard.  The
+    reassembly compute runs shard-parallel and the lead device receives
+    ``n_shards`` nnz-sized transfers instead of every padded chunk output
+    — the ROADMAP's "shard the epilogue" item.  Results are bit-identical
+    to the direct path: row destinations are disjoint across shards, so
+    every final slot is written by exactly one segment.
+
+    ``seg_caps`` are the per-shard segment capacities (pow2-quantized,
+    from measured uniqueCounts or planned Alg. 1 bounds); ``batch`` turns
+    on the batched value planes.
+    """
+
+    def __init__(self, devices, cap: int, dtype, dt: str,
+                 seg_caps: Optional[List[int]] = None,
+                 batch: Optional[int] = None):
+        self.devices = devices
+        self.merge_dev = merge_device(devices)
+        self.cap = cap
+        self.dt = dt
+        self.batch = batch
+        self.sharded = len(devices) > 1
+        self.idx_buf = replicate_to(jnp.zeros(cap, jnp.int32), self.merge_dev)
+        dat_shape = (cap,) if batch is None else (batch, cap)
+        self.dat_buf = replicate_to(jnp.zeros(dat_shape, dtype),
+                                    self.merge_dev)
+        self.segs: Dict[int, list] = {}
+        if self.sharded:
+            for s, dev in enumerate(devices):
+                seg_cap = seg_caps[s]
+                if seg_cap == 0:
+                    continue  # shard got no work items
+                seg_shape = (seg_cap,) if batch is None else (batch, seg_cap)
+                self.segs[s] = [
+                    replicate_to(jnp.zeros(seg_cap, jnp.int32), dev),
+                    replicate_to(jnp.zeros(seg_shape, dtype), dev),
+                    # dest sentinel = final capacity → dropped at merge
+                    replicate_to(jnp.full(seg_cap, cap, jnp.int32), dev),
+                    replicate_to(jnp.zeros((), jnp.int32), dev),
+                    seg_cap,
+                ]
+
+    def add_chunk(self, run: _ChunkRun, fin_starts: jax.Array) -> None:
+        """Consume one chunk's output.  ``fin_starts`` must live on the
+        shard device (sharded) or the merge device (direct)."""
+        b = () if self.batch is None else (self.batch,)
+        if not self.sharded:
+            kind = "scatter" if self.batch is None else "bscatter"
+            prog = _get_program(
+                kind, b + (run.padded, run.out_cap, self.cap, self.dt))
+            self.idx_buf, self.dat_buf = prog(
+                self.idx_buf, self.dat_buf,
+                replicate_to(run.cols, self.merge_dev),
+                replicate_to(run.vals, self.merge_dev),
+                replicate_to(run.counts, self.merge_dev),
+                fin_starts,
+            )
+            return
+        seg = self.segs.get(run.item.shard)
+        if seg is None:
+            # seg_cap 0: every row this shard owns is bounded/measured at
+            # zero output nnz, so there is nothing to pack or merge.
+            return
+        kind = "segment" if self.batch is None else "bsegment"
+        prog = _get_program(
+            kind, b + (run.padded, run.out_cap, seg[4], self.dt))
+        seg[0], seg[1], seg[2], seg[3] = prog(
+            seg[0], seg[1], seg[2], seg[3],
+            run.cols, run.vals, run.counts, fin_starts)
+
+    def finish(self) -> Tuple[jax.Array, jax.Array]:
+        if self.sharded:
+            b = () if self.batch is None else (self.batch,)
+            kind = "merge" if self.batch is None else "bmerge"
+            for s in sorted(self.segs):
+                seg = self.segs[s]
+                prog = _get_program(kind, b + (seg[4], self.cap, self.dt))
+                self.idx_buf, self.dat_buf = prog(
+                    self.idx_buf, self.dat_buf,
+                    replicate_to(seg[0], self.merge_dev),
+                    replicate_to(seg[1], self.merge_dev),
+                    replicate_to(seg[2], self.merge_dev),
+                )
+        return self.idx_buf, self.dat_buf
+
+
+def _shard_seg_caps(items: Sequence[WorkItem], n_shards: int,
+                    chunk_nnz: Sequence[int]) -> List[int]:
+    """Per-shard segment capacities (pow2-quantized) from per-chunk nnz —
+    exact counts on the measured path, Alg. 1 bounds on the planned one."""
+    totals = [0] * n_shards
+    for item, nnz in zip(items, chunk_nnz):
+        totals[item.shard] += int(nnz)
+    return [next_pow2(t) if t > 0 else 0 for t in totals]
+
+
+def _device_indptr(runs: Sequence[_ChunkRun], n: int, merge_dev):
+    """Sync-free CSR sizing: assemble the int32 indptr *on device* from the
+    chunks' device-resident counts (the chunks' rows partition [0, n), so
+    one scatter of the concatenated counts covers every row).  Returns
+    (indptr (n+1,) int32 device array, nnz () int32 device scalar)."""
+    counts_all = replicate_to(jnp.zeros(n, jnp.int32), merge_dev)
+    if runs:
+        rows_cat = np.concatenate([r.item.rows for r in runs])
+        counts_cat = jnp.concatenate([
+            replicate_to(r.counts[: len(r.item.rows)], merge_dev)
+            for r in runs
+        ])
+        counts_all = counts_all.at[
+            replicate_to(jnp.asarray(rows_cat), merge_dev)].set(counts_cat)
+    indptr = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(counts_all)])
+    return indptr, indptr[-1]
+
+
+def _device_chunk_starts(indptr_dev: jax.Array, rows: np.ndarray,
+                         padded: int, dev) -> jax.Array:
+    """Per-chunk final CSR start offsets gathered from the device-resident
+    indptr (padding rows park at row 0; their counts are 0, so the scatter
+    drops them).  ``indptr_dev`` must already live on ``dev``."""
+    rows_full = np.zeros(padded, np.int32)
+    rows_full[: len(rows)] = rows
+    return jnp.take(indptr_dev, replicate_to(jnp.asarray(rows_full), dev))
+
+
 def execute_plan(
     a: CSR,
     b: CSR,
@@ -815,6 +1149,7 @@ def execute_plan(
     row_chunk: int = 4096,
     mesh=None,
     pipeline: Pipeline = "two_wave",
+    sizing: Sizing = "auto",
 ) -> Tuple[CSR, int]:
     """Run the compiled group pipeline; returns (C, nnz_C).
 
@@ -834,9 +1169,30 @@ def execute_plan(
     bit-exactness tests, and memory-bound runs.  ``mesh`` partitions the plan
     across the mesh's devices (round-robin by group); ``mesh=None`` is the
     single-device path — all four combinations produce bit-identical rows.
+
+    ``sizing`` picks how ``out_cap`` and the epilogue capacity are found:
+    ``"measured"`` syncs the uniqueCounts (the coalesced sync above);
+    ``"planned"`` derives them from the plan's Alg. 1 IP bounds and
+    assembles the indptr on device — the call dispatches end-to-end with
+    **zero** blocking host syncs (``host_sync_count`` stays flat; ``nnz``
+    comes back as a device scalar that only blocks when the caller reads
+    it).  ``"auto"`` (default) is planned for fused engines
+    (``"fused_hash"``: one single-pass program per chunk, no allocate
+    dispatch, no materialized key stream) and measured otherwise.  Under
+    more than one shard the epilogue is itself sharded: chunks pack into
+    shard-local CSR segments on their own devices and the merge device
+    applies one destination-mapped scatter per shard.
     """
     if pipeline not in ("two_wave", "legacy"):
         raise ValueError(f"unknown pipeline {pipeline!r}")
+    if pipeline == "legacy":
+        if sizing == "planned":
+            raise ValueError(
+                "sizing='planned' requires pipeline='two_wave' (the legacy "
+                "reference path sizes each chunk from a blocking sync)")
+        mode = "measured"
+    else:
+        mode = resolve_sizing(sizing, engine, plan)
     gather, kb_cap, ncol_cap, devices, items = _setup_execution(
         a, b, plan, engine, gather, row_chunk, mesh)
     n = a.n_rows
@@ -849,6 +1205,11 @@ def execute_plan(
         return _execute_plan_legacy(
             items, devices, a_ops, b_entry, n, shape, dtype, dt, kb_cap,
             ncol_cap, gather, engine)
+    if mode == "planned":
+        indptr, idx_buf, dat_buf, nnz = _run_planned(
+            items, devices, a_ops, b_entry.shards, plan, n, dtype, dt,
+            kb_cap, ncol_cap, b.n_cols, gather, engine)
+        return CSR(indptr, idx_buf, dat_buf, shape), nnz
 
     # ---- Wave 1: dispatch every chunk's enumerate + allocate, no syncs ----
     pend = []
@@ -868,9 +1229,12 @@ def execute_plan(
     unique_counts, indptr, nnz, cap = _coalesce_and_size(pend, n)
 
     # ---- Wave 2: accumulate on device-resident keys + device epilogue ----
-    merge_dev = merge_device(devices)
-    idx_buf = replicate_to(jnp.zeros(cap, jnp.int32), merge_dev)
-    dat_buf = replicate_to(jnp.zeros(cap, dtype), merge_dev)
+    epi = _Epilogue(
+        devices, cap, dtype, dt,
+        seg_caps=_shard_seg_caps(
+            [p[0] for p in pend], len(devices),
+            [int(uc[: len(p[0].rows)].sum()) for p, uc in
+             zip(pend, unique_counts)]))
     for i, uc in enumerate(unique_counts):
         item, padded, keys, vals, _ = pend[i]
         pend[i] = None  # free this chunk's intermediates once consumed
@@ -881,17 +1245,88 @@ def execute_plan(
             (padded, ip_cap, item.table_cap, out_cap, engine, dt),
             item.table_cap, out_cap, engine)
         cols_r, vals_r, counts_r = accum(keys, vals)
-        scat = _get_program("scatter", (padded, out_cap, cap, dt))
-        idx_buf, dat_buf = scat(
-            idx_buf, dat_buf,
-            replicate_to(cols_r, merge_dev),
-            replicate_to(vals_r, merge_dev),
-            replicate_to(counts_r, merge_dev),
-            _chunk_starts(indptr, item.rows, padded, merge_dev),
-        )
+        # sharded epilogue: starts/outputs stay on the shard device
+        starts_dev = devices[item.shard] if epi.sharded else epi.merge_dev
+        epi.add_chunk(
+            _ChunkRun(item, padded, out_cap, cols_r, vals_r, counts_r),
+            _chunk_starts(indptr, item.rows, padded, starts_dev))
+    idx_buf, dat_buf = epi.finish()
 
     c = CSR(jnp.asarray(indptr), idx_buf, dat_buf, shape)
     return c, nnz
+
+
+def _run_planned(items, devices, a_ops, b_ops, plan, n, dtype, dt, kb_cap,
+                 ncol_cap, ncol, gather, engine, batch=None):
+    """The sync-free sizing core shared by the single-matrix and batched
+    lanes: every capacity comes from the plan's Alg. 1 IP bounds (host
+    arithmetic), the indptr is assembled on device, and the whole run —
+    fused single-pass programs (or enumerate + accumulate for non-fused
+    engines), device indptr, epilogue — is dispatched without a single
+    blocking host sync.  ``nnz`` is returned as a device scalar; it blocks
+    only when the caller materializes it.  ``batch`` switches the batched
+    program kinds and value planes; ``a_ops``/``b_ops`` are per-shard
+    operand tuples either way.
+    """
+    eng = get_engine(engine)
+    kernel = _fused_kernel_mode(dt)
+    bounds = [chunk_capacity_bounds(plan, item.rows, ncol) for item in items]
+    cap = _int32_nnz_capacity(sum(s for _, s in bounds))
+    bkey = () if batch is None else (batch,)
+    runs: List[_ChunkRun] = []
+    for item, (max_u, _) in zip(items, bounds):
+        dev = devices[item.shard]
+        a_arrs = a_ops[item.shard]
+        b_ix, b_vl = b_ops[item.shard]
+        padded, rows_j = _chunk_rows_padded(item.rows, dev)
+        out_cap = _planned_out_cap(max_u, item.table_cap, ncol_cap)
+        if eng.fused:
+            if batch is None:
+                prog = _get_program(
+                    "fused",
+                    (padded, item.a_cap, kb_cap, item.table_cap, out_cap,
+                     gather, dt, kernel),
+                    item.a_cap, gather, item.table_cap, out_cap, kernel)
+            else:
+                prog = _get_program(
+                    "bfused",
+                    (batch, padded, item.a_cap, kb_cap, item.table_cap,
+                     out_cap, gather, dt),
+                    item.a_cap, gather, item.table_cap, out_cap)
+            cols_r, vals_r, counts_r = prog(*a_arrs, rows_j, b_ix, b_vl)
+        else:
+            enum = _get_program(
+                "enumerate" if batch is None else "benumerate",
+                bkey + (padded, item.a_cap, kb_cap, gather, dt),
+                item.a_cap, gather)
+            keys, vals = enum(*a_arrs, rows_j, b_ix, b_vl)
+            accum = _get_program(
+                "accumulate" if batch is None else "baccumulate",
+                bkey + (padded, keys.shape[1], item.table_cap, out_cap,
+                        engine, dt),
+                item.table_cap, out_cap, engine)
+            cols_r, vals_r, counts_r = accum(keys, vals)
+        if batch is not None:  # shared structure: member 0 carries it
+            cols_r, counts_r = cols_r[0], counts_r[0]
+        runs.append(_ChunkRun(item, padded, out_cap, cols_r, vals_r,
+                              counts_r))
+
+    # ---- Device-side CSR sizing: indptr/nnz never visit the host ----
+    merge_dev = merge_device(devices)
+    indptr, nnz = _device_indptr(runs, n, merge_dev)
+
+    epi = _Epilogue(devices, cap, dtype, dt, batch=batch,
+                    seg_caps=_shard_seg_caps(items, len(devices),
+                                             [s for _, s in bounds]))
+    indptr_by_dev = {merge_dev: indptr}
+    for run in runs:
+        dev = devices[run.item.shard] if epi.sharded else merge_dev
+        if dev not in indptr_by_dev:
+            indptr_by_dev[dev] = replicate_to(indptr, dev)
+        epi.add_chunk(run, _device_chunk_starts(
+            indptr_by_dev[dev], run.item.rows, run.padded, dev))
+    idx_buf, dat_buf = epi.finish()
+    return indptr, idx_buf, dat_buf, nnz
 
 
 def _execute_plan_legacy(items, devices, a_ops, b_entry, n, shape, dtype, dt,
@@ -1008,6 +1443,7 @@ def execute_plan_batched(
     row_chunk: int = 4096,
     mesh=None,
     pipeline: Pipeline = "two_wave",
+    sizing: Sizing = "auto",
 ) -> Tuple[jax.Array, jax.Array, jax.Array, int]:
     """Run the compiled pipeline once for a whole batch of same-pattern
     operands; returns ``(indptr, indices, data_batch, nnz)``.
@@ -1028,11 +1464,24 @@ def execute_plan_batched(
     member rides the same shard assignment; B's replicated ELL buffers are
     served by the ``OperandCache`` across calls.  Results are bit-identical
     to a per-matrix Python loop for every engine × gather combination.
+
+    ``sizing`` mirrors ``execute_plan``: ``"planned"`` (the fused-engine
+    default) sizes every chunk of the whole batch from the plan's Alg. 1
+    bounds and assembles the shared indptr on device — zero blocking
+    syncs; ``"measured"`` keeps the one coalesced uniqueCount sync.
     """
     if pipeline not in ("two_wave", "legacy"):
         raise ValueError(f"unknown pipeline {pipeline!r}")
     if plan is None:
         plan = group_rows(a, b)
+    if pipeline == "legacy":
+        if sizing == "planned":
+            raise ValueError(
+                "sizing='planned' requires pipeline='two_wave' (the legacy "
+                "reference path sizes each chunk from a blocking sync)")
+        mode = "measured"
+    else:
+        mode = resolve_sizing(sizing, engine, plan)
     gather, kb_cap, ncol_cap, devices, items = _setup_execution(
         a, b, plan, engine, gather, row_chunk, mesh)
     n = a.n_rows
@@ -1044,6 +1493,10 @@ def execute_plan_batched(
         return _execute_plan_batched_legacy(
             items, devices, a_shards, b_shards, n, batch, dtype, dt, kb_cap,
             ncol_cap, gather, engine)
+    if mode == "planned":
+        return _run_planned(
+            items, devices, a_shards, b_shards, plan, n, dtype, dt,
+            kb_cap, ncol_cap, b.n_cols, gather, engine, batch=batch)
 
     # ---- Wave 1: every chunk's benumerate + allocate, no syncs ----
     pend = []
@@ -1064,9 +1517,12 @@ def execute_plan_batched(
 
     # ---- Wave 2: batched accumulate + device epilogue (value scatter
     # broadcast over the batch axis) ----
-    merge_dev = merge_device(devices)
-    idx_buf = replicate_to(jnp.zeros(cap, jnp.int32), merge_dev)
-    dat_buf_b = replicate_to(jnp.zeros((batch, cap), dtype), merge_dev)
+    epi = _Epilogue(
+        devices, cap, dtype, dt, batch=batch,
+        seg_caps=_shard_seg_caps(
+            [p[0] for p in pend], len(devices),
+            [int(uc[: len(p[0].rows)].sum()) for p, uc in
+             zip(pend, unique_counts)]))
     for i, uc in enumerate(unique_counts):
         item, padded, keys, vals_b, _ = pend[i]
         pend[i] = None  # free this chunk's intermediates once consumed
@@ -1077,16 +1533,16 @@ def execute_plan_batched(
             (batch, padded, ip_cap, item.table_cap, out_cap, engine, dt),
             item.table_cap, out_cap, engine)
         cols_rb, vals_rb, counts_rb = bacc(keys, vals_b)
-        scat = _get_program("bscatter", (batch, padded, out_cap, cap, dt))
-        idx_buf, dat_buf_b = scat(
-            idx_buf, dat_buf_b,
-            replicate_to(cols_rb[0], merge_dev),
-            replicate_to(vals_rb, merge_dev),
-            replicate_to(counts_rb[0], merge_dev),
-            _chunk_starts(indptr, item.rows, padded, merge_dev),
-        )
+        starts_dev = devices[item.shard] if epi.sharded else epi.merge_dev
+        epi.add_chunk(
+            _ChunkRun(item, padded, out_cap, cols_rb[0], vals_rb,
+                      counts_rb[0]),
+            _chunk_starts(indptr, item.rows, padded, starts_dev))
+    idx_buf, dat_buf_b = epi.finish()
 
     return jnp.asarray(indptr), idx_buf, dat_buf_b, nnz
+
+
 
 
 def _execute_plan_batched_legacy(items, devices, a_shards, b_shards, n,

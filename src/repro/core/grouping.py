@@ -48,6 +48,12 @@ class GroupPlan:
     the i-th row in group-sorted order.  ``group_offsets`` delimits groups in
     that order; ``group_sizes_padded`` are the static per-group row counts
     each group's kernel is compiled for (padded up so recompilation is rare).
+
+    ``row_ip`` keeps the Algorithm-1 IP count per original row.  Phase 1
+    already pays for these counts; carrying them in the plan gives the
+    executor a *free* per-chunk capacity bound (uniqueCount ≤ IP per row),
+    which the sync-free ``sizing="planned"`` path uses to pick ``out_cap``
+    without the blocking uniqueCount host sync.
     """
 
     map_rows: np.ndarray  # (n_rows,) int32
@@ -58,6 +64,7 @@ class GroupPlan:
     table_capacities: Tuple[int, int, int, int]
     max_ip: int
     total_ip: int
+    row_ip: np.ndarray = None  # (n_rows,) int64 Alg. 1 IP per original row
 
     def rows_of_group(self, g: int) -> np.ndarray:
         return self.map_rows[self.group_offsets[g]: self.group_offsets[g + 1]]
@@ -110,4 +117,5 @@ def group_rows(a: CSR, b: CSR, pad_quantum: int = 64) -> GroupPlan:
         table_capacities=tuple(caps),
         max_ip=max_ip,
         total_ip=int(ip.sum()),
+        row_ip=ip.astype(np.int64),
     )

@@ -121,8 +121,44 @@ def gather_group_rows_batched(indptr, indices, data_b, rows, a_cap):
 
 
 # ---------------------------------------------------------------------------
+# Fused single-pass hash accumulation (the ``fused_hash`` engine core)
+# ---------------------------------------------------------------------------
+
+def fused_hash_sorted(keys, vals, table_cap: int, out_cap: int,
+                      kernel: str = "xla"):
+    """Algorithms 2/3/5 in one pass: the intermediate-product stream is
+    inserted straight into the per-row linear-probing table and the sorted,
+    ``out_cap``-trimmed output comes back — no separate allocate pass, so
+    the caller must size ``out_cap`` from an a-priori bound (the plan's
+    Alg. 1 IP counts guarantee uniqueCount ≤ min(IP, n_cols) per row).
+
+    ``kernel`` routes Algorithm 4: ``"pallas"``/``"interpret"`` use the
+    Pallas TPU kernel (``kernels.hash_accum``, unsorted table + occupancy;
+    column sorting stays in XLA per the paper's phase split); ``"xla"`` is
+    the vmapped sequential-scan engine.  Both consume the stream in the
+    same order, so results are bit-identical to the two-pass hash engine.
+    """
+    if kernel in ("pallas", "interpret"):
+        from repro.kernels.hash_accum import hash_accumulate_sorted
+
+        return hash_accumulate_sorted(keys, vals, table_cap, out_cap,
+                                      interpret=(kernel == "interpret"))
+    cols, out_vals, counts = accumulate_hash(keys, vals, table_cap)
+    return cols[:, :out_cap], out_vals[:, :out_cap], counts
+
+
+# ---------------------------------------------------------------------------
 # Device-side CSR reassembly epilogue (inverse-permutation scatter on device)
 # ---------------------------------------------------------------------------
+
+def _scatter_pos(counts, starts, out_cap, sentinel):
+    """Flat destinations of one chunk's (row, slot) cells: ``starts + offs``
+    where the slot is occupied, the out-of-range ``sentinel`` (dropped by
+    ``mode="drop"`` scatters) where it is not — the one masking convention
+    shared by the direct and sharded, single and batched epilogues."""
+    offs = jnp.arange(out_cap, dtype=jnp.int32)[None, :]
+    return jnp.where(offs < counts[:, None], starts[:, None] + offs, sentinel)
+
 
 def reassemble_device(idx_buf, dat_buf, cols, vals, counts, starts):
     """Scatter one chunk's accumulated rows into the final CSR buffers.
@@ -141,10 +177,7 @@ def reassemble_device(idx_buf, dat_buf, cols, vals, counts, starts):
     row's count are redirected to ``cap`` and dropped by the scatter, which
     also silently retires padding rows (count 0).
     """
-    cap = idx_buf.shape[0]
-    out_cap = cols.shape[1]
-    offs = jnp.arange(out_cap, dtype=jnp.int32)[None, :]
-    pos = jnp.where(offs < counts[:, None], starts[:, None] + offs, cap)
+    pos = _scatter_pos(counts, starts, cols.shape[1], idx_buf.shape[0])
     idx_buf = idx_buf.at[pos].set(cols, mode="drop")
     dat_buf = dat_buf.at[pos].set(vals, mode="drop")
     return idx_buf, dat_buf
@@ -157,12 +190,80 @@ def reassemble_device_batched(idx_buf, dat_buf_b, cols, vals_b, counts, starts):
     tensor is computed once; ``dat_buf_b`` is (batch, cap) and ``vals_b``
     (batch, R_pad, out_cap).
     """
-    cap = idx_buf.shape[0]
-    out_cap = cols.shape[1]
-    offs = jnp.arange(out_cap, dtype=jnp.int32)[None, :]
-    pos = jnp.where(offs < counts[:, None], starts[:, None] + offs, cap)
+    pos = _scatter_pos(counts, starts, cols.shape[1], idx_buf.shape[0])
     idx_buf = idx_buf.at[pos].set(cols, mode="drop")
     dat_buf_b = dat_buf_b.at[:, pos].set(vals_b, mode="drop")
+    return idx_buf, dat_buf_b
+
+
+# ---------------------------------------------------------------------------
+# Sharded epilogue: shard-local CSR segments + destination-mapped merge
+# ---------------------------------------------------------------------------
+
+def _exclusive_cumsum(x):
+    return jnp.concatenate([jnp.zeros((1,), x.dtype), jnp.cumsum(x)[:-1]])
+
+
+def reassemble_segment(seg_idx, seg_dat, dest, off, cols, vals, counts,
+                       fin_starts):
+    """Shard-local half of the sharded epilogue: pack one chunk's rows
+    *densely* into the shard's segment buffers and record each slot's
+    destination in the final CSR buffers.
+
+    The shard device does its own reassembly scatter (in parallel with the
+    other shards) and the merge device later receives one compact
+    ``(segment, dest)`` pair per shard instead of every padded chunk
+    output — the merge traffic that used to flow through the lead device
+    per chunk stays shard-local until the final per-shard merge.
+
+    seg_idx, seg_dat: (seg_cap,) the shard's local segment buffers.
+    dest:             (seg_cap,) int32 final-buffer position per segment
+                      slot; unused slots keep their init sentinel (the
+                      final capacity), which the merge scatter drops.
+    off:              () int32 running shard-local offset (nnz packed so
+                      far); threaded through chunk after chunk.
+    cols, vals:       (R_pad, out_cap) the chunk's accumulated rows.
+    counts:           (R_pad,) int32 per-row occupancy (padding rows 0).
+    fin_starts:       (R_pad,) int32 final CSR start offset of each row.
+    """
+    out_cap = cols.shape[1]
+    loc_starts = off + _exclusive_cumsum(counts)
+    pos = _scatter_pos(counts, loc_starts, out_cap, seg_idx.shape[0])
+    offs = jnp.arange(out_cap, dtype=jnp.int32)[None, :]
+    seg_idx = seg_idx.at[pos].set(cols, mode="drop")
+    seg_dat = seg_dat.at[pos].set(vals, mode="drop")
+    dest = dest.at[pos].set(fin_starts[:, None] + offs, mode="drop")
+    return seg_idx, seg_dat, dest, off + jnp.sum(counts)
+
+
+def reassemble_segment_batched(seg_idx, seg_dat_b, dest, off, cols, vals_b,
+                               counts, fin_starts):
+    """``reassemble_segment`` with the value packing broadcast over a
+    batch: ``seg_dat_b`` is (batch, seg_cap), ``vals_b`` (batch, R_pad,
+    out_cap); structure (cols/counts/positions) is shared by every
+    member."""
+    out_cap = cols.shape[1]
+    loc_starts = off + _exclusive_cumsum(counts)
+    pos = _scatter_pos(counts, loc_starts, out_cap, seg_idx.shape[0])
+    offs = jnp.arange(out_cap, dtype=jnp.int32)[None, :]
+    seg_idx = seg_idx.at[pos].set(cols, mode="drop")
+    seg_dat_b = seg_dat_b.at[:, pos].set(vals_b, mode="drop")
+    dest = dest.at[pos].set(fin_starts[:, None] + offs, mode="drop")
+    return seg_idx, seg_dat_b, dest, off + jnp.sum(counts)
+
+
+def merge_segments(idx_buf, dat_buf, seg_idx, seg_dat, dest):
+    """Merge one shard's packed segment into the final CSR buffers: a
+    single destination-mapped scatter per shard (unused segment slots
+    carry the out-of-range sentinel and are dropped)."""
+    idx_buf = idx_buf.at[dest].set(seg_idx, mode="drop")
+    dat_buf = dat_buf.at[dest].set(seg_dat, mode="drop")
+    return idx_buf, dat_buf
+
+
+def merge_segments_batched(idx_buf, dat_buf_b, seg_idx, seg_dat_b, dest):
+    idx_buf = idx_buf.at[dest].set(seg_idx, mode="drop")
+    dat_buf_b = dat_buf_b.at[:, dest].set(seg_dat_b, mode="drop")
     return idx_buf, dat_buf_b
 
 

@@ -84,6 +84,7 @@ def spgemm(
     mesh=None,
     plan: PlanLike = None,
     pipeline: executor.Pipeline = "two_wave",
+    sizing: executor.Sizing = "auto",
 ) -> SpGEMMResult:
     """C = A @ B via the paper's multi-phase pipeline (plan-compiled).
 
@@ -106,6 +107,14 @@ def spgemm(
     (default) pays one coalesced allocate host sync for all chunks and
     reassembles the CSR on device; ``"legacy"`` is the per-chunk-sync
     NumPy-reassembly reference path (A/B benchmarking).
+    ``sizing`` selects how output capacities are found: ``"measured"``
+    syncs the uniqueCounts, ``"planned"`` derives sync-free bounds from
+    the plan's Alg. 1 IP counts — the executor dispatches the whole call
+    with zero blocking host syncs and the host stalls only once, at the
+    end, when this façade materializes ``info["nnz_c"]`` (use
+    ``executor.execute_plan`` directly for a fully non-blocking device
+    handle); ``"auto"`` picks planned for fused engines (``"fused_hash"``)
+    and measured otherwise.
     """
     assert a.n_cols == b.n_rows, (a.shape, b.shape)
     if engine is None:
@@ -121,7 +130,7 @@ def spgemm(
     # ---- Phases 2+3: compiled group pipeline + device-side reassembly ----
     c, nnz = executor.execute_plan(
         a, b, run_plan, engine=engine, gather=gather, row_chunk=row_chunk,
-        mesh=mesh, pipeline=pipeline,
+        mesh=mesh, pipeline=pipeline, sizing=sizing,
     )
     info = spgemm_info(a, b, run_plan, nnz, mesh=mesh)
     return SpGEMMResult(c=c, plan=run_plan, info=info)
@@ -200,6 +209,7 @@ def spgemm_batched(
     mesh=None,
     plan: PlanLike = None,
     pipeline: executor.Pipeline = "two_wave",
+    sizing: executor.Sizing = "auto",
 ) -> SpGEMMBatchResult:
     """``cs[i] = a_batch[i] @ b_batch[i]`` for same-pattern operand batches.
 
@@ -211,6 +221,8 @@ def spgemm_batched(
     amortized, and only the value streams are vmapped.  Results are
     bit-identical to looping ``spgemm`` over the members, for every
     engine × gather combination, single- and multi-device (``mesh=``).
+    ``sizing`` mirrors ``spgemm``: planned (the fused-engine default)
+    sizes the whole batch from Alg. 1 bounds with zero blocking syncs.
     """
     a_members = _as_members(a_batch, "a_batch")
     b_members = _as_members(b_batch, "b_batch")
@@ -238,7 +250,7 @@ def spgemm_batched(
     b_data = None if len(b_members) == 1 else _stack_values(b_members, b, batch)
     indptr, indices, data_batch, nnz = executor.execute_plan_batched(
         a, b, a_data, b_data, run_plan, engine=engine, gather=gather,
-        row_chunk=row_chunk, mesh=mesh, pipeline=pipeline,
+        row_chunk=row_chunk, mesh=mesh, pipeline=pipeline, sizing=sizing,
     )
     indptr_j = jnp.asarray(indptr)
     indices_j = jnp.asarray(indices)

@@ -27,6 +27,20 @@ from jax.experimental.pallas import tpu as pltpu
 
 MULTIPLIER = 2654435761
 EMPTY = -1
+_INT_MAX = jnp.int32(2**31 - 1)
+
+
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """Backend auto-detection via ``kernels.ops.resolve_backend`` (one
+    policy, including the ``REPRO_KERNEL_BACKEND`` override): compiled
+    Pallas only when it resolves to "pallas"; any other resolution runs
+    interpret mode (the fused executor path routes "xla" to the scan
+    engine before it ever reaches this module)."""
+    if interpret is not None:
+        return interpret
+    from repro.kernels.ops import resolve_backend
+
+    return resolve_backend("auto") != "pallas"
 
 
 def _hash_kernel(keys_ref, vals_ref, cols_ref, out_ref, cnt_ref,
@@ -72,6 +86,44 @@ def _hash_kernel(keys_ref, vals_ref, cols_ref, out_ref, cnt_ref,
     cols_ref[0, :] = tkey_ref[...]
     out_ref[0, :] = tval_ref[...]
     cnt_ref[0, 0] = jnp.sum(occupied.astype(jnp.int32))
+
+
+def hash_accumulate_sorted(keys: jax.Array, vals: jax.Array, table_cap: int,
+                           out_cap: int, interpret: bool | None = None):
+    """Kernel accumulation + Algorithm 5 step 3 (column-index sort) + trim.
+
+    The fused-engine entry point: the per-row table comes back from the
+    Pallas kernel in *probe order*; the XLA sort (a sorting network on TPU,
+    matching the paper's bitonic phase split) moves the occupied slots to a
+    column-sorted prefix, which is trimmed to the caller's ``out_cap``
+    capacity bound (``out_cap`` ≥ uniqueCount must hold — the executor's
+    plan-derived sizing guarantees it).
+
+    Returns (cols (R, out_cap) int32 -1-padded, vals (R, out_cap), counts
+    (R,) int32) — the same layout as ``phases.accumulate_hash`` trimmed to
+    ``out_cap``, and bit-identical to it (same insertion order, same sort).
+    """
+    # Resolve the backend OUTSIDE the jitted body: ``interpret=None`` is a
+    # static argument, so resolving it at trace time would bake the first
+    # call's env-var state into the jit cache and silently ignore later
+    # ``REPRO_KERNEL_BACKEND`` changes for same-shape calls.
+    return _hash_accumulate_sorted(keys, vals, table_cap, out_cap,
+                                   _resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("table_cap", "out_cap",
+                                             "interpret"))
+def _hash_accumulate_sorted(keys: jax.Array, vals: jax.Array, table_cap: int,
+                            out_cap: int, interpret: bool):
+    tc, tv, cnt = hash_accumulate(keys, vals, table_cap, interpret=interpret)
+    skey = jnp.where(tc == EMPTY, _INT_MAX, tc)
+    order = jnp.argsort(skey, axis=1, stable=True)
+    sc = jnp.take_along_axis(tc, order, axis=1)
+    sv = jnp.take_along_axis(tv, order, axis=1)
+    valid = jnp.arange(table_cap, dtype=jnp.int32)[None, :] < cnt[:, None]
+    cols = jnp.where(valid, sc, EMPTY)[:, :out_cap]
+    out = jnp.where(valid, sv, 0)[:, :out_cap]
+    return cols, out, cnt
 
 
 @functools.partial(jax.jit, static_argnames=("table_cap", "interpret"))

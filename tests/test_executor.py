@@ -25,7 +25,7 @@ from repro.sparse.formats import (
     CSR, csr_from_dense, csr_to_dense, ell_from_dense, ell_to_dense,
 )
 
-ENGINES = ("sort", "hash")
+ENGINES = ("sort", "hash", "fused_hash")
 GATHERS = ("xla", "aia")
 SCHEDULES = ("grouped", "natural")
 
@@ -54,8 +54,10 @@ def same_pattern_batch(rng, pattern, k, lo=1, hi=5):
 # ---------------------------------------------------------------------------
 
 def test_registry_contents_and_unknown_engine():
-    assert set(executor.available_engines()) >= {"hash", "sort"}
+    assert set(executor.available_engines()) >= {"hash", "sort", "fused_hash"}
     assert executor.get_engine("sort").name == "sort"
+    assert executor.get_engine("fused_hash").fused
+    assert not executor.get_engine("hash").fused
     with pytest.raises(ValueError, match="unknown engine"):
         executor.get_engine("nope")
     with pytest.raises(ValueError, match="unknown gather"):

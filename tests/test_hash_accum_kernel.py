@@ -5,7 +5,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import phases
-from repro.kernels.hash_accum import hash_accumulate
+from repro.kernels.hash_accum import hash_accumulate, hash_accumulate_sorted
 
 
 def _as_sorted_pairs(cols, vals, count):
@@ -46,6 +46,56 @@ def test_hash_accum_kernel_matches_jax_engine(r, ip_cap, n_cols, table_cap):
         expect.append(sorted(zip(jc[i, :jn[i]].tolist(),
                                  np.round(jv[i, :jn[i]], 4).tolist())))
     assert got == expect
+
+
+@pytest.mark.parametrize("r,ip_cap,n_cols,table_cap,out_cap", [
+    (4, 16, 8, 16, 8), (2, 32, 64, 64, 32), (8, 8, 4, 8, 4),
+])
+def test_hash_accum_sorted_matches_scan_engine(r, ip_cap, n_cols, table_cap,
+                                               out_cap):
+    """The fused-engine kernel branch (kernel table + XLA sort + trim) is
+    bit-identical to the scan engine's sorted trimmed output — the
+    contract `phases.fused_hash_sorted` relies on when the backend
+    resolves to pallas/interpret (TPU)."""
+    rng = np.random.default_rng(5)
+    keys, vals = _random_stream(rng, r, ip_cap, n_cols)
+    kc, kv, kn = hash_accumulate_sorted(jnp.asarray(keys), jnp.asarray(vals),
+                                        table_cap, out_cap, interpret=True)
+    jc, jv, jn = phases.fused_hash_sorted(jnp.asarray(keys),
+                                          jnp.asarray(vals),
+                                          table_cap, out_cap, kernel="xla")
+    np.testing.assert_array_equal(np.asarray(kn), np.asarray(jn))
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(jc))
+    np.testing.assert_allclose(np.asarray(kv), np.asarray(jv),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_fused_spgemm_through_interpret_kernel(monkeypatch):
+    """End-to-end: REPRO_KERNEL_BACKEND=interpret routes the fused engine
+    through the Pallas Algorithm-4 kernel (the TPU branch, interpreted on
+    CPU) — results must stay bit-exact vs the two-pass hash engine."""
+    from repro.core import executor
+    from repro.core.spgemm import spgemm
+    from repro.sparse.formats import csr_from_dense
+
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    assert executor._fused_kernel_mode(np.dtype(np.float32).str) \
+        == "interpret"
+    rng = np.random.default_rng(7)
+    x = np.where(rng.random((12, 12)) < 0.3,
+                 rng.integers(1, 5, (12, 12)), 0).astype(np.float32)
+    a = csr_from_dense(x)
+    fu = spgemm(a, a, engine="fused_hash", row_chunk=8)
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND")
+    ha = spgemm(a, a, engine="hash", row_chunk=8)
+    nnz = fu.info["nnz_c"]
+    assert nnz == ha.info["nnz_c"]
+    np.testing.assert_array_equal(
+        np.asarray(fu.c.indptr), np.asarray(ha.c.indptr))
+    np.testing.assert_array_equal(
+        np.asarray(fu.c.indices)[:nnz], np.asarray(ha.c.indices)[:nnz])
+    np.testing.assert_array_equal(
+        np.asarray(fu.c.data)[:nnz], np.asarray(ha.c.data)[:nnz])
 
 
 def test_hash_accum_kernel_duplicate_keys_accumulate():

@@ -31,7 +31,7 @@ from repro.sparse.formats import csr_from_dense, csr_to_dense
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-ENGINES = ("sort", "hash")
+ENGINES = ("sort", "hash", "fused_hash")
 GATHERS = ("xla", "aia")
 
 
@@ -120,6 +120,69 @@ def test_unknown_pipeline_rejected():
     a, b = _fixture()
     with pytest.raises(ValueError, match="unknown pipeline"):
         spgemm(a, b, pipeline="three_wave")
+
+
+# ---------------------------------------------------------------------------
+# Fused engine: zero blocking syncs under plan-derived sizing
+# ---------------------------------------------------------------------------
+
+def test_fused_two_wave_multichunk_zero_host_syncs():
+    """The PR-5 acceptance bar: a fused two-wave multi-chunk call performs
+    **zero** blocking host syncs — out_cap comes from the plan's Alg. 1
+    bounds and the indptr is assembled on device."""
+    a, b = _fixture()
+    executor.clear_program_cache()
+    res, syncs = _sync_delta(
+        lambda: spgemm(a, b, engine="fused_hash", row_chunk=8))
+    assert _n_work_items(res, a, 8) > 1, "fixture must be multi-chunk"
+    assert syncs == 0, f"fused two-wave paid {syncs} host syncs"
+    np.testing.assert_array_equal(_dense(res.c), np.asarray(spgemm_dense(a, b)))
+
+
+def test_fused_batched_zero_host_syncs():
+    rng = np.random.default_rng(41)
+    pat = rng.random((40, 30)) < 0.25
+    mats = [csr_from_dense(np.where(
+        pat, rng.integers(1, 5, pat.shape), 0.0).astype(np.float32))
+        for _ in range(3)]
+    b = csr_from_dense(int_sparse(rng, 30, 25, 0.25))
+    executor.clear_program_cache()
+    res, syncs = _sync_delta(
+        lambda: spgemm_batched(mats, b, engine="fused_hash", row_chunk=8))
+    assert syncs == 0, f"fused batched two-wave paid {syncs} host syncs"
+    for i in range(3):
+        np.testing.assert_array_equal(
+            _dense(res.cs[i]), np.asarray(spgemm_dense(mats[i], b)))
+
+
+def test_fused_sizing_measured_syncs_once():
+    """The escape hatch: sizing='measured' on the fused engine keeps the
+    single coalesced uniqueCount sync (and exact capacities)."""
+    a, b = _fixture()
+    executor.clear_program_cache()
+    res, syncs = _sync_delta(
+        lambda: spgemm(a, b, engine="fused_hash", row_chunk=8,
+                       sizing="measured"))
+    assert _n_work_items(res, a, 8) > 1
+    assert syncs == 1, f"measured escape hatch paid {syncs} syncs, wanted 1"
+    np.testing.assert_array_equal(_dense(res.c), np.asarray(spgemm_dense(a, b)))
+
+
+@pytest.mark.parametrize("gather", GATHERS)
+def test_fused_bit_exact_vs_hash_engine(gather):
+    """fused_hash is the same Algorithm 2/3/5 stream as the two-pass hash
+    engine, so indptr, occupied indices, and values match bit-for-bit."""
+    a, b = _fixture(seed=29)
+    fu = spgemm(a, b, engine="fused_hash", gather=gather, row_chunk=8)
+    ha = spgemm(a, b, engine="hash", gather=gather, row_chunk=8)
+    nnz = fu.info["nnz_c"]
+    assert nnz == ha.info["nnz_c"]
+    np.testing.assert_array_equal(
+        np.asarray(fu.c.indptr), np.asarray(ha.c.indptr))
+    np.testing.assert_array_equal(
+        np.asarray(fu.c.indices)[:nnz], np.asarray(ha.c.indices)[:nnz])
+    np.testing.assert_array_equal(
+        np.asarray(fu.c.data)[:nnz], np.asarray(ha.c.data)[:nnz])
 
 
 # ---------------------------------------------------------------------------
@@ -292,7 +355,7 @@ a = csr_from_dense(sp(64, 48, 0.22))
 b = csr_from_dense(sp(48, 52, 0.28))
 oracle = np.asarray(spgemm_dense(a, b))
 mesh = make_spgemm_mesh(n_dev)
-for engine in ("sort", "hash"):
+for engine in ("sort", "hash", "fused_hash"):
     for gather in ("xla", "aia"):
         tw = spgemm(a, b, engine=engine, gather=gather, mesh=mesh,
                     row_chunk=16)
@@ -315,15 +378,50 @@ s0 = executor.cache_stats()["host_sync_count"]
 spgemm(a, b, engine="sort", mesh=mesh, row_chunk=16)
 assert executor.cache_stats()["host_sync_count"] - s0 == 1
 print("SYNC OK", n_dev)
+# fused zero-sync budget under the mesh (sharded epilogue included)
+spgemm(a, b, engine="fused_hash", mesh=mesh, row_chunk=16)  # warm
+s0 = executor.cache_stats()["host_sync_count"]
+spgemm(a, b, engine="fused_hash", mesh=mesh, row_chunk=16)
+assert executor.cache_stats()["host_sync_count"] - s0 == 0
+print("FUSED SYNC OK", n_dev)
 """
+
+
+EMPTY_SHARD_BODY = """
+import jax, numpy as np
+from repro.core.spgemm import spgemm
+from repro.launch.mesh import make_spgemm_mesh
+from repro.sparse.formats import csr_from_dense, csr_to_dense
+
+assert len(jax.devices()) == 2, jax.devices()
+rng = np.random.default_rng(3)
+a = csr_from_dense(np.where(rng.random((24, 16)) < 0.4,
+                            1.0, 0.0).astype(np.float32))
+b = csr_from_dense(np.zeros((16, 12), np.float32))  # empty product
+mesh = make_spgemm_mesh(2)
+for engine in ("sort", "hash", "fused_hash"):
+    res = spgemm(a, b, engine=engine, mesh=mesh, row_chunk=8)
+    assert res.info["nnz_c"] == 0, (engine, res.info["nnz_c"])
+    assert np.asarray(csr_to_dense(res.c)).sum() == 0
+    print("EMPTY OK", engine)
+"""
+
+
+def test_zero_nnz_shards_under_mesh():
+    """Every shard's segment capacity is 0 when the product is empty; the
+    sharded epilogue must skip those shards instead of KeyError-ing."""
+    out = run_py(EMPTY_SHARD_BODY, n_devices=2)
+    assert out.count("EMPTY OK") == 3
 
 
 @pytest.mark.parametrize("n_devices", (1, 2, 4))
 def test_device_epilogue_bit_exact_under_mesh(n_devices):
-    """1/2/4 forced host devices: the device epilogue == legacy NumPy
-    reassembly == dense oracle for every engine × gather combination, and
-    the sharded two-wave call still pays exactly one allocate sync."""
+    """1/2/4 forced host devices: the (sharded) device epilogue == legacy
+    NumPy reassembly == dense oracle for every engine × gather combination,
+    the sharded two-wave call still pays exactly one allocate sync, and the
+    fused call pays zero."""
     out = run_py(PIPELINE_MESH_BODY.format(n_devices=n_devices),
                  n_devices=n_devices)
-    assert out.count("EPI OK") == 4
+    assert out.count("EPI OK") == 6
     assert "SYNC OK" in out
+    assert "FUSED SYNC OK" in out

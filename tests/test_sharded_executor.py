@@ -104,7 +104,7 @@ def test_partition_plan_shrinks_chunks_to_feed_all_shards():
 # mesh= code path on a single device (runs in the main session)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("engine", ("sort", "hash"))
+@pytest.mark.parametrize("engine", ("sort", "hash", "fused_hash"))
 def test_mesh_single_device_matches_unsharded(engine):
     from repro.launch.mesh import make_spgemm_mesh
 
@@ -150,7 +150,7 @@ a = csr_from_dense(sp(96, 72, 0.22))
 b = csr_from_dense(sp(72, 80, 0.28))
 oracle = np.asarray(spgemm_dense(a, b))
 mesh = make_spgemm_mesh(n_dev)
-for engine in ("sort", "hash"):
+for engine in ("sort", "hash", "fused_hash"):
     for gather in ("xla", "aia"):
         single = spgemm(a, b, engine=engine, gather=gather)
         sharded = spgemm(a, b, engine=engine, gather=gather, mesh=mesh)
@@ -172,7 +172,7 @@ def test_shard_count_invariance_bit_exact(n_devices):
     dense oracle, bit-exact, for every engine × gather combination."""
     out = run_py(INVARIANCE_BODY.format(n_devices=n_devices),
                  n_devices=n_devices)
-    assert out.count("OK") == 4
+    assert out.count("OK") == 6
 
 
 def test_sharded_program_cache_reused_across_mcl_iterations():
@@ -222,7 +222,7 @@ def members(pat, k):
 a_mats = members(pat_a, 3)
 b_mats = members(pat_b, 3)
 mesh = make_spgemm_mesh(n_dev)
-for engine in ("sort", "hash"):
+for engine in ("sort", "hash", "fused_hash"):
     for gather in ("xla", "aia"):
         batched = spgemm_batched(a_mats, b_mats, engine=engine,
                                  gather=gather, mesh=mesh)
@@ -248,7 +248,7 @@ def test_batched_bit_exact_vs_loop_sharded(n_devices):
     loop == dense oracle, bit-exact, for every engine × gather combo."""
     out = run_py(BATCHED_BODY.format(n_devices=n_devices),
                  n_devices=n_devices)
-    assert out.count("BOK") == 4
+    assert out.count("BOK") == 6
 
 
 def test_plan_cache_reuses_shard_partition_under_mesh():

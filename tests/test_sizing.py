@@ -1,0 +1,164 @@
+"""Plan-derived capacity bounds (sizing="planned") — soundness + plumbing.
+
+The sync-free sizing path replaces the measured uniqueCount sync with
+bounds from the plan's Algorithm-1 IP counts; these tests hold the bar
+that makes that safe:
+
+* **Soundness** (hypothesis property): for random CSR pairs, every
+  chunk's plan-derived bound dominates the true uniqueCounts — max bound
+  ≥ max nnz(C row) over the chunk and sum bound ≥ the chunk's total nnz —
+  and the planned result matches the dense oracle for every engine ×
+  gather combination (capacities were never silently truncated).
+* **Plumbing**: ``row_ip`` survives planning and the natural-schedule
+  collapse, ``resolve_sizing`` picks planned only for fused engines (and
+  refuses plans without IP counts), and planned results are bit-exact vs
+  measured for non-fused engines too.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import executor
+from repro.core.grouping import group_rows
+from repro.core.ref import spgemm_dense
+from repro.core.spgemm import spgemm
+from repro.sparse.formats import csr_from_dense, csr_to_dense
+
+ENGINES = ("sort", "hash", "fused_hash")
+GATHERS = ("xla", "aia")
+
+
+def int_sparse(rng, n, m, density=0.3):
+    x = rng.integers(-4, 5, (n, m)).astype(np.float32)
+    mask = rng.random((n, m)) < density
+    return np.where(mask, x, 0.0).astype(np.float32)
+
+
+def _dense(c):
+    return np.asarray(csr_to_dense(c))
+
+
+# ---------------------------------------------------------------------------
+# Soundness: bound ≥ true uniqueCount, for every chunk of random pairs
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       engine=st.sampled_from(ENGINES),
+       gather=st.sampled_from(GATHERS))
+def test_property_chunk_bounds_dominate_unique_counts(seed, engine, gather):
+    rng = np.random.default_rng(seed)
+    n, k, m = (int(rng.integers(4, 30)) for _ in range(3))
+    da, db = rng.uniform(0.05, 0.5), rng.uniform(0.05, 0.5)
+    a = csr_from_dense(int_sparse(rng, n, k, da))
+    b = csr_from_dense(int_sparse(rng, k, m, db))
+    plan = group_rows(a, b)
+    oracle = np.asarray(spgemm_dense(a, b))
+    true_counts = (oracle != 0).sum(axis=1)
+    a_nnz = np.diff(np.asarray(a.indptr))
+    items = executor.partition_plan(plan, a_nnz, row_chunk=8)
+    for item in items:
+        max_b, sum_b = executor.chunk_capacity_bounds(plan, item.rows,
+                                                      b.n_cols)
+        chunk_true = true_counts[item.rows]
+        assert max_b >= int(chunk_true.max(initial=0)), (
+            f"max bound {max_b} < true uniqueCount "
+            f"{int(chunk_true.max(initial=0))} (seed={seed})")
+        assert sum_b >= int(chunk_true.sum()), (
+            f"sum bound {sum_b} < true chunk nnz {int(chunk_true.sum())} "
+            f"(seed={seed})")
+    # and the planned run really honors them: no truncation anywhere
+    res = spgemm(a, b, engine=engine, gather=gather, row_chunk=8,
+                 sizing="planned")
+    np.testing.assert_array_equal(_dense(res.c), oracle)
+
+
+# ---------------------------------------------------------------------------
+# Bound plumbing + unit behavior
+# ---------------------------------------------------------------------------
+
+def test_group_rows_carries_row_ip():
+    rng = np.random.default_rng(1)
+    a = csr_from_dense(int_sparse(rng, 12, 10, 0.3))
+    b = csr_from_dense(int_sparse(rng, 10, 8, 0.3))
+    plan = group_rows(a, b)
+    assert plan.row_ip is not None and len(plan.row_ip) == a.n_rows
+    # IP[i] = sum of nnz(B row) over A's row i columns (Algorithm 1)
+    b_nnz = np.diff(np.asarray(b.indptr))
+    indptr = np.asarray(a.indptr)
+    indices = np.asarray(a.indices)
+    for i in range(a.n_rows):
+        expect = int(b_nnz[indices[indptr[i]: indptr[i + 1]]].sum())
+        assert int(plan.row_ip[i]) == expect
+    # the natural-schedule collapse must keep the counts
+    assert executor.ungrouped_plan(plan).row_ip is plan.row_ip
+
+
+def test_chunk_capacity_bounds_clamped_by_ncols():
+    rng = np.random.default_rng(2)
+    a = csr_from_dense(int_sparse(rng, 10, 10, 0.9))
+    b = csr_from_dense(int_sparse(rng, 10, 4, 0.9))  # only 4 columns
+    plan = group_rows(a, b)
+    rows = np.arange(10, dtype=np.int32)
+    max_b, sum_b = executor.chunk_capacity_bounds(plan, rows, b.n_cols)
+    assert max_b <= 4  # uniqueCount can never exceed n_cols(B)
+    assert sum_b <= 40
+
+
+def test_resolve_sizing_auto_and_validation():
+    rng = np.random.default_rng(3)
+    a = csr_from_dense(int_sparse(rng, 8, 8, 0.4))
+    plan = group_rows(a, a)
+    assert executor.resolve_sizing("auto", "fused_hash", plan) == "planned"
+    assert executor.resolve_sizing("auto", "sort", plan) == "measured"
+    assert executor.resolve_sizing("auto", "hash", plan) == "measured"
+    assert executor.resolve_sizing("planned", "sort", plan) == "planned"
+    assert executor.resolve_sizing("measured", "fused_hash", plan) \
+        == "measured"
+    with pytest.raises(ValueError, match="unknown sizing"):
+        executor.resolve_sizing("guessed", "sort", plan)
+    # a plan without Alg. 1 counts cannot serve planned sizing
+    bare = dataclasses.replace(plan, row_ip=None)
+    assert executor.resolve_sizing("auto", "fused_hash", bare) == "measured"
+    with pytest.raises(ValueError, match="row_ip"):
+        executor.resolve_sizing("planned", "sort", bare)
+
+
+def test_planned_rejected_on_legacy_pipeline():
+    rng = np.random.default_rng(4)
+    a = csr_from_dense(int_sparse(rng, 8, 8, 0.4))
+    with pytest.raises(ValueError, match="two_wave"):
+        spgemm(a, a, engine="sort", pipeline="legacy", sizing="planned")
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_planned_bit_exact_vs_measured(engine):
+    """Planned sizing only widens capacities — indptr and the occupied
+    prefix must match the measured path bit-for-bit for every engine."""
+    rng = np.random.default_rng(7)
+    a = csr_from_dense(int_sparse(rng, 30, 24, 0.3))
+    b = csr_from_dense(int_sparse(rng, 24, 20, 0.3))
+    pl = spgemm(a, b, engine=engine, row_chunk=8, sizing="planned")
+    me = spgemm(a, b, engine=engine, row_chunk=8, sizing="measured")
+    nnz = me.info["nnz_c"]
+    assert pl.info["nnz_c"] == nnz
+    np.testing.assert_array_equal(
+        np.asarray(pl.c.indptr), np.asarray(me.c.indptr))
+    np.testing.assert_array_equal(
+        np.asarray(pl.c.indices)[:nnz], np.asarray(me.c.indices)[:nnz])
+    np.testing.assert_array_equal(
+        np.asarray(pl.c.data)[:nnz], np.asarray(me.c.data)[:nnz])
+
+
+def test_planned_output_is_int32_end_to_end():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(8)
+    a = csr_from_dense(int_sparse(rng, 14, 12, 0.3))
+    res = spgemm(a, csr_from_dense(int_sparse(rng, 12, 10, 0.3)),
+                 engine="fused_hash")
+    assert res.c.indptr.dtype == jnp.int32
+    assert res.c.indices.dtype == jnp.int32
+    assert res.c.data.dtype == jnp.float32
