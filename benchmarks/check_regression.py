@@ -14,7 +14,15 @@ Failures name every offending record with its baseline-vs-current µs and
 ratio (plus the worst offender up front), so a red CI log says *what*
 regressed without downloading the artifact.
 
-Records with ``us == 0`` (pure-counter rows) are never gated.  Record-set
+Records with ``us == 0`` (pure-counter rows) are never gated, and records
+where both sides sit under the ``--min-us`` noise floor are skipped too:
+the tiny CI-tier records bottom out at tens of µs where ``perf_counter``
+jitter alone exceeds 2x, so they only flake the gate (a record that
+*crosses* the floor — tiny baseline, blown-up current — still gates, which
+is exactly the re-tracing signature).  ``--merge PATH`` folds additional
+fresh-run JSONs (e.g. the medium tier's ``BENCH_medium.json``) into the
+current record set so one gate invocation compares every tier against the
+single committed baseline.  Record-set
 *drift* is reported as a WARN by default: records present in the fresh
 JSON but absent from the baseline (a PR adding a benchmark) and records
 present in the baseline but absent from the fresh run (a renamed/removed
@@ -37,12 +45,20 @@ def load_records(path: str) -> dict:
     return {r["name"]: r for r in doc.get("records", [])}
 
 
-def compare(current: dict, baseline: dict, max_ratio: float) -> list:
-    """Returns the list of (name, cur_us, base_us, ratio) regressions."""
+def compare(current: dict, baseline: dict, max_ratio: float,
+            min_us: float = 0.0) -> list:
+    """Returns the list of (name, cur_us, base_us, ratio) regressions.
+
+    Records where *both* sides are under ``min_us`` are timer-noise
+    dominated and skipped; a record whose current time blows past the
+    floor still gates against its tiny baseline (re-tracing regressions
+    are order-of-magnitude events, never noise)."""
     regressions = []
     for name, base in sorted(baseline.items()):
         cur = current.get(name)
         if cur is None or base["us"] <= 0 or cur["us"] <= 0:
+            continue
+        if base["us"] < min_us and cur["us"] < min_us:
             continue
         ratio = cur["us"] / base["us"]
         if ratio > max_ratio:
@@ -64,6 +80,14 @@ def main() -> int:
     ap.add_argument("baseline", help="committed baseline JSON")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail if current/baseline wall-time exceeds this")
+    ap.add_argument("--min-us", type=float, default=0.0,
+                    help="noise floor: skip the ratio gate for records whose "
+                         "baseline AND current times are both under this "
+                         "(tiny records are perf_counter-jitter dominated)")
+    ap.add_argument("--merge", action="append", default=[], metavar="PATH",
+                    help="additional fresh-run JSON(s) merged into the "
+                         "current record set (e.g. the medium tier's "
+                         "artifact), so one invocation gates every tier")
     ap.add_argument("--require-all", action="store_true",
                     help="fail (not warn) when the record sets differ — "
                          "strict mode for main, where the baseline must be "
@@ -71,6 +95,14 @@ def main() -> int:
     args = ap.parse_args()
 
     current = load_records(args.current)
+    for extra in args.merge:
+        for name, rec in load_records(extra).items():
+            if name in current:
+                print(f"FAIL: --merge {extra} record {name!r} collides with "
+                      "an existing current record — tiers must emit "
+                      "disjoint record names", file=sys.stderr)
+                return 1
+            current[name] = rec
     baseline = load_records(args.baseline)
     shared = [n for n in baseline if n in current and baseline[n]["us"] > 0]
     if not shared:
@@ -92,11 +124,15 @@ def main() -> int:
               " (renamed/removed benchmark? its gate no longer applies)",
               file=sys.stderr)
 
-    regressions = compare(current, baseline, args.max_ratio)
+    regressions = compare(current, baseline, args.max_ratio,
+                          min_us=args.min_us)
     for name in shared:
         ratio = current[name]["us"] / baseline[name]["us"]
+        floor = (" [under --min-us floor, ungated]"
+                 if current[name]["us"] < args.min_us
+                 and baseline[name]["us"] < args.min_us else "")
         print(f"{name}: {current[name]['us']:.0f}us vs "
-              f"baseline {baseline[name]['us']:.0f}us ({ratio:.2f}x)")
+              f"baseline {baseline[name]['us']:.0f}us ({ratio:.2f}x){floor}")
     if regressions:
         worst = max(regressions, key=lambda r: r[3])
         print(f"\nFAIL: {len(regressions)} record(s) regressed more than "

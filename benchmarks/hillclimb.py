@@ -1,4 +1,7 @@
-"""§Perf hillclimbing harness: measure a cell under config variants.
+"""§Perf hillclimbing harness: measure a cell under config variants, and
+the offline measurement loop behind ``engine="auto"``'s per-bin autotuner.
+
+Arch-config roofline mode (the original harness):
 
     PYTHONPATH=src python -m benchmarks.hillclimb --arch granite-3-2b \
         --shape train_4k --variant baseline
@@ -7,20 +10,35 @@
 Each run appends a record to results/perf_log.json with the three roofline
 terms, so EXPERIMENTS.md §Perf can show hypothesis → change → before/after.
 Variants are applied as ArchConfig field overrides and/or Shardings flags.
-"""
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
+SpGEMM per-bin engine sweep (``--spgemm-bins``):
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --spgemm-bins \
+        --n 1024 --density 0.02 --row-chunk 128
+
+Runs ``measure_bin_engines``: every registered engine timed on every
+non-empty Table-I bin of a synthetic self-product (bin-restricted
+sub-executions through ``executor.measure_group_engine``), each timing
+recorded into an ``AutotuneCache`` entry — the full-sweep complement of
+the executor's incremental in-band measurement (one candidate per
+``engine="auto"`` call).  Recording every candidate converges the entry
+exactly as the in-band rounds would, so a cache swept here serves
+``engine="auto"`` as pure hits from the first call.  Appends the sweep to
+results/autotune_log.json and prints it, so EXPERIMENTS.md can show the
+measured per-bin engine landscape per backend.
+
+Both the per-(bin, engine) ``measure`` callable and the wall-clock
+``timer`` are injectable, so the loop's mechanics (candidate coverage,
+cache recording, argmin assignment) are unit-testable without timing real
+kernels.
+"""
 import argparse
 import dataclasses
 import json
-
-from repro.configs import get_config, SHAPE_SETS
-from repro.launch.dryrun import measure_cell
-from repro.launch.mesh import make_production_mesh
-from benchmarks.roofline import roofline_from_record
+import os
 
 LOG = "results/perf_log.json"
+AUTOTUNE_LOG = "results/autotune_log.json"
 
 
 def parse_override(kv: str):
@@ -35,16 +53,133 @@ def parse_override(kv: str):
     return k, v
 
 
+# ---------------------------------------------------------------------------
+# SpGEMM per-bin engine measurement loop (engine="auto" offline sweep)
+# ---------------------------------------------------------------------------
+
+def measure_bin_engines(a, b, plan=None, engines=None, cache=None,
+                        gather="auto", row_chunk=4096, mesh=None,
+                        pipeline="two_wave", reps=2, warmup=1,
+                        measure=None):
+    """Full per-bin engine sweep for one operand pair; returns the record.
+
+    Measures every candidate engine on every *non-empty* Table-I group of
+    ``plan`` (default: ``group_rows(a, b)``) and folds each timing into
+    ``cache`` (an ``executor.AutotuneCache``; default the executor's
+    module cache) via ``cache.record`` — after the sweep the entry is
+    converged and ``engine="auto"`` serves it as pure hits.
+
+    ``measure(group, engine) -> µs`` is injectable for tests; the default
+    wraps ``executor.measure_group_engine`` (warmup + min-over-reps timed
+    bin-restricted ``execute_plan`` runs).  Returns::
+
+        {"backend": ..., "group_sizes": [...], "timings_us":
+         {group: {engine: us}}, "assignment": [per-bin engine names]}
+    """
+    from repro.core import executor
+    from repro.core.grouping import group_rows
+
+    if plan is None:
+        plan = group_rows(a, b)
+    if engines is None:
+        engines = executor.available_engines()
+    if cache is None:
+        cache = executor.default_autotune_cache()
+    if measure is None:
+        def measure(group, engine):
+            return executor.measure_group_engine(
+                a, b, plan, group, engine, gather=gather,
+                row_chunk=row_chunk, mesh=mesh, pipeline=pipeline,
+                reps=reps, warmup=warmup)
+
+    key = executor.autotune_key(a, b, plan)
+    timings = {}
+    for g in range(4):
+        if plan.group_sizes[g] == 0:
+            continue
+        timings[g] = {}
+        for eng in engines:
+            us = float(measure(g, eng))
+            timings[g][eng] = us
+            cache.record(key, plan, g, eng, us)
+    import jax
+
+    entry = cache._entries[key]
+    return {
+        "backend": jax.default_backend(),
+        "group_sizes": list(plan.group_sizes),
+        "timings_us": {str(g): dict(t) for g, t in sorted(timings.items())},
+        "assignment": list(entry.assignment),
+        "converged": entry.converged,
+    }
+
+
+def _spgemm_bins_main(args) -> None:
+    """CLI wrapper: sweep a synthetic self-product and log the landscape."""
+    import numpy as np
+
+    from repro.sparse.formats import csr_from_dense
+
+    rng = np.random.default_rng(args.seed)
+    n = args.n
+    x = np.where(rng.random((n, n)) < args.density,
+                 rng.integers(1, 5, (n, n)), 0).astype(np.float32)
+    a = csr_from_dense(x)
+    record = measure_bin_engines(a, a, row_chunk=args.row_chunk,
+                                 reps=args.reps)
+    record.update(n=n, density=args.density, row_chunk=args.row_chunk,
+                  note=args.note)
+    log = []
+    if os.path.exists(AUTOTUNE_LOG):
+        log = json.load(open(AUTOTUNE_LOG))
+    log.append(record)
+    os.makedirs(os.path.dirname(AUTOTUNE_LOG), exist_ok=True)
+    with open(AUTOTUNE_LOG, "w") as f:
+        json.dump(log, f, indent=1)
+    print(json.dumps(record, indent=1))
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--variant", required=True)
+    ap.add_argument("--spgemm-bins", action="store_true",
+                    help="run the per-bin engine sweep behind engine='auto' "
+                         "instead of the arch-config roofline harness")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--variant")
     ap.add_argument("--set", action="append", default=[],
                     help="ArchConfig field override, e.g. topk_k=1024")
     ap.add_argument("--seq-parallel", action="store_true")
     ap.add_argument("--note", default="")
+    # --spgemm-bins knobs (synthetic self-product workload)
+    ap.add_argument("--n", type=int, default=1024,
+                    help="spgemm-bins: synthetic graph size")
+    ap.add_argument("--density", type=float, default=0.02,
+                    help="spgemm-bins: synthetic graph density")
+    ap.add_argument("--row-chunk", type=int, default=128,
+                    help="spgemm-bins: executor row chunk")
+    ap.add_argument("--reps", type=int, default=2,
+                    help="spgemm-bins: timed reps per (bin, engine)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="spgemm-bins: synthetic graph seed")
     args = ap.parse_args()
+
+    if args.spgemm_bins:
+        return _spgemm_bins_main(args)
+
+    if not (args.arch and args.shape and args.variant):
+        ap.error("--arch, --shape and --variant are required "
+                 "(or pass --spgemm-bins for the engine sweep)")
+
+    # The roofline harness wants a big forced-host-device mesh; set it
+    # before jax is imported (this CLI must be the process entry point).
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+    from repro.configs import get_config, SHAPE_SETS
+    from repro.launch.dryrun import measure_cell
+    from repro.launch.mesh import make_production_mesh
+    from benchmarks.roofline import roofline_from_record
 
     cfg = get_config(args.arch)
     overrides = dict(parse_override(s) for s in args.set)

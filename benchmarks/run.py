@@ -48,6 +48,10 @@ PIPELINE_PROBE: dict = {}
 # Filled by the CI smoke's fused probe: blocking syncs of one fused-engine
 # two-wave call (the plan-derived sizing contract is exactly zero).
 FUSED_PROBE: dict = {}
+# Filled by the medium tier's engine="auto" probe: converged-run autotune
+# hit/miss deltas (the no-re-measurement contract) + the chosen per-bin
+# assignment, so CI can gate the autotuner from the artifact alone.
+AUTOTUNE_PROBE: dict = {}
 
 
 def _emit(name, us, derived):
@@ -216,6 +220,102 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
           f"plan_hits={r.plan_cache_hits}")
 
 
+def medium_smoke(mesh, pipeline: str = "two_wave",
+                 sizing: str = "auto") -> None:
+    """Medium-scale smoke tier (``--tier medium``) — ``medium_*`` records.
+
+    The CI tier's 256-node graph is so small that per-chunk sync overhead
+    *beats* the two-wave pipeline (fixed dispatch cost dominates) and
+    engine wall times sit inside timer noise.  This tier runs a graph big
+    enough that sync elision wins and per-engine differences are stable:
+
+    * ``medium_selfprod_{engine}`` — every registered engine on the same
+      forced multi-chunk self-product (the single-engine bar the
+      autotuner must match).
+    * ``medium_selfprod_pipelined`` / ``medium_selfprod_legacy`` — the
+      two-wave-vs-legacy pair on the *fused* engine, where the win the
+      tiny tier can't show actually appears: the fused single-pass
+      programs + planned zero-sync sizing beat the legacy per-chunk
+      allocate-sync path by ~1.4x at this scale.  (On CPU runners host
+      syncs are nearly free — host == device, no async dispatch queue —
+      so the sort-engine two-wave pair stays within noise of legacy at
+      any CI-affordable size; the fused lane is where sync structure
+      changes the program count, not just the sync count.)
+    * ``medium_selfprod_auto`` — ``engine="auto"`` through a dedicated
+      ``AutotuneCache``: warm-up calls converge the per-bin measurement,
+      then the timed runs must be pure hits.  The hit/miss deltas of the
+      timed (converged) phase and the chosen assignment go into the JSON
+      meta as ``autotune_probe`` — CI asserts hits > 0, misses == 0 (no
+      re-measurement), and auto ≤ the best single engine within noise
+      tolerance, all from the artifact.
+    """
+    import jax
+    import numpy as np
+    from repro.core import executor
+    from repro.core.spgemm import spgemm
+    from repro.sparse.formats import csr_from_dense
+
+    rng = np.random.default_rng(1)
+    n = 1024
+    x = np.where(rng.random((n, n)) < 0.02,
+                 rng.integers(1, 5, (n, n)), 0).astype(np.float32)
+    a = csr_from_dense(x)
+    row_chunk = 128  # 8 chunks: pipelining has real sync traffic to elide
+
+    def timed(fn, reps=3):
+        best = float("inf")
+        res = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            res = fn()
+            jax.block_until_ready(res.c)
+            best = min(best, time.perf_counter() - t0)
+        return best, res
+
+    for engine in executor.available_engines():
+        def run(engine=engine):
+            return spgemm(a, a, engine=engine, mesh=mesh,
+                          row_chunk=row_chunk, pipeline=pipeline,
+                          sizing=sizing)
+        run()  # warm the program cache
+        best, res = timed(run)
+        _emit(f"medium_selfprod_{engine}", best * 1e6,
+              f"nnz_c={res.info['nnz_c']};shards={res.info['n_shards']}")
+
+    for pipe in ("two_wave", "legacy"):
+        def run(pipe=pipe):
+            return spgemm(a, a, engine="fused_hash", mesh=mesh,
+                          row_chunk=row_chunk, pipeline=pipe)
+        run()  # warm
+        best, res = timed(run)
+        name = ("medium_selfprod_pipelined" if pipe == "two_wave"
+                else "medium_selfprod_legacy")
+        _emit(name, best * 1e6,
+              f"engine=fused_hash;nnz_c={res.info['nnz_c']};"
+              f"shards={res.info['n_shards']}")
+
+    # engine="auto" through a dedicated cache: converge, then time.
+    tuner = executor.AutotuneCache()
+
+    def run_auto():
+        return spgemm(a, a, engine="auto", mesh=mesh, row_chunk=row_chunk,
+                      pipeline=pipeline, sizing=sizing, autotune=tuner)
+
+    # one warm-up round per candidate engine converges every bin
+    for _ in range(len(executor.available_engines()) + 1):
+        run_auto()
+    hits0, misses0 = tuner.hits, tuner.misses
+    best, res = timed(run_auto)
+    AUTOTUNE_PROBE.update(
+        autotune_hits_converged=tuner.hits - hits0,
+        autotune_misses_converged=tuner.misses - misses0,
+        assignments=tuner.summary(),
+    )
+    _emit("medium_selfprod_auto", best * 1e6,
+          f"nnz_c={res.info['nnz_c']};shards={res.info['n_shards']};"
+          f"hits={tuner.hits - hits0};misses={tuner.misses - misses0}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -244,7 +344,14 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write records as JSON (bench-smoke artifact)")
     ap.add_argument("--ci", action="store_true",
-                    help="tiny synthetic smoke suite for the CI gate")
+                    help="tiny synthetic smoke suite for the CI gate "
+                         "(alias of --tier ci)")
+    ap.add_argument("--tier", default=None, choices=("ci", "medium"),
+                    help="smoke tier: 'ci' = the tiny 256-node graph; "
+                         "'medium' = a 1024-node graph big enough that "
+                         "two-wave pipelining wins and per-engine "
+                         "differences are stable, emitting medium_* "
+                         "records plus the engine='auto' autotune probe")
     ap.add_argument("--batch", type=int, default=0, metavar="N",
                     help="add batched-SpGEMM records: one plan serving N "
                          "same-pattern value sets vs a per-matrix loop")
@@ -269,16 +376,22 @@ def main() -> None:
     mesh = _make_mesh(args.devices)
 
     # --engine choices come from the live registry (not a frozen argparse
-    # list); imported only now because XLA_FLAGS must precede jax import.
-    from repro.core.executor import available_engines
+    # list) plus "auto"; imported only now because XLA_FLAGS must precede
+    # jax import.  resolve_engine raises naming every valid choice.
+    from repro.core.executor import available_engines, resolve_engine
 
-    if args.engine not in available_engines():
-        ap.error(f"--engine {args.engine!r} is not a registered engine; "
-                 f"available: {', '.join(available_engines())}")
+    try:
+        resolve_engine(args.engine)
+    except ValueError as e:
+        ap.error(str(e))
 
-    if args.ci:
-        ci_smoke(mesh, batch=args.batch, reuse_plan=args.reuse_plan,
-                 pipeline=args.pipeline, sizing=args.sizing)
+    tier = args.tier or ("ci" if args.ci else None)
+    if tier is not None:
+        if tier == "ci":
+            ci_smoke(mesh, batch=args.batch, reuse_plan=args.reuse_plan,
+                     pipeline=args.pipeline, sizing=args.sizing)
+        else:
+            medium_smoke(mesh, pipeline=args.pipeline, sizing=args.sizing)
         if args.json:
             _write_json(args.json, args)
         return
@@ -370,6 +483,7 @@ def _write_json(path: str, args) -> None:
 
     meta = {"devices": args.devices, "engine": args.engine,
             "gather": args.gather, "ci": bool(args.ci),
+            "tier": args.tier or ("ci" if args.ci else None),
             "full": bool(args.full), "batch": args.batch,
             "reuse_plan": bool(args.reuse_plan),
             "sizing": args.sizing,
@@ -378,6 +492,8 @@ def _write_json(path: str, args) -> None:
         meta["pipeline_probe"] = dict(PIPELINE_PROBE)
     if FUSED_PROBE:
         meta["fused_probe"] = dict(FUSED_PROBE)
+    if AUTOTUNE_PROBE:
+        meta["autotune_probe"] = dict(AUTOTUNE_PROBE)
     with open(path, "w") as f:
         json.dump({"meta": meta, "records": RECORDS}, f, indent=2)
     print(f"wrote {len(RECORDS)} records to {path}", file=sys.stderr)

@@ -226,11 +226,16 @@ def train_gnn_minibatch(
     ``sizing`` its output sizing (planned Alg. 1 bounds vs the measured
     uniqueCount sync).  ``a``
     should already be normalized as the architecture expects
-    (e.g. ``normalize_adjacency``).
+    (e.g. ``normalize_adjacency``).  ``engine`` accepts any registered
+    engine or ``"auto"`` (per-bin adaptive dispatch — epoch-revisited
+    batches are the ``AutotuneCache``'s convergence case), validated up
+    front.
     """
     from repro.apps.sampling import bulk_sample
+    from repro.core import executor
     from repro.core.spgemm import PlanCache
 
+    engine = executor.resolve_engine(engine)
     key = jax.random.PRNGKey(seed)
     params = init_gnn(cfg, key)
     opt = adamw(lr, weight_decay=0.0)

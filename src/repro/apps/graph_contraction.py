@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core import executor
 from repro.core.spgemm import spgemm
 from repro.sparse.formats import CSR, csr_from_coo
 from repro.sparse.ops import csr_transpose
@@ -32,8 +33,11 @@ def graph_contraction(g: CSR, labels: np.ndarray, method: str = "sort",
     ``mesh`` runs both SpGEMMs through the sharded multi-device executor,
     ``pipeline`` picks the two-wave vs legacy sync structure, and
     ``sizing`` the measured-vs-planned output sizing (planned = zero
-    blocking syncs per SpGEMM for fused engines).
+    blocking syncs per SpGEMM for fused engines).  ``method`` accepts any
+    registered engine or ``"auto"`` (per-bin adaptive dispatch), validated
+    up front.
     """
+    method = executor.resolve_engine(method)
     s = label_matrix(labels, n=g.n_rows)
     st = csr_transpose(s)
     r1 = spgemm(s, g, engine=method, gather=gather, schedule=schedule,

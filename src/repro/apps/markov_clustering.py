@@ -13,6 +13,7 @@ from typing import List
 
 import numpy as np
 
+from repro.core import executor
 from repro.core.spgemm import PlanCache, spgemm
 from repro.sparse.formats import CSR, csr_from_coo
 from repro.sparse.ops import (
@@ -107,7 +108,11 @@ def mcl(
     ``sizing`` selects the executor's output sizing (``"planned"`` = the
     sync-free Alg. 1 bound path, the default for ``method="fused_hash"``;
     ``"measured"`` = the uniqueCount-sync escape hatch).
+    ``method="auto"`` turns on per-bin adaptive dispatch — MCL's repeated
+    same-support expansions are the ``AutotuneCache``'s convergence case;
+    any method value is validated up front.
     """
+    method = executor.resolve_engine(method)
     a = add_self_loops(g)
     a = csr_column_normalize(a)
     plan_cache = PlanCache() if reuse_plan else None

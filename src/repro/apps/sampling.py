@@ -34,6 +34,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import executor
 from repro.core.spgemm import spgemm, spgemm_batched
 from repro.sparse.formats import CSR, csr_from_coo
 from repro.sparse.ops import csr_scale_rows, csr_transpose
@@ -80,7 +81,11 @@ def extract(a: CSR, rows: np.ndarray, cols: np.ndarray,
             engine: str = "sort", gather: str = "auto", mesh=None,
             plan_cache=None, pipeline: str = "two_wave",
             sizing: str = "auto") -> CSR:
-    """A[rows, cols] via SpGEMM with selection matrices: R · A · Cᵀ."""
+    """A[rows, cols] via SpGEMM with selection matrices: R · A · Cᵀ.
+
+    ``engine`` accepts any registered engine name or ``"auto"`` (per-bin
+    adaptive dispatch), validated up front."""
+    engine = executor.resolve_engine(engine)
     r = selection_matrix(rows, a.n_rows)
     c = selection_matrix(cols, a.n_cols)
     ra = spgemm(r, a, engine=engine, gather=gather, mesh=mesh,
@@ -154,7 +159,11 @@ def bulk_sample(
     syncs for fused engines, vs the measured uniqueCount sync); the
     chain's shared adjacency also makes every step after the first serve
     B's replicated buffers from the executor's ``OperandCache``.
+    ``engine="auto"`` turns on the executor's per-bin adaptive dispatch
+    (the chain's repeated patterns are what the ``AutotuneCache``
+    converges on); any engine value is validated up front.
     """
+    engine = executor.resolve_engine(engine)
     rng = np.random.default_rng(seed)
     frontiers = [np.asarray(batch_vertices, np.int64)]
     adjs: List[CSR] = []

@@ -138,12 +138,19 @@ different values.  Two mechanisms exploit that:
   placement) keyed on the operand's identity and the device set, shared
   across batched/iterative calls instead of re-replicated per call;
   ``operand_hits``/``operand_misses`` in ``cache_stats()``.
+* ``AutotuneCache`` — ``engine="auto"``'s measured per-bin engine
+  assignments, keyed like ``PlanCache`` plus backend + bin signature.
+  Each unconverged call measures one candidate per non-empty Table-I bin
+  (a timed bin-restricted sub-execution); converged calls serve the
+  frozen assignment with zero re-measurement.
+  ``autotune_hits``/``autotune_misses`` in ``cache_stats()``.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import os
+import time
 import weakref
 from collections import OrderedDict
 from typing import Callable, Dict, List, Literal, Optional, Sequence, Tuple
@@ -218,6 +225,52 @@ def get_engine(name: str) -> Engine:
 
 def available_engines() -> Tuple[str, ...]:
     return tuple(sorted(ENGINES))
+
+
+AUTO_ENGINE = "auto"
+
+
+def resolve_engine(engine: Optional[str] = None,
+                   method: Optional[str] = None) -> str:
+    """Validate an ``engine=`` value everywhere it is threaded.
+
+    Accepts any registered engine name plus ``"auto"`` (per-bin adaptive
+    dispatch: the executor resolves one engine per Table-I group from the
+    static heuristics + the ``AutotuneCache``).  ``method`` is the legacy
+    alias kept by the ``spgemm`` façade; ``None`` falls back to
+    ``method or "sort"``.  A typo raises immediately with the full list of
+    valid choices instead of surfacing as a deep ``get_engine`` failure.
+    """
+    if engine is None:
+        engine = method or "sort"
+    elif method is not None and method != engine:
+        raise ValueError(
+            f"conflicting method={method!r} (legacy alias) and "
+            f"engine={engine!r}")
+    if engine != AUTO_ENGINE and engine not in ENGINES:
+        raise ValueError(
+            f"unknown engine {engine!r}; valid choices: "
+            f"{', '.join(sorted(ENGINES))}, or 'auto' (per-bin adaptive "
+            "dispatch)")
+    return engine
+
+
+def static_bin_engines(backend: Optional[str] = None) -> Tuple[str, ...]:
+    """Static bin-size × backend seed for ``engine="auto"``.
+
+    The CI baseline says the vectorized sort engine dominates on CPU
+    (selfprod: sort 67 ms vs hash 500 ms / fused_hash 297 ms) while the
+    fused single-pass Pallas lane is the TPU winner, so the seed is
+    per-backend: every Table-I bin starts on ``"sort"`` off-TPU and on
+    ``"fused_hash"`` on TPU.  This is only the *starting point* — the
+    ``AutotuneCache`` measures each bin's candidates on the live pattern
+    and converges to the measured per-bin optimum (nsparse-style adaptive
+    accumulator selection, arXiv:1804.01698).
+    """
+    if backend is None:
+        backend = jax.default_backend()
+    name = "fused_hash" if backend == "tpu" else "sort"
+    return (name, name, name, name)
 
 
 def _hash_accumulate(keys, vals, table_cap: int, out_cap: int):
@@ -323,7 +376,22 @@ BATCHED_GATHERS: Dict[str, Callable] = {
 # Output sizing — measured (uniqueCount sync) vs planned (Alg. 1 bounds)
 # ---------------------------------------------------------------------------
 
-def resolve_sizing(sizing: Sizing, engine: str, plan=None) -> str:
+def _engines_in_use(engine: str, plan=None,
+                    group_engines: Optional[Sequence[str]] = None
+                    ) -> Tuple[str, ...]:
+    """The engine names a call will actually dispatch: the per-bin
+    assignment restricted to non-empty groups when one is set, else the
+    uniform ``engine=``."""
+    if group_engines is None:
+        return (engine,)
+    sizes = getattr(plan, "group_sizes", None)
+    used = tuple(e for g, e in enumerate(group_engines)
+                 if sizes is None or sizes[g] > 0)
+    return used or (group_engines[0],)
+
+
+def resolve_sizing(sizing: Sizing, engine: str, plan=None,
+                   group_engines: Optional[Sequence[str]] = None) -> str:
     """``"auto"`` → ``"planned"`` for fused engines, ``"measured"``
     otherwise.
 
@@ -335,11 +403,20 @@ def resolve_sizing(sizing: Sizing, engine: str, plan=None) -> str:
     (many duplicate columns per row make the IP bound loose, inflating
     ``out_cap`` and the output buffers): it keeps the single coalesced
     uniqueCount sync and exact capacities.
+
+    With a per-bin assignment (``engine="auto"`` or
+    ``plan.group_engines``), the rule applies to every engine the call
+    will actually dispatch: planned only when **all** non-empty bins
+    resolved to fused engines, measured as soon as any bin picked a
+    non-fused one (that bin needs the uniqueCount sync anyway, and the
+    coalesced sync sizes every chunk at once).
     """
     if sizing not in ("auto", "planned", "measured"):
         raise ValueError(f"unknown sizing {sizing!r}")
     if sizing == "auto":
-        return "planned" if (get_engine(engine).fused
+        engines = _engines_in_use(engine, plan, group_engines)
+        all_fused = all(get_engine(e).fused for e in engines)
+        return "planned" if (all_fused
                              and getattr(plan, "row_ip", None) is not None) \
             else "measured"
     if sizing == "planned" and plan is not None \
@@ -398,21 +475,29 @@ _SYNC_STATS = {"host_sync_count": 0}
 # OperandCache lookups: a hit means the B-side replicated ELL buffers were
 # served without any re-replication (zero device transfers).
 _OPERAND_STATS = {"operand_hits": 0, "operand_misses": 0}
+# AutotuneCache lookups for engine="auto": a hit serves a fully-measured
+# per-bin assignment with zero re-measurement; a miss covers both the first
+# sighting of a (pattern, backend, bin-signature) key and every incremental
+# measurement round until the per-bin candidates are exhausted.
+_AUTOTUNE_STATS = {"autotune_hits": 0, "autotune_misses": 0}
 
 
 def cache_stats() -> Dict[str, int]:
     """Global cache counters: jitted-program ``hits``/``misses``, plan-cache
     ``plan_hits``/``plan_misses`` (every ``PlanCache`` instance folds its
     lookups into the same counters), the pipeline's blocking
-    ``host_sync_count``, and the B-operand replication cache's
-    ``operand_hits``/``operand_misses``."""
-    return {**_CACHE_STATS, **_PLAN_STATS, **_SYNC_STATS, **_OPERAND_STATS}
+    ``host_sync_count``, the B-operand replication cache's
+    ``operand_hits``/``operand_misses``, and the per-bin engine autotuner's
+    ``autotune_hits``/``autotune_misses``."""
+    return {**_CACHE_STATS, **_PLAN_STATS, **_SYNC_STATS, **_OPERAND_STATS,
+            **_AUTOTUNE_STATS}
 
 
 def clear_program_cache() -> None:
     _PROGRAM_CACHE.clear()
     _PARTITION_CACHE.clear()
     _OPERAND_CACHE.clear()
+    _AUTOTUNE_CACHE.clear()
     _CACHE_STATS["hits"] = 0
     _CACHE_STATS["misses"] = 0
     _PLAN_STATS["plan_hits"] = 0
@@ -420,6 +505,8 @@ def clear_program_cache() -> None:
     _SYNC_STATS["host_sync_count"] = 0
     _OPERAND_STATS["operand_hits"] = 0
     _OPERAND_STATS["operand_misses"] = 0
+    _AUTOTUNE_STATS["autotune_hits"] = 0
+    _AUTOTUNE_STATS["autotune_misses"] = 0
 
 
 def _coalesced_sync(arrays: Sequence[jax.Array]) -> List[np.ndarray]:
@@ -576,6 +663,250 @@ class OperandCache:
 
 
 _OPERAND_CACHE = OperandCache()
+
+
+# ---------------------------------------------------------------------------
+# Autotune cache — measured per-bin engine assignment for engine="auto"
+# ---------------------------------------------------------------------------
+
+def autotune_key(a: "CSR", b: "CSR", plan: GroupPlan) -> tuple:
+    """AutotuneCache key: the operands' sparsity-pattern fingerprint (the
+    ``PlanCache`` key), the JAX backend (the winning engine is
+    backend-dependent — sort on CPU, the fused Pallas lane on TPU), and
+    the plan's bin signature (group sizes + table capacities: a different
+    binning of the same pattern, e.g. ``ungrouped_plan``, re-measures)."""
+    return (pattern_fingerprint(a, b), jax.default_backend(),
+            tuple(plan.group_sizes), tuple(plan.table_capacities))
+
+
+@dataclasses.dataclass
+class _AutotuneEntry:
+    """Measured per-bin state for one (pattern, backend, bins) key.
+
+    ``pending`` holds each non-empty group's not-yet-measured candidate
+    engines (seed heuristic first); ``timings`` the measured µs per
+    (group, engine); ``assignment`` the current per-group pick — the
+    measured argmin where timings exist, the static seed elsewhere."""
+
+    seed: Tuple[str, ...]
+    pending: Dict[int, List[str]]
+    timings: Dict[int, Dict[str, float]]
+    assignment: Tuple[str, ...]
+
+    @property
+    def converged(self) -> bool:
+        return not any(self.pending.values())
+
+    def _recompute(self) -> None:
+        picks = []
+        for g in range(4):
+            t = self.timings.get(g)
+            picks.append(min(t, key=t.get) if t else self.seed[g])
+        self.assignment = tuple(picks)
+
+
+class AutotuneCache:
+    """LRU cache of measured per-bin engine assignments (``engine="auto"``).
+
+    Keyed like ``PlanCache`` (``autotune_key``: pattern fingerprint +
+    backend + bin signature).  The first sighting of a key seeds every
+    non-empty Table-I group with the static bin-size × backend heuristic
+    and queues the remaining registered engines as measurement candidates;
+    each subsequent ``engine="auto"`` call measures **one** candidate per
+    bin (a timed bin-restricted sub-execution) until the queue drains, so
+    iterative workloads (MCL expansion, GNN epochs through
+    ``reuse_plan=True``) converge to the measured per-bin optimum within a
+    run — after which every call is a pure hit serving the frozen
+    assignment with zero re-measurement.  Lookups fold into
+    ``cache_stats()`` as ``autotune_hits``/``autotune_misses`` (a miss is
+    any round that still measured; a hit is a converged serve).
+    """
+
+    def __init__(self, max_entries: int = 64,
+                 candidates: Optional[Sequence[str]] = None):
+        self.max_entries = max_entries
+        self.candidates = tuple(candidates) if candidates else None
+        self._entries: "OrderedDict[tuple, _AutotuneEntry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def _candidate_order(self, seed_engine: str) -> List[str]:
+        cands = self.candidates or available_engines()
+        return [seed_engine] + [e for e in sorted(cands) if e != seed_engine]
+
+    def _entry_for(self, key: tuple, plan: GroupPlan) -> _AutotuneEntry:
+        entry = self._entries.get(key)
+        if entry is None:
+            seed = static_bin_engines()
+            entry = _AutotuneEntry(
+                seed=seed,
+                pending={g: self._candidate_order(seed[g])
+                         for g in range(4) if plan.group_sizes[g] > 0},
+                timings={},
+                assignment=seed,
+            )
+            self._entries[key] = entry
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+        else:
+            self._entries.move_to_end(key)
+        return entry
+
+    def converged(self, key: tuple) -> bool:
+        entry = self._entries.get(key)
+        return entry is not None and entry.converged
+
+    def assignment_for(self, key: tuple, plan: GroupPlan,
+                       measure: Callable[[int, str], float]
+                       ) -> Tuple[str, ...]:
+        """Serve (hit) or refine (miss + one measurement round) the
+        per-bin assignment for ``key``.  ``measure(group, engine)``
+        returns the measured wall time in µs; it is only called while
+        candidates remain."""
+        entry = self._entry_for(key, plan)
+        if entry.converged:
+            self.hits += 1
+            _AUTOTUNE_STATS["autotune_hits"] += 1
+            return entry.assignment
+        self.misses += 1
+        _AUTOTUNE_STATS["autotune_misses"] += 1
+        for g, cands in entry.pending.items():
+            if cands:
+                eng = cands.pop(0)
+                entry.timings.setdefault(g, {})[eng] = float(measure(g, eng))
+        entry._recompute()
+        return entry.assignment
+
+    def record(self, key: tuple, plan: GroupPlan, group: int, engine: str,
+               us: float) -> None:
+        """Fold one externally-measured timing in (the offline measurement
+        loop, ``benchmarks.hillclimb.measure_bin_engines``).  Recording
+        every candidate of every non-empty bin converges the entry exactly
+        as the incremental in-band rounds would."""
+        entry = self._entry_for(key, plan)
+        pend = entry.pending.get(group)
+        if pend is not None and engine in pend:
+            pend.remove(engine)
+        entry.timings.setdefault(group, {})[engine] = float(us)
+        entry._recompute()
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries)}
+
+    def summary(self) -> List[Dict]:
+        """JSON-friendly view of every entry (bench meta / debugging):
+        bin signature, measured timings, and the chosen assignment."""
+        return [
+            {
+                "backend": key[1],
+                "group_sizes": list(key[2]),
+                "assignment": list(e.assignment),
+                "converged": e.converged,
+                "timings_us": {str(g): dict(t)
+                               for g, t in sorted(e.timings.items())},
+            }
+            for key, e in self._entries.items()
+        ]
+
+
+_AUTOTUNE_CACHE = AutotuneCache()
+
+
+def default_autotune_cache() -> AutotuneCache:
+    """The module-level cache ``engine="auto"`` uses when no explicit
+    ``autotune=`` cache is passed (cleared by ``clear_program_cache``)."""
+    return _AUTOTUNE_CACHE
+
+
+def bin_subplan(plan: GroupPlan, group: int) -> GroupPlan:
+    """A plan restricted to one Table-I group (every other bin empty).
+
+    The measurement loop times engines on *one bin at a time*; executing a
+    bin-restricted plan runs exactly that bin's chunks through the full
+    pipeline (rows outside the bin come back empty), so the measured wall
+    time isolates the bin's allocate/accumulate cost under each candidate.
+    """
+    rows = np.asarray(plan.rows_of_group(group), np.int32)
+    sizes = [0, 0, 0, 0]
+    sizes[group] = len(rows)
+    offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(np.int32)
+    return GroupPlan(
+        map_rows=rows,
+        group_id=plan.group_id,
+        group_offsets=offsets,
+        group_sizes=tuple(sizes),
+        group_sizes_padded=tuple(sizes),
+        table_capacities=plan.table_capacities,
+        max_ip=plan.max_ip,
+        total_ip=plan.total_ip,
+        row_ip=plan.row_ip,
+    )
+
+
+def measure_group_engine(
+    a: "CSR",
+    b: "CSR",
+    plan: GroupPlan,
+    group: int,
+    engine: str,
+    gather: Gather = "auto",
+    row_chunk: int = 4096,
+    mesh=None,
+    pipeline: Pipeline = "two_wave",
+    reps: int = 2,
+    warmup: int = 1,
+    timer: Callable[[], float] = None,
+) -> float:
+    """Measured wall time (µs) of one Table-I bin under one engine.
+
+    Runs ``execute_plan`` on the bin-restricted subplan (``bin_subplan``)
+    with a *concrete* engine — never ``"auto"``, so measurement cannot
+    recurse — ``warmup`` untimed passes first (compilation must not land
+    inside the timed region), then the min over ``reps`` timed passes
+    (the noise-robust statistic the bench drivers use).  ``timer`` is
+    injectable for tests; measurement passes pay their own host syncs, so
+    only converged ``engine="auto"`` calls are bound by the two-wave sync
+    budget.
+    """
+    timer = timer or time.perf_counter
+    get_engine(engine)  # concrete engines only
+    sub = bin_subplan(plan, group)
+
+    def run():
+        c, _ = execute_plan(a, b, sub, engine=engine, gather=gather,
+                            row_chunk=row_chunk, mesh=mesh,
+                            pipeline=pipeline)
+        jax.block_until_ready((c.indptr, c.indices, c.data))
+
+    for _ in range(warmup):
+        run()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = timer()
+        run()
+        best = min(best, timer() - t0)
+    return best * 1e6
+
+
+def _autotune_assignment(a, b, plan, gather, row_chunk, mesh, pipeline,
+                         cache: Optional[AutotuneCache]) -> Tuple[str, ...]:
+    """Resolve ``engine="auto"``'s per-bin assignment through the autotune
+    cache (module default unless an explicit cache is threaded)."""
+    cache = _AUTOTUNE_CACHE if cache is None else cache
+
+    def measure(g, eng):
+        return measure_group_engine(
+            a, b, plan, g, eng, gather=gather, row_chunk=row_chunk,
+            mesh=mesh, pipeline=pipeline)
+
+    return cache.assignment_for(autotune_key(a, b, plan), plan, measure)
 
 
 def _build_enumerate(a_cap: int, gather: str) -> Callable:
@@ -780,6 +1111,7 @@ class WorkItem:
     rows: np.ndarray      # (R,) original row ids of this chunk
     a_cap: int            # exact max nnz(A row) over the *group*
     table_cap: int        # Table-I hash-table capacity of the group
+    engine: Optional[str] = None  # per-bin engine (None = caller's engine=)
 
 
 def partition_plan(
@@ -787,6 +1119,7 @@ def partition_plan(
     a_row_nnz: np.ndarray,
     row_chunk: int,
     n_shards: int = 1,
+    group_engines: Optional[Tuple[str, ...]] = None,
 ) -> List[WorkItem]:
     """Split a ``GroupPlan`` into shard-assigned group-chunk work items.
 
@@ -799,6 +1132,10 @@ def partition_plan(
     ``a_cap`` stays a *group-level* maximum: per-row results then never
     depend on the chunking or the shard count, which is what makes the
     sharded path bit-identical to the single-device one.
+
+    ``group_engines`` (the resolved ``engine="auto"`` assignment, or a
+    plan's forced ``plan.group_engines``) stamps each item with its bin's
+    engine; ``None`` leaves items on the caller's uniform ``engine=``.
     """
     items: List[WorkItem] = []
     cursor = 0
@@ -819,6 +1156,7 @@ def partition_plan(
                 rows=np.asarray(rows[lo: lo + chunk]),
                 a_cap=a_cap,
                 table_cap=table_cap,
+                engine=None if group_engines is None else group_engines[g],
             ))
             cursor += 1
     return items
@@ -832,6 +1170,7 @@ def partition_plan_cached(
     a_row_nnz: np.ndarray,
     row_chunk: int,
     n_shards: int = 1,
+    group_engines: Optional[Tuple[str, ...]] = None,
 ) -> List[WorkItem]:
     """Identity-memoized ``partition_plan``: a plan object served twice
     (a ``PlanCache`` hit, an explicit ``plan=`` reuse, or the batched lane)
@@ -843,10 +1182,11 @@ def partition_plan_cached(
     entry when the plan dies, so ``id()`` reuse can't alias and the cache
     never outlives the plans it serves.
     """
-    key = (id(plan), int(row_chunk), int(n_shards))
+    key = (id(plan), int(row_chunk), int(n_shards), group_engines)
     items = _PARTITION_CACHE.get(key)
     if items is None:
-        items = partition_plan(plan, a_row_nnz, row_chunk, n_shards=n_shards)
+        items = partition_plan(plan, a_row_nnz, row_chunk, n_shards=n_shards,
+                               group_engines=group_engines)
         _PARTITION_CACHE[key] = items
         weakref.finalize(plan, _PARTITION_CACHE.pop, key, None)
     return items
@@ -872,11 +1212,21 @@ def _shard_a_operands(a_arrays: Sequence, devices) -> List[tuple]:
 
 
 def _setup_execution(a: CSR, b: CSR, plan: GroupPlan, engine: str,
-                     gather: Gather, row_chunk: int, mesh):
+                     gather: Gather, row_chunk: int, mesh,
+                     group_engines: Optional[Tuple[str, ...]] = None):
     """Shared single-matrix/batched preamble: resolve knobs, derive the
-    exact capacities, and (memoized) partition the plan over the shards."""
+    exact capacities, and (memoized) partition the plan over the shards.
+
+    When ``group_engines`` is set (``engine="auto"`` resolved, or a forced
+    ``plan.group_engines``), every assigned engine is validated and the
+    work items come back stamped per bin; the base ``engine`` may then be
+    the string ``"auto"`` and is never dispatched itself."""
     gather = resolve_gather(gather)
-    get_engine(engine)  # validate early
+    if group_engines is not None:
+        for name in group_engines:
+            get_engine(name)  # validate the whole assignment early
+    else:
+        get_engine(engine)  # validate early ("auto" must be resolved first)
     # a_cap/kb_cap stay *exact*: ip_cap = a_cap·kb_cap is the sort engine's
     # dominant dimension and rounding it up is superlinearly expensive.
     # Cache keys still stabilize across iterations because iterative
@@ -888,7 +1238,8 @@ def _setup_execution(a: CSR, b: CSR, plan: GroupPlan, engine: str,
     a_row_nnz = a_indptr_np[1:] - a_indptr_np[:-1]
     devices = shard_devices(mesh)
     items = partition_plan_cached(plan, a_row_nnz, row_chunk,
-                                  n_shards=len(devices))
+                                  n_shards=len(devices),
+                                  group_engines=group_engines)
     return gather, kb_cap, ncol_cap, devices, items
 
 
@@ -1150,6 +1501,7 @@ def execute_plan(
     mesh=None,
     pipeline: Pipeline = "two_wave",
     sizing: Sizing = "auto",
+    autotune: Optional[AutotuneCache] = None,
 ) -> Tuple[CSR, int]:
     """Run the compiled group pipeline; returns (C, nnz_C).
 
@@ -1182,9 +1534,24 @@ def execute_plan(
     more than one shard the epilogue is itself sharded: chunks pack into
     shard-local CSR segments on their own devices and the merge device
     applies one destination-mapped scatter per shard.
+
+    ``engine="auto"`` dispatches *per Table-I bin* (nsparse-style adaptive
+    accumulator selection): the assignment comes from
+    ``plan.group_engines`` when set (forced mixed dispatch — it also wins
+    over a concrete ``engine=``), otherwise from the ``AutotuneCache``
+    (``autotune=``, default the module cache): static bin-size × backend
+    seeds refined by measured per-bin timings, one candidate measured per
+    call until converged.  Sizing then follows the per-bin rule: planned
+    iff every non-empty bin's engine is fused, measured the moment any
+    bin picks a non-fused engine.
     """
     if pipeline not in ("two_wave", "legacy"):
         raise ValueError(f"unknown pipeline {pipeline!r}")
+    engine = resolve_engine(engine)
+    group_engines = plan.group_engines
+    if group_engines is None and engine == AUTO_ENGINE:
+        group_engines = _autotune_assignment(
+            a, b, plan, gather, row_chunk, mesh, pipeline, autotune)
     if pipeline == "legacy":
         if sizing == "planned":
             raise ValueError(
@@ -1192,9 +1559,10 @@ def execute_plan(
                 "reference path sizes each chunk from a blocking sync)")
         mode = "measured"
     else:
-        mode = resolve_sizing(sizing, engine, plan)
+        mode = resolve_sizing(sizing, engine, plan, group_engines)
     gather, kb_cap, ncol_cap, devices, items = _setup_execution(
-        a, b, plan, engine, gather, row_chunk, mesh)
+        a, b, plan, engine, gather, row_chunk, mesh,
+        group_engines=group_engines)
     n = a.n_rows
     dtype = np.dtype(a.data.dtype)  # no host round-trip: dtype is metadata
     dt = dtype.str
@@ -1223,7 +1591,8 @@ def execute_plan(
             item.a_cap, gather)
         keys, vals = enum(a_ip, a_ix, a_dt, rows_j, b_ix, b_vl)
         pend.append((item, padded, keys, vals,
-                     _alloc_counts(keys, padded, item.table_cap, engine)))
+                     _alloc_counts(keys, padded, item.table_cap,
+                                   item.engine or engine)))
 
     # ---- The one coalesced host sync: size every out_cap at once ----
     unique_counts, indptr, nnz, cap = _coalesce_and_size(pend, n)
@@ -1238,12 +1607,13 @@ def execute_plan(
     for i, uc in enumerate(unique_counts):
         item, padded, keys, vals, _ = pend[i]
         pend[i] = None  # free this chunk's intermediates once consumed
+        eng_name = item.engine or engine
         out_cap = _out_cap_from_counts(uc, item.table_cap, ncol_cap)
         ip_cap = keys.shape[1]
         accum = _get_program(
             "accumulate",
-            (padded, ip_cap, item.table_cap, out_cap, engine, dt),
-            item.table_cap, out_cap, engine)
+            (padded, ip_cap, item.table_cap, out_cap, eng_name, dt),
+            item.table_cap, out_cap, eng_name)
         cols_r, vals_r, counts_r = accum(keys, vals)
         # sharded epilogue: starts/outputs stay on the shard device
         starts_dev = devices[item.shard] if epi.sharded else epi.merge_dev
@@ -1266,15 +1636,18 @@ def _run_planned(items, devices, a_ops, b_ops, plan, n, dtype, dt, kb_cap,
     blocking host sync.  ``nnz`` is returned as a device scalar; it blocks
     only when the caller materializes it.  ``batch`` switches the batched
     program kinds and value planes; ``a_ops``/``b_ops`` are per-shard
-    operand tuples either way.
+    operand tuples either way.  Items stamped with a per-bin engine
+    (``engine="auto"``) dispatch their own engine's programs; the sizing
+    rule guarantees every engine reaching this sync-free core is fused.
     """
-    eng = get_engine(engine)
     kernel = _fused_kernel_mode(dt)
     bounds = [chunk_capacity_bounds(plan, item.rows, ncol) for item in items]
     cap = _int32_nnz_capacity(sum(s for _, s in bounds))
     bkey = () if batch is None else (batch,)
     runs: List[_ChunkRun] = []
     for item, (max_u, _) in zip(items, bounds):
+        eng_name = item.engine or engine
+        eng = get_engine(eng_name)
         dev = devices[item.shard]
         a_arrs = a_ops[item.shard]
         b_ix, b_vl = b_ops[item.shard]
@@ -1303,8 +1676,8 @@ def _run_planned(items, devices, a_ops, b_ops, plan, n, dtype, dt, kb_cap,
             accum = _get_program(
                 "accumulate" if batch is None else "baccumulate",
                 bkey + (padded, keys.shape[1], item.table_cap, out_cap,
-                        engine, dt),
-                item.table_cap, out_cap, engine)
+                        eng_name, dt),
+                item.table_cap, out_cap, eng_name)
             cols_r, vals_r, counts_r = accum(keys, vals)
         if batch is not None:  # shared structure: member 0 carries it
             cols_r, counts_r = cols_r[0], counts_r[0]
@@ -1346,11 +1719,12 @@ def _execute_plan_legacy(items, devices, a_ops, b_entry, n, shape, dtype, dt,
                             a_cap, gather)
         keys, vals = enum(a_ip, a_ix, a_dt, rows_j, b_ix, b_vl)
         ip_cap = keys.shape[1]
-        out_cap = _size_out_cap(keys, padded, table_cap, engine, ncol_cap)
+        eng_name = item.engine or engine
+        out_cap = _size_out_cap(keys, padded, table_cap, eng_name, ncol_cap)
         # ---- Accumulation (Algorithm 5) on the same device arrays ----
         accum = _get_program(
-            "accumulate", (padded, ip_cap, table_cap, out_cap, engine, dt),
-            table_cap, out_cap, engine)
+            "accumulate", (padded, ip_cap, table_cap, out_cap, eng_name, dt),
+            table_cap, out_cap, eng_name)
         cols_r, vals_r, counts_r = accum(keys, vals)
         out = _ChunkOut(
             rows=np.asarray(chunk),
@@ -1444,6 +1818,7 @@ def execute_plan_batched(
     mesh=None,
     pipeline: Pipeline = "two_wave",
     sizing: Sizing = "auto",
+    autotune: Optional[AutotuneCache] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, int]:
     """Run the compiled pipeline once for a whole batch of same-pattern
     operands; returns ``(indptr, indices, data_batch, nnz)``.
@@ -1469,11 +1844,20 @@ def execute_plan_batched(
     default) sizes every chunk of the whole batch from the plan's Alg. 1
     bounds and assembles the shared indptr on device — zero blocking
     syncs; ``"measured"`` keeps the one coalesced uniqueCount sync.
+
+    ``engine="auto"`` resolves a per-bin assignment exactly as in
+    ``execute_plan`` (forced ``plan.group_engines`` wins; otherwise the
+    ``AutotuneCache``), and the whole batch rides the one assignment.
     """
     if pipeline not in ("two_wave", "legacy"):
         raise ValueError(f"unknown pipeline {pipeline!r}")
     if plan is None:
         plan = group_rows(a, b)
+    engine = resolve_engine(engine)
+    group_engines = plan.group_engines
+    if group_engines is None and engine == AUTO_ENGINE:
+        group_engines = _autotune_assignment(
+            a, b, plan, gather, row_chunk, mesh, pipeline, autotune)
     if pipeline == "legacy":
         if sizing == "planned":
             raise ValueError(
@@ -1481,9 +1865,10 @@ def execute_plan_batched(
                 "reference path sizes each chunk from a blocking sync)")
         mode = "measured"
     else:
-        mode = resolve_sizing(sizing, engine, plan)
+        mode = resolve_sizing(sizing, engine, plan, group_engines)
     gather, kb_cap, ncol_cap, devices, items = _setup_execution(
-        a, b, plan, engine, gather, row_chunk, mesh)
+        a, b, plan, engine, gather, row_chunk, mesh,
+        group_engines=group_engines)
     n = a.n_rows
     a_data_batch, batch, a_shards, b_shards = _batched_operands(
         a, b, a_data_batch, b_data_batch, kb_cap, devices)
@@ -1510,7 +1895,8 @@ def execute_plan_batched(
             item.a_cap, gather)
         keys, vals_b = benum(a_ip, a_ix, a_db, rows_j, b_ix, b_vb)
         pend.append((item, padded, keys, vals_b,
-                     _alloc_counts(keys, padded, item.table_cap, engine)))
+                     _alloc_counts(keys, padded, item.table_cap,
+                                   item.engine or engine)))
 
     # ---- One coalesced host sync sizes all chunks for the whole batch ----
     unique_counts, indptr, nnz, cap = _coalesce_and_size(pend, n)
@@ -1526,12 +1912,13 @@ def execute_plan_batched(
     for i, uc in enumerate(unique_counts):
         item, padded, keys, vals_b, _ = pend[i]
         pend[i] = None  # free this chunk's intermediates once consumed
+        eng_name = item.engine or engine
         out_cap = _out_cap_from_counts(uc, item.table_cap, ncol_cap)
         ip_cap = keys.shape[1]
         bacc = _get_program(
             "baccumulate",
-            (batch, padded, ip_cap, item.table_cap, out_cap, engine, dt),
-            item.table_cap, out_cap, engine)
+            (batch, padded, ip_cap, item.table_cap, out_cap, eng_name, dt),
+            item.table_cap, out_cap, eng_name)
         cols_rb, vals_rb, counts_rb = bacc(keys, vals_b)
         starts_dev = devices[item.shard] if epi.sharded else epi.merge_dev
         epi.add_chunk(
@@ -1564,12 +1951,13 @@ def _execute_plan_batched_legacy(items, devices, a_shards, b_shards, n,
             a_cap, gather)
         keys, vals_b = benum(a_ip, a_ix, a_db, rows_j, b_ix, b_vb)
         ip_cap = keys.shape[1]
-        out_cap = _size_out_cap(keys, padded, table_cap, engine, ncol_cap)
+        eng_name = item.engine or engine
+        out_cap = _size_out_cap(keys, padded, table_cap, eng_name, ncol_cap)
         # ---- Accumulation vmapped over the batch's value sets ----
         bacc = _get_program(
             "baccumulate",
-            (batch, padded, ip_cap, table_cap, out_cap, engine, dt),
-            table_cap, out_cap, engine)
+            (batch, padded, ip_cap, table_cap, out_cap, eng_name, dt),
+            table_cap, out_cap, eng_name)
         cols_rb, vals_rb, counts_rb = bacc(keys, vals_b)
         out = _BatchChunkOut(
             rows=np.asarray(chunk),

@@ -54,6 +54,16 @@ class GroupPlan:
     executor a *free* per-chunk capacity bound (uniqueCount ≤ IP per row),
     which the sync-free ``sizing="planned"`` path uses to pick ``out_cap``
     without the blocking uniqueCount host sync.
+
+    ``group_engines`` is the per-bin engine assignment (nsparse-style
+    adaptive dispatch): one registered engine name per Table-I group, or
+    ``None`` for uniform dispatch under the caller's ``engine=``.
+    ``group_rows`` leaves it ``None``; the executor fills it at run time
+    when ``engine="auto"`` resolves an assignment (static bin-size ×
+    backend heuristics refined by the ``AutotuneCache``), and callers can
+    force a mixed assignment with ``dataclasses.replace(plan,
+    group_engines=(...))`` — every work item of group ``g`` then runs
+    ``group_engines[g]`` regardless of the call-level ``engine=``.
     """
 
     map_rows: np.ndarray  # (n_rows,) int32
@@ -65,6 +75,7 @@ class GroupPlan:
     max_ip: int
     total_ip: int
     row_ip: np.ndarray = None  # (n_rows,) int64 Alg. 1 IP per original row
+    group_engines: Tuple[str, str, str, str] = None  # per-bin engine names
 
     def rows_of_group(self, g: int) -> np.ndarray:
         return self.map_rows[self.group_offsets[g]: self.group_offsets[g + 1]]

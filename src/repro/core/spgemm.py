@@ -85,11 +85,16 @@ def spgemm(
     plan: PlanLike = None,
     pipeline: executor.Pipeline = "two_wave",
     sizing: executor.Sizing = "auto",
+    autotune: Optional[executor.AutotuneCache] = None,
 ) -> SpGEMMResult:
     """C = A @ B via the paper's multi-phase pipeline (plan-compiled).
 
     ``engine`` selects the allocation/accumulation engine from the executor
-    registry (``"hash"`` or ``"sort"``; ``method`` is the legacy alias).
+    registry (``"hash"``, ``"sort"``, ``"fused_hash"``; ``method`` is the
+    legacy alias), or ``"auto"`` for per-bin adaptive dispatch: each
+    Table-I group runs the engine the ``AutotuneCache`` resolved for it
+    (static backend seed refined by measured per-bin timings; pass
+    ``autotune=`` to scope the cache, default the executor module cache).
     ``gather`` selects how B rows are served: ``"xla"`` (software-only
     baseline), ``"aia"`` (scalar-prefetch Pallas kernels), or ``"auto"``
     (AIA on TPU) — the paper's Fig. 7 ablation axis.
@@ -117,11 +122,7 @@ def spgemm(
     and measured otherwise.
     """
     assert a.n_cols == b.n_rows, (a.shape, b.shape)
-    if engine is None:
-        engine = method or "sort"
-    elif method is not None and method != engine:
-        raise ValueError(
-            f"conflicting method={method!r} (legacy alias) and engine={engine!r}")
+    engine = executor.resolve_engine(engine, method)
     # ---- Phase 1: row grouping (one host sync, amortized via ``plan``) ----
     plan = _resolve_plan(a, b, plan)
     run_plan = plan
@@ -130,7 +131,7 @@ def spgemm(
     # ---- Phases 2+3: compiled group pipeline + device-side reassembly ----
     c, nnz = executor.execute_plan(
         a, b, run_plan, engine=engine, gather=gather, row_chunk=row_chunk,
-        mesh=mesh, pipeline=pipeline, sizing=sizing,
+        mesh=mesh, pipeline=pipeline, sizing=sizing, autotune=autotune,
     )
     info = spgemm_info(a, b, run_plan, nnz, mesh=mesh)
     return SpGEMMResult(c=c, plan=run_plan, info=info)
@@ -210,6 +211,7 @@ def spgemm_batched(
     plan: PlanLike = None,
     pipeline: executor.Pipeline = "two_wave",
     sizing: executor.Sizing = "auto",
+    autotune: Optional[executor.AutotuneCache] = None,
 ) -> SpGEMMBatchResult:
     """``cs[i] = a_batch[i] @ b_batch[i]`` for same-pattern operand batches.
 
@@ -233,11 +235,7 @@ def spgemm_batched(
             f"{len(b_members)} B members")
     a, b = a_members[0], b_members[0]
     assert a.n_cols == b.n_rows, (a.shape, b.shape)
-    if engine is None:
-        engine = method or "sort"
-    elif method is not None and method != engine:
-        raise ValueError(
-            f"conflicting method={method!r} (legacy alias) and engine={engine!r}")
+    engine = executor.resolve_engine(engine, method)
     _require_same_pattern(a_members, "a_batch")
     _require_same_pattern(b_members, "b_batch")
 
@@ -251,6 +249,7 @@ def spgemm_batched(
     indptr, indices, data_batch, nnz = executor.execute_plan_batched(
         a, b, a_data, b_data, run_plan, engine=engine, gather=gather,
         row_chunk=row_chunk, mesh=mesh, pipeline=pipeline, sizing=sizing,
+        autotune=autotune,
     )
     indptr_j = jnp.asarray(indptr)
     indices_j = jnp.asarray(indices)
@@ -274,6 +273,12 @@ def spgemm_ell_fixed(a: ELL, b: ELL, out_cap: int, engine: str = "sort") -> ELL:
     model forward passes.  The engine is resolved through the executor
     registry; both registered engines are jit/scan-compatible.
     """
+    engine = executor.resolve_engine(engine)
+    if engine == executor.AUTO_ENGINE:
+        raise ValueError(
+            "spgemm_ell_fixed runs a single fixed-capacity group, so there "
+            "are no Table-I bins for engine='auto' to dispatch over; pick a "
+            f"concrete engine: {', '.join(executor.available_engines())}")
     keys, vals = phases.enumerate_products(
         jnp.asarray(a.indices), jnp.asarray(a.data), b.indices, b.data
     )

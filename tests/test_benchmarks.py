@@ -57,6 +57,21 @@ def test_check_regression_drift_empty_when_sets_match():
     assert record_drift(cur, base) == ([], [])
 
 
+def test_check_regression_min_us_noise_floor():
+    """Records with both sides under the floor are jitter-dominated and
+    skipped; a record *crossing* the floor (tiny baseline, blown-up
+    current — the re-tracing signature) still gates."""
+    base = _recs(tiny=30.0, crossed=30.0, big=1000.0)
+    cur = _recs(tiny=90.0, crossed=900.0, big=2500.0)
+    # no floor: all three 2x+ blowups flagged
+    assert [r[0] for r in compare(cur, base, max_ratio=2.0)] == \
+        ["big", "crossed", "tiny"]
+    regs = compare(cur, base, max_ratio=2.0, min_us=200.0)
+    assert [r[0] for r in regs] == ["big", "crossed"]
+    # floor above everything: only records with a side >= floor gate
+    assert compare(cur, base, max_ratio=2.0, min_us=1e9) == []
+
+
 def test_roofline_terms_and_dominance():
     r = Roofline(arch="x", shape="train_4k", mesh={"data": 16, "model": 16},
                  t_compute=2.0, t_memory=1.0, t_collective=0.5,

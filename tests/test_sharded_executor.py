@@ -251,6 +251,76 @@ def test_batched_bit_exact_vs_loop_sharded(n_devices):
     assert out.count("BOK") == 6
 
 
+AUTO_BODY = """
+import dataclasses
+import jax, numpy as np
+from repro.core import executor
+from repro.core.grouping import group_rows
+from repro.core.spgemm import spgemm
+from repro.core.ref import spgemm_dense
+from repro.launch.mesh import make_spgemm_mesh
+from repro.sparse.formats import csr_from_dense, csr_to_dense
+
+n_dev = {n_devices}
+assert len(jax.devices()) == n_dev, jax.devices()
+rng = np.random.default_rng(2)
+# A spans three Table-I groups: single-nnz rows (group 0), 0.25-density
+# rows (group 1), full rows (group 2) — so the forced-mixed assignment
+# really dispatches different engines side by side.
+xa = np.zeros((64, 48), np.float32)
+for i in range(24):
+    xa[i, rng.integers(0, 48)] = float(rng.integers(1, 5))
+mask = rng.random((24, 48)) < 0.25
+xa[24:48] = np.where(mask, rng.integers(-4, 5, (24, 48)), 0.0)
+xa[48:] = rng.integers(1, 5, (16, 48))
+a = csr_from_dense(xa)
+xb = np.where(rng.random((48, 52)) < 0.25,
+              rng.integers(-4, 5, (48, 52)), 0.0).astype(np.float32)
+b = csr_from_dense(xb)
+oracle = np.asarray(spgemm_dense(a, b))
+mesh = make_spgemm_mesh(n_dev)
+tuner = executor.AutotuneCache()
+for gather in ("xla", "aia"):
+    for schedule in ("grouped", "natural"):
+        for pipeline in ("two_wave", "legacy"):
+            res = spgemm(a, b, engine="auto", gather=gather,
+                         schedule=schedule, pipeline=pipeline,
+                         mesh=mesh, autotune=tuner)
+            assert res.info["n_shards"] == n_dev
+            np.testing.assert_array_equal(
+                np.asarray(csr_to_dense(res.c)), oracle)
+            print("AOK", gather, schedule, pipeline, n_dev)
+# forced-mixed per-bin assignment under the mesh: different engines on
+# different populated bins, still bit-exact, winning over engine=
+plan = group_rows(a, b)
+populated = [g for g in range(4) if plan.group_sizes[g] > 0]
+assert len(populated) >= 3, plan.group_sizes
+names = executor.available_engines()
+ge = ["sort"] * 4
+for i, g in enumerate(populated):
+    ge[g] = names[i % len(names)]
+forced = dataclasses.replace(plan, group_engines=tuple(ge))
+for pipeline in ("two_wave", "legacy"):
+    res = spgemm(a, b, engine="auto", plan=forced, pipeline=pipeline,
+                 mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(csr_to_dense(res.c)), oracle)
+    alt = spgemm(a, b, engine="hash", plan=forced, pipeline=pipeline,
+                 mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(csr_to_dense(alt.c)), oracle)
+    print("MOK", pipeline, n_dev)
+"""
+
+
+@pytest.mark.parametrize("n_devices", (1, 2, 4))
+def test_auto_engine_bit_exact_sharded(n_devices):
+    """engine="auto" (in-band measured assignment AND a forced-mixed
+    plan.group_engines) under 1/2/4 forced host devices: bit-identical to
+    the dense oracle for every gather × schedule × pipeline combination."""
+    out = run_py(AUTO_BODY.format(n_devices=n_devices),
+                 n_devices=n_devices)
+    assert out.count("AOK") == 8 and out.count("MOK") == 2
+
+
 def test_plan_cache_reuses_shard_partition_under_mesh():
     """PlanCache + mesh: the second same-support call must hit the plan
     cache AND reuse the memoized work-item partition (shard assignment)."""
