@@ -1,0 +1,229 @@
+"""CI gates over benchmark-smoke artifacts — the tested replacement for
+the workflow's former inline assert heredocs.
+
+Each contract is one flag backed by one pure check function that takes the
+parsed artifact and returns a list of failure strings (empty = pass), so
+the gating logic itself is unit-testable (``tests/test_benchmarks.py``)
+instead of living untested inside ``ci.yml``:
+
+* ``--plan-hits`` — the amortized path recorded PlanCache hits.
+* ``--batched-beats-looped`` — the batched executor beat the per-matrix
+  loop (``ci_batched_sort`` < ``ci_batched_loop_sort``).
+* ``--sync-budget`` — two-wave contract: the pipelined probe paid at most
+  one blocking allocate sync, the legacy probe more than one, and both
+  wall-time records are present.
+* ``--fused-zero-sync`` — the fused plan-sized probe paid ZERO blocking
+  syncs, with both fused records present.
+* ``--operand-gate`` — communication-avoiding B placement: the
+  ``operand_probe`` meta shows footprint bytes strictly below the
+  replicated bytes (and footprint rows strictly below the replicated row
+  count) on a multi-shard plan.
+* ``--autotune`` — engine="auto" within ``--auto-tolerance`` of the best
+  single engine, converged runs pure cache hits (zero re-measurement).
+* ``--pipelined-beats-legacy`` — the fused two-wave lane within
+  ``--pipeline-tolerance`` of legacy at medium scale.
+
+Usage (exactly what ``.github/workflows/ci.yml`` runs)::
+
+    python benchmarks/assert_ci.py BENCH_ci.json \
+        --plan-hits --batched-beats-looped --sync-budget \
+        --fused-zero-sync --operand-gate
+    python benchmarks/assert_ci.py BENCH_medium.json \
+        --autotune --pipelined-beats-legacy --operand-gate
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+
+def _records(doc: dict) -> Dict[str, float]:
+    return {r["name"]: r["us"] for r in doc.get("records", [])}
+
+
+def check_plan_hits(doc: dict) -> List[str]:
+    stats = doc.get("meta", {}).get("cache_stats", {})
+    if stats.get("plan_hits", 0) <= 0:
+        return [f"no plan-cache hits: {stats}"]
+    return []
+
+
+def check_batched_beats_looped(doc: dict,
+                               batched: str = "ci_batched_sort",
+                               looped: str = "ci_batched_loop_sort"
+                               ) -> List[str]:
+    rec = _records(doc)
+    missing = [n for n in (batched, looped) if n not in rec]
+    if missing:
+        return [f"batched-vs-looped records missing {missing}: {sorted(rec)}"]
+    if rec[batched] >= rec[looped]:
+        return [f"batched SpGEMM ({rec[batched]}us) did not beat the "
+                f"per-matrix loop ({rec[looped]}us)"]
+    return []
+
+
+def check_sync_budget(doc: dict) -> List[str]:
+    """Two-wave contract: at most one blocking allocate sync per wave on
+    the pipelined path, one per chunk (so >1) on the legacy path."""
+    probe = doc.get("meta", {}).get("pipeline_probe")
+    if probe is None:
+        return ["pipeline_probe meta missing"]
+    errs = []
+    if probe.get("host_syncs_pipelined", 99) > 1:
+        errs.append(f"pipelined path syncs per chunk, not per wave: {probe}")
+    if probe.get("host_syncs_legacy", 0) <= 1:
+        errs.append(f"legacy probe did not split into multiple chunks: "
+                    f"{probe}")
+    rec = _records(doc)
+    for name in ("ci_selfprod_pipelined", "ci_selfprod_legacy"):
+        if name not in rec:
+            errs.append(f"pipelined-vs-legacy record {name!r} missing: "
+                        f"{sorted(rec)}")
+    return errs
+
+
+def check_fused_zero_sync(doc: dict) -> List[str]:
+    """Fused contract: plan-derived sizing dispatches the whole call (all
+    chunks, device indptr, sharded epilogue) with ZERO blocking syncs."""
+    fused = doc.get("meta", {}).get("fused_probe")
+    if fused is None:
+        return ["fused_probe meta missing"]
+    errs = []
+    if fused.get("host_syncs_fused", 99) != 0:
+        errs.append(f"fused plan-sized path paid blocking syncs: {fused}")
+    rec = _records(doc)
+    for name in ("ci_selfprod_fused", "ci_selfprod_fused_hash"):
+        if name not in rec:
+            errs.append(f"fused record {name!r} missing: {sorted(rec)}")
+    return errs
+
+
+def check_operand_gate(doc: dict) -> List[str]:
+    """Communication-avoiding placement contract: on a multi-chunk
+    multi-shard plan, footprint-gathered B blocks place strictly fewer
+    bytes (and rows) than full replication."""
+    probe = doc.get("meta", {}).get("operand_probe")
+    if probe is None:
+        return ["operand_probe meta missing"]
+    errs = []
+    if probe.get("n_shards", 0) < 2:
+        errs.append(f"operand probe must run on >= 2 shards: {probe}")
+    rep = probe.get("bytes_replicated", 0)
+    fp = probe.get("bytes_footprint", 0)
+    if not (0 < fp < rep):
+        errs.append(f"footprint bytes ({fp}) not strictly below replicated "
+                    f"bytes ({rep}): {probe}")
+    rows_fp = probe.get("rows_footprint", 0)
+    rows_total = probe.get("rows_total", 0)
+    if not (0 < rows_fp < rows_total):
+        errs.append(f"footprint rows ({rows_fp}) not strictly below the "
+                    f"replicated row count ({rows_total}): {probe}")
+    return errs
+
+
+def check_autotune(doc: dict, tolerance: float = 1.5) -> List[str]:
+    rec = _records(doc)
+    engines = ("sort", "hash", "fused_hash")
+    needed = [f"medium_selfprod_{e}" for e in engines] + [
+        "medium_selfprod_auto"]
+    missing = [n for n in needed if n not in rec]
+    if missing:
+        return [f"autotune records missing {missing}: {sorted(rec)}"]
+    singles = {e: rec[f"medium_selfprod_{e}"] for e in engines}
+    best_engine = min(singles, key=singles.get)
+    best = singles[best_engine]
+    auto = rec["medium_selfprod_auto"]
+    errs = []
+    if auto > best * tolerance:
+        errs.append(f"engine='auto' ({auto}us) not within {tolerance}x of "
+                    f"best single engine {best_engine} ({best}us): {singles}")
+    probe = doc.get("meta", {}).get("autotune_probe")
+    if probe is None:
+        errs.append("autotune_probe meta missing")
+        return errs
+    if probe.get("autotune_hits_converged", 0) <= 0:
+        errs.append(f"converged auto runs recorded no autotune hits: {probe}")
+    if probe.get("autotune_misses_converged", 99) != 0:
+        errs.append(f"converged auto runs still measuring (misses > 0): "
+                    f"{probe}")
+    return errs
+
+
+def check_pipelined_beats_legacy(doc: dict,
+                                 tolerance: float = 1.1) -> List[str]:
+    rec = _records(doc)
+    names = ("medium_selfprod_pipelined", "medium_selfprod_legacy")
+    missing = [n for n in names if n not in rec]
+    if missing:
+        return [f"pipelined-vs-legacy records missing {missing}: "
+                f"{sorted(rec)}"]
+    pipelined, legacy = rec[names[0]], rec[names[1]]
+    if pipelined > legacy * tolerance:
+        return [f"fused two-wave ({pipelined}us) lost to legacy "
+                f"({legacy}us) beyond {tolerance}x at medium scale"]
+    return []
+
+
+CHECKS = {
+    "plan_hits": check_plan_hits,
+    "batched_beats_looped": check_batched_beats_looped,
+    "sync_budget": check_sync_budget,
+    "fused_zero_sync": check_fused_zero_sync,
+    "operand_gate": check_operand_gate,
+    "autotune": check_autotune,
+    "pipelined_beats_legacy": check_pipelined_beats_legacy,
+}
+
+
+def run_checks(doc: dict, names: List[str], auto_tolerance: float = 1.5,
+               pipeline_tolerance: float = 1.1) -> List[str]:
+    """Run the named checks over one parsed artifact; returns every failure
+    (prefixed with its check name) instead of stopping at the first."""
+    failures = []
+    for name in names:
+        if name == "autotune":
+            errs = check_autotune(doc, tolerance=auto_tolerance)
+        elif name == "pipelined_beats_legacy":
+            errs = check_pipelined_beats_legacy(
+                doc, tolerance=pipeline_tolerance)
+        else:
+            errs = CHECKS[name](doc)
+        failures.extend(f"[{name}] {e}" for e in errs)
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifact", help="benchmark JSON artifact to gate")
+    ap.add_argument("--plan-hits", action="store_true")
+    ap.add_argument("--batched-beats-looped", action="store_true")
+    ap.add_argument("--sync-budget", action="store_true")
+    ap.add_argument("--fused-zero-sync", action="store_true")
+    ap.add_argument("--operand-gate", action="store_true")
+    ap.add_argument("--autotune", action="store_true")
+    ap.add_argument("--pipelined-beats-legacy", action="store_true")
+    ap.add_argument("--auto-tolerance", type=float, default=1.5,
+                    help="engine='auto' vs best-single-engine ratio bound")
+    ap.add_argument("--pipeline-tolerance", type=float, default=1.1,
+                    help="fused two-wave vs legacy ratio bound")
+    args = ap.parse_args(argv)
+
+    names = [n for n in CHECKS if getattr(args, n)]
+    if not names:
+        ap.error("no checks selected; pass at least one contract flag")
+    with open(args.artifact) as f:
+        doc = json.load(f)
+    failures = run_checks(doc, names, auto_tolerance=args.auto_tolerance,
+                          pipeline_tolerance=args.pipeline_tolerance)
+    if failures:
+        for f in failures:
+            print(f"FAIL {f}", file=sys.stderr)
+        return 1
+    print(f"{args.artifact}: {len(names)} contracts OK ({', '.join(names)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

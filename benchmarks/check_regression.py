@@ -31,11 +31,17 @@ without failing, so landing a new bench record doesn't require a lockstep
 baseline commit.  ``--require-all`` turns both warnings into failures —
 used on main, where the baseline is expected to be regenerated in the
 same commit that changes the record set.
+
+When ``$GITHUB_STEP_SUMMARY`` is set (every GitHub Actions step), the
+per-record comparison is also appended there as a markdown table, so the
+bench-smoke trend is readable from the run's Summary page without
+downloading artifacts.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -72,6 +78,43 @@ def record_drift(current: dict, baseline: dict) -> tuple:
     new = sorted(n for n in current if n not in baseline)
     missing = sorted(n for n in baseline if n not in current)
     return new, missing
+
+
+def write_step_summary(current: dict, baseline: dict, shared: list,
+                       regressions: list, new: list, missing: list,
+                       max_ratio: float, min_us: float,
+                       path: str) -> None:
+    """Append the per-record comparison as a markdown table to ``path``
+    (the ``$GITHUB_STEP_SUMMARY`` file), so the bench trend is readable
+    from the Actions Summary page without downloading artifacts."""
+    regressed = {name for name, _, _, _ in regressions}
+    lines = ["### Benchmark regression gate", "",
+             "| record | baseline µs | current µs | ratio | |",
+             "|---|---:|---:|---:|---|"]
+    for name in sorted(shared):
+        cur, base = current[name]["us"], baseline[name]["us"]
+        ratio = cur / base
+        if name in regressed:
+            note = f"❌ > {max_ratio:.1f}x"
+        elif cur < min_us and base < min_us:
+            note = "under noise floor, ungated"
+        else:
+            note = "✅"
+        lines.append(f"| {name} | {base:.0f} | {cur:.0f} | {ratio:.2f}x "
+                     f"| {note} |")
+    for name in new:
+        lines.append(f"| {name} | — | {current[name]['us']:.0f} | — "
+                     "| ⚠️ no baseline |")
+    for name in missing:
+        lines.append(f"| {name} | {baseline[name]['us']:.0f} | — | — "
+                     "| ⚠️ missing from run |")
+    verdict = (f"**FAIL** — {len(regressions)} record(s) beyond "
+               f"{max_ratio:.1f}x" if regressions
+               else f"**OK** — {len(shared)} record(s) within "
+                    f"{max_ratio:.1f}x of baseline")
+    lines += ["", verdict, ""]
+    with open(path, "a") as f:
+        f.write("\n".join(lines))
 
 
 def main() -> int:
@@ -126,6 +169,11 @@ def main() -> int:
 
     regressions = compare(current, baseline, args.max_ratio,
                           min_us=args.min_us)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        write_step_summary(current, baseline, shared, regressions, new,
+                           missing, args.max_ratio, args.min_us,
+                           summary_path)
     for name in shared:
         ratio = current[name]["us"] / baseline[name]["us"]
         floor = (" [under --min-us floor, ungated]"

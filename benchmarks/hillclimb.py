@@ -41,6 +41,23 @@ LOG = "results/perf_log.json"
 AUTOTUNE_LOG = "results/autotune_log.json"
 
 
+def append_log(path: str, record: dict) -> list:
+    """Append ``record`` to the JSON list at ``path`` and return the full
+    log.  Creates the parent directory on first write — a fresh checkout
+    has no ``results/``, and a bare filename (empty dirname) must not trip
+    ``makedirs``."""
+    log = []
+    if os.path.exists(path):
+        log = json.load(open(path))
+    log.append(record)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(log, f, indent=1)
+    return log
+
+
 def parse_override(kv: str):
     k, v = kv.split("=", 1)
     for cast in (int, float):
@@ -129,13 +146,7 @@ def _spgemm_bins_main(args) -> None:
                                  reps=args.reps)
     record.update(n=n, density=args.density, row_chunk=args.row_chunk,
                   note=args.note)
-    log = []
-    if os.path.exists(AUTOTUNE_LOG):
-        log = json.load(open(AUTOTUNE_LOG))
-    log.append(record)
-    os.makedirs(os.path.dirname(AUTOTUNE_LOG), exist_ok=True)
-    with open(AUTOTUNE_LOG, "w") as f:
-        json.dump(log, f, indent=1)
+    append_log(AUTOTUNE_LOG, record)
     print(json.dumps(record, indent=1))
 
 
@@ -225,13 +236,7 @@ def main():
         "bytes_per_device": rec["bytes_accessed_per_device"],
         "collective_bytes": rec["collective_bytes"],
     }
-    log = []
-    if os.path.exists(LOG):
-        log = json.load(open(LOG))
-    log.append(entry)
-    os.makedirs("results", exist_ok=True)
-    with open(LOG, "w") as f:
-        json.dump(log, f, indent=1)
+    append_log(LOG, entry)
     print(json.dumps(entry, indent=1))
 
 

@@ -32,6 +32,13 @@ multi-chunk probe, and writes a ``fused_probe`` into the JSON meta whose
 ``host_syncs_fused`` the workflow gates at **zero** — the plan-derived
 sizing contract.  ``--sizing`` switches the sizing policy for the full
 suite.
+
+Operand placement: under ``--devices >= 2`` both smoke tiers append an
+``operand_probe`` to the JSON meta — a banded-graph self-product run under
+``operands="replicate"`` then ``operands="footprint"``, recording the
+B-side bytes/rows actually placed on shard devices in each mode so CI can
+gate footprint bytes strictly below replicated bytes from the artifact
+alone (``benchmarks/assert_ci.py --operand-gate``).
 """
 from __future__ import annotations
 
@@ -52,6 +59,11 @@ FUSED_PROBE: dict = {}
 # hit/miss deltas (the no-re-measurement contract) + the chosen per-bin
 # assignment, so CI can gate the autotuner from the artifact alone.
 AUTOTUNE_PROBE: dict = {}
+# Filled by the communication-volume probe (multi-device tiers only):
+# bytes/rows of B-side ELL buffers placed on shard devices under full
+# replication vs footprint-gathered blocks, so CI can gate the
+# communication-avoiding placement saving from the artifact alone.
+OPERAND_PROBE: dict = {}
 
 
 def _emit(name, us, derived):
@@ -66,6 +78,53 @@ def _make_mesh(n_devices: int):
     from repro.launch.mesh import make_spgemm_mesh
 
     return make_spgemm_mesh(n_devices)
+
+
+def _operand_probe(mesh, row_chunk: int = 64) -> None:
+    """Comm-volume probe (multi-device tiers only): one banded-graph
+    self-product under ``operands="replicate"`` then ``"footprint"``,
+    recording the B-placement byte/row deltas from ``cache_stats()``.
+
+    A banded matrix keeps each shard's A-support inside a partial row band
+    of B, so footprint blocks are genuinely smaller than replicas — the
+    uniform smoke graphs have near-full footprints and would show no
+    saving.  Deltas (not absolute counters) so the probe composes with the
+    smoke records that already ran in this process; the banded pattern is
+    fresh, so both runs are guaranteed operand-cache misses and the
+    placement counters actually move."""
+    if mesh is None or mesh.devices.size < 2:
+        return
+    import numpy as np
+    from repro.core import executor
+    from repro.core.spgemm import spgemm
+    from repro.sparse.formats import csr_from_dense
+
+    n, w = 256, 8
+    rng = np.random.default_rng(7)
+    dense = np.zeros((n, n), np.float32)
+    for i in range(n):
+        lo, hi = max(0, i - w), min(n, i + w + 1)
+        dense[i, lo:hi] = rng.integers(1, 5, hi - lo)
+    band = csr_from_dense(dense)
+
+    keys = ("operand_bytes_placed", "operand_rows_footprint",
+            "operand_rows_total")
+    deltas = {}
+    n_shards = 0
+    for mode in ("replicate", "footprint"):
+        s0 = executor.cache_stats()
+        res = spgemm(band, band, mesh=mesh, row_chunk=row_chunk,
+                     operands=mode)
+        s1 = executor.cache_stats()
+        deltas[mode] = {k: s1[k] - s0[k] for k in keys}
+        n_shards = res.info["n_shards"]
+    OPERAND_PROBE.update(
+        n_shards=n_shards,
+        bytes_replicated=deltas["replicate"]["operand_bytes_placed"],
+        bytes_footprint=deltas["footprint"]["operand_bytes_placed"],
+        rows_footprint=deltas["footprint"]["operand_rows_footprint"],
+        rows_total=deltas["footprint"]["operand_rows_total"],
+    )
 
 
 def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
@@ -219,6 +278,8 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
           f"clusters={len(np.unique(r.clusters))};"
           f"plan_hits={r.plan_cache_hits}")
 
+    _operand_probe(mesh)
+
 
 def medium_smoke(mesh, pipeline: str = "two_wave",
                  sizing: str = "auto") -> None:
@@ -314,6 +375,8 @@ def medium_smoke(mesh, pipeline: str = "two_wave",
     _emit("medium_selfprod_auto", best * 1e6,
           f"nnz_c={res.info['nnz_c']};shards={res.info['n_shards']};"
           f"hits={tuner.hits - hits0};misses={tuner.misses - misses0}")
+
+    _operand_probe(mesh)
 
 
 def main() -> None:
@@ -494,6 +557,8 @@ def _write_json(path: str, args) -> None:
         meta["fused_probe"] = dict(FUSED_PROBE)
     if AUTOTUNE_PROBE:
         meta["autotune_probe"] = dict(AUTOTUNE_PROBE)
+    if OPERAND_PROBE:
+        meta["operand_probe"] = dict(OPERAND_PROBE)
     with open(path, "w") as f:
         json.dump({"meta": meta, "records": RECORDS}, f, indent=2)
     print(f"wrote {len(RECORDS)} records to {path}", file=sys.stderr)

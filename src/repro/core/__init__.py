@@ -17,7 +17,7 @@ from repro.core.grouping import group_rows, GroupPlan, TABLE_I
 from repro.core.executor import (
     Engine, OperandCache, PlanCache, available_engines, cache_stats,
     chunk_capacity_bounds, clear_program_cache, execute_plan, get_engine,
-    register_engine, resolve_gather, resolve_sizing,
+    register_engine, resolve_gather, resolve_operands, resolve_sizing,
 )
 from repro.core.spgemm import spgemm, spgemm_info, SpGEMMResult
 from repro.core.spgemm_bsr import bsr_spgemm_dense_rhs
@@ -26,7 +26,7 @@ __all__ = [
     "intermediate_products", "ip_histogram",
     "group_rows", "GroupPlan", "TABLE_I",
     "Engine", "register_engine", "get_engine", "available_engines",
-    "execute_plan", "resolve_gather", "resolve_sizing",
+    "execute_plan", "resolve_gather", "resolve_operands", "resolve_sizing",
     "chunk_capacity_bounds", "cache_stats", "clear_program_cache",
     "OperandCache", "PlanCache",
     "spgemm", "spgemm_info", "SpGEMMResult",

@@ -160,14 +160,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import phases
-from repro.core.grouping import GroupPlan, group_rows
-from repro.launch.sharding import merge_device, replicate_to, shard_devices
+from repro.core.grouping import GroupPlan, group_rows, support_footprint
+from repro.launch.sharding import (
+    merge_device, place_operand_block, replicate_to, shard_devices)
 from repro.sparse.formats import CSR, ELL, csr_to_ell
 
 Gather = Literal["auto", "xla", "aia"]
 Schedule = Literal["grouped", "natural"]
 Pipeline = Literal["two_wave", "legacy"]
 Sizing = Literal["auto", "planned", "measured"]
+Operands = Literal["auto", "footprint", "replicate"]
+
+# A shard whose B-row footprint covers at least this fraction of B's rows
+# takes the full-replication fast path under ``operands="auto"``: the
+# sub-ELL slice + remap would save little and costs an extra indirection.
+FOOTPRINT_THRESHOLD = 0.7
+
+
+def resolve_operands(operands: Operands) -> str:
+    """Validate the ``operands=`` placement policy.
+
+    ``"auto"`` (default) places footprint-gathered B blocks on shards whose
+    footprint stays under ``FOOTPRINT_THRESHOLD`` of B's rows (full replicas
+    elsewhere, and always on a single shard); ``"footprint"`` forces the
+    block path on every shard; ``"replicate"`` forces the pre-footprint
+    full replication (the A/B baseline the comm-volume probes diff against).
+    """
+    if operands not in ("auto", "footprint", "replicate"):
+        raise ValueError(
+            f"unknown operands policy {operands!r}; valid choices: "
+            "'auto', 'footprint', 'replicate'")
+    return operands
 
 # Rows per program dispatch are padded to a multiple of this so repeated
 # calls with slightly different group sizes reuse compiled programs.
@@ -472,9 +495,17 @@ _PLAN_STATS = {"plan_hits": 0, "plan_misses": 0}
 # pays exactly one per execute_plan call (the coalesced allocate sync); the
 # legacy pipeline pays one per group-chunk.  CI gates on this.
 _SYNC_STATS = {"host_sync_count": 0}
-# OperandCache lookups: a hit means the B-side replicated ELL buffers were
-# served without any re-replication (zero device transfers).
-_OPERAND_STATS = {"operand_hits": 0, "operand_misses": 0}
+# OperandCache lookups: a hit means the B-side placed ELL buffers were
+# served without any re-placement (zero device transfers).  The comm-volume
+# counters accumulate at *placement* time (cache misses only):
+# ``operand_bytes_placed`` — bytes of B-side buffers (indices + values +
+# remap) actually shipped to shard devices; ``operand_rows_footprint`` —
+# B rows placed, summed over shards; ``operand_rows_total`` — what full
+# replication would have placed (n_shards × n_rows(B)).  CI diffs a
+# replicated run against a footprint run and gates on the saving.
+_OPERAND_STATS = {"operand_hits": 0, "operand_misses": 0,
+                  "operand_bytes_placed": 0, "operand_rows_footprint": 0,
+                  "operand_rows_total": 0}
 # AutotuneCache lookups for engine="auto": a hit serves a fully-measured
 # per-bin assignment with zero re-measurement; a miss covers both the first
 # sighting of a (pattern, backend, bin-signature) key and every incremental
@@ -486,8 +517,10 @@ def cache_stats() -> Dict[str, int]:
     """Global cache counters: jitted-program ``hits``/``misses``, plan-cache
     ``plan_hits``/``plan_misses`` (every ``PlanCache`` instance folds its
     lookups into the same counters), the pipeline's blocking
-    ``host_sync_count``, the B-operand replication cache's
-    ``operand_hits``/``operand_misses``, and the per-bin engine autotuner's
+    ``host_sync_count``, the B-operand placement cache's
+    ``operand_hits``/``operand_misses`` plus its comm-volume counters
+    (``operand_bytes_placed``, ``operand_rows_footprint``,
+    ``operand_rows_total``), and the per-bin engine autotuner's
     ``autotune_hits``/``autotune_misses``."""
     return {**_CACHE_STATS, **_PLAN_STATS, **_SYNC_STATS, **_OPERAND_STATS,
             **_AUTOTUNE_STATS}
@@ -496,6 +529,7 @@ def cache_stats() -> Dict[str, int]:
 def clear_program_cache() -> None:
     _PROGRAM_CACHE.clear()
     _PARTITION_CACHE.clear()
+    _FOOTPRINT_CACHE.clear()
     _OPERAND_CACHE.clear()
     _AUTOTUNE_CACHE.clear()
     _CACHE_STATS["hits"] = 0
@@ -503,8 +537,8 @@ def clear_program_cache() -> None:
     _PLAN_STATS["plan_hits"] = 0
     _PLAN_STATS["plan_misses"] = 0
     _SYNC_STATS["host_sync_count"] = 0
-    _OPERAND_STATS["operand_hits"] = 0
-    _OPERAND_STATS["operand_misses"] = 0
+    for k in _OPERAND_STATS:
+        _OPERAND_STATS[k] = 0
     _AUTOTUNE_STATS["autotune_hits"] = 0
     _AUTOTUNE_STATS["autotune_misses"] = 0
 
@@ -589,27 +623,64 @@ class PlanCache:
 
 @dataclasses.dataclass
 class _OperandEntry:
-    """Cached B operands: the ELL conversion plus its per-shard replicas.
+    """Cached B operands: the ELL conversion plus its per-shard placements.
 
     ``source`` pins the origin CSR arrays so their ``id()``s (the cache key)
     cannot be recycled while the entry is alive — jax arrays are immutable,
     so identical ids imply identical contents.
+
+    Each shard holds ``(b_idx, b_val, remap)``: the full replicated ELL with
+    ``remap=None``, or a footprint-gathered sub-ELL (only the B rows the
+    shard's work items touch) with the global→local row ``remap`` the
+    executor threads into that shard's gather programs.  ``footprints``
+    keeps the per-shard row selections (``None`` = full replica) so the
+    batched lane can slice fresh per-member value planes the same way.
     """
 
     source: tuple
     b_ell: ELL
-    shards: List[Tuple[jax.Array, jax.Array]]  # per-device (b_idx, b_val)
+    shards: List[tuple]  # per-device (b_idx, b_val, remap-or-None)
+    footprints: Optional[List[Optional[np.ndarray]]] = None
+
+
+def _footprint_fingerprint(footprints) -> Optional[str]:
+    """Content digest of a per-shard footprint selection (``None`` = full
+    replication everywhere) — the OperandCache key component that keeps
+    blocks built for one work partition from serving another."""
+    if footprints is None:
+        return None
+    h = hashlib.blake2b(digest_size=8)
+    for fp in footprints:
+        if fp is None:
+            h.update(b"\xff")
+        else:
+            fp = np.asarray(fp, np.int64)
+            h.update(np.int64(fp.size).tobytes())
+            h.update(fp.tobytes())
+    return h.hexdigest()
 
 
 class OperandCache:
-    """(B identity, kb_cap, devices)-keyed cache of replicated ELL buffers.
+    """(B identity, kb_cap, devices, footprint)-keyed cache of placed ELL
+    buffers.
 
     Iterative (MCL with a fixed B, the sampling chain's shared adjacency)
     and batched workloads re-multiply against the *same* B object call after
-    call; previously every call re-ran ``csr_to_ell`` and re-replicated the
+    call; previously every call re-ran ``csr_to_ell`` and re-placed the
     result onto every shard device.  A hit serves both from the cache —
     zero conversions, zero device transfers.  Lookups fold into the
-    module-level ``cache_stats()`` as ``operand_hits``/``operand_misses``.
+    module-level ``cache_stats()`` as ``operand_hits``/``operand_misses``,
+    and every *build* accumulates the comm-volume counters
+    (``operand_bytes_placed``/``operand_rows_footprint``/
+    ``operand_rows_total``) — placement cost is paid exactly where it is
+    counted.
+
+    ``footprints`` (per-shard B-row selections from the plan's A-support,
+    ``None`` entries = full replica) switches a shard from replication to a
+    footprint-gathered block: only the selected ELL rows travel to the
+    device, plus the global→local ``remap``.  The key carries a content
+    fingerprint of the selection, so the same B served under two partitions
+    (different meshes, row_chunks) gets distinct block sets.
 
     Identity keying is only sound for immutable arrays, so CSRs backed by
     mutable buffers (plain NumPy arrays) are *never cached* — they take the
@@ -628,31 +699,49 @@ class OperandCache:
         self._entries.clear()
 
     @staticmethod
-    def _build(b: CSR, kb_cap: int, devices) -> _OperandEntry:
+    def _build(b: CSR, kb_cap: int, devices,
+               footprints=None) -> _OperandEntry:
         b_ell = csr_to_ell(b, kb_cap)
+        n_rows = int(b_ell.indices.shape[0])
+        shards = []
+        for s, dev in enumerate(devices):
+            fp = None if footprints is None else footprints[s]
+            if fp is None:
+                shard = (replicate_to(b_ell.indices, dev),
+                         replicate_to(b_ell.data, dev), None)
+                rows_placed = n_rows
+            else:
+                shard = place_operand_block(b_ell.indices, b_ell.data,
+                                            fp, dev)
+                rows_placed = len(fp)
+            _OPERAND_STATS["operand_bytes_placed"] += sum(
+                int(x.nbytes) for x in shard if x is not None)
+            _OPERAND_STATS["operand_rows_footprint"] += rows_placed
+            _OPERAND_STATS["operand_rows_total"] += n_rows
+            shards.append(shard)
         return _OperandEntry(
             source=(b.indptr, b.indices, b.data),
             b_ell=b_ell,
-            shards=[
-                (replicate_to(b_ell.indices, dev),
-                 replicate_to(b_ell.data, dev))
-                for dev in devices
-            ],
+            shards=shards,
+            footprints=None if footprints is None else list(footprints),
         )
 
-    def b_operands(self, b: CSR, kb_cap: int, devices) -> _OperandEntry:
+    def b_operands(self, b: CSR, kb_cap: int, devices,
+                   footprints=None) -> _OperandEntry:
         if not all(isinstance(x, jax.Array)
                    for x in (b.indptr, b.indices, b.data)):
             _OPERAND_STATS["operand_misses"] += 1
-            return self._build(b, kb_cap, devices)  # mutable: never cache
+            return self._build(b, kb_cap, devices,
+                               footprints)  # mutable: never cache
         key = (
             id(b.indptr), id(b.indices), id(b.data), int(kb_cap),
             tuple(getattr(d, "id", None) for d in devices),
+            _footprint_fingerprint(footprints),
         )
         entry = self._entries.get(key)
         if entry is None:
             _OPERAND_STATS["operand_misses"] += 1
-            entry = self._build(b, kb_cap, devices)
+            entry = self._build(b, kb_cap, devices, footprints)
             self._entries[key] = entry
             while len(self._entries) > self.max_entries:
                 self._entries.popitem(last=False)
@@ -909,18 +998,27 @@ def _autotune_assignment(a, b, plan, gather, row_chunk, mesh, pipeline,
     return cache.assignment_for(autotune_key(a, b, plan), plan, measure)
 
 
-def _build_enumerate(a_cap: int, gather: str) -> Callable:
+def _build_enumerate(a_cap: int, gather: str,
+                     remapped: bool = False) -> Callable:
     """Compile the product-enumeration program: A-row gather → B-row gather
     (xla or AIA stream) → intermediate products.  Output stays on device and
     feeds both the allocation and accumulation programs — the gather runs
-    once per chunk, not once per phase."""
+    once per chunk, not once per phase.
+
+    ``remapped`` programs take the footprint block's global→local row map as
+    a trailing operand and translate A's column ids before the B gather
+    (``phases.remap_columns``) — the gather backends then index the compact
+    sub-ELL exactly as they would the full replica.  Keys are B *column*
+    ids, so the products are bit-identical either way."""
     gat = GATHERS[gather]
 
     @jax.jit
-    def program(a_indptr, a_indices, a_data, rows, b_idx, b_val):
+    def program(a_indptr, a_indices, a_data, rows, b_idx, b_val, remap=None):
         cols_a, vals_a = phases.gather_group_rows(
             a_indptr, a_indices, a_data, rows, a_cap
         )
+        if remapped:
+            cols_a = phases.remap_columns(cols_a, remap)
         bi, bv = gat(b_idx, b_val, cols_a)
         return phases.combine_products(cols_a, vals_a, bi, bv)
 
@@ -938,18 +1036,22 @@ def _build_accumulate(table_cap: int, out_cap: int, engine: str) -> Callable:
         lambda keys, vals: eng.accumulate(keys, vals, table_cap, out_cap))
 
 
-def _build_enumerate_batched(a_cap: int, gather: str) -> Callable:
+def _build_enumerate_batched(a_cap: int, gather: str,
+                             remapped: bool = False) -> Callable:
     """Batched enumerate: structure (keys) computed once, value streams
     carry the leading batch axis.  Shares the allocation program with the
     unbatched path — uniqueCount depends only on keys, so one host sync
-    sizes the whole batch."""
+    sizes the whole batch.  ``remapped`` as in ``_build_enumerate``."""
     gat = BATCHED_GATHERS[gather]
 
     @jax.jit
-    def program(a_indptr, a_indices, a_data_b, rows, b_idx, b_val_b):
+    def program(a_indptr, a_indices, a_data_b, rows, b_idx, b_val_b,
+                remap=None):
         cols_a, vals_a_b = phases.gather_group_rows_batched(
             a_indptr, a_indices, a_data_b, rows, a_cap
         )
+        if remapped:
+            cols_a = phases.remap_columns(cols_a, remap)
         bi, bv_b = gat(b_idx, b_val_b, cols_a)
         return phases.combine_products_batched(cols_a, vals_a_b, bi, bv_b)
 
@@ -967,7 +1069,7 @@ def _build_accumulate_batched(table_cap: int, out_cap: int,
 
 
 def _build_fused(a_cap: int, gather: str, table_cap: int, out_cap: int,
-                 kernel: str) -> Callable:
+                 kernel: str, remapped: bool = False) -> Callable:
     """Compile the fused single-pass program: A-row gather → B-row gather
     (xla or the AIA stream, feeding the table directly) → product
     formation → linear-probe insertion → sorted trim, all one jitted
@@ -977,10 +1079,12 @@ def _build_fused(a_cap: int, gather: str, table_cap: int, out_cap: int,
     gat = GATHERS[gather]
 
     @jax.jit
-    def program(a_indptr, a_indices, a_data, rows, b_idx, b_val):
+    def program(a_indptr, a_indices, a_data, rows, b_idx, b_val, remap=None):
         cols_a, vals_a = phases.gather_group_rows(
             a_indptr, a_indices, a_data, rows, a_cap
         )
+        if remapped:
+            cols_a = phases.remap_columns(cols_a, remap)
         bi, bv = gat(b_idx, b_val, cols_a)
         keys, vals = phases.combine_products(cols_a, vals_a, bi, bv)
         return phases.fused_hash_sorted(keys, vals, table_cap, out_cap,
@@ -990,7 +1094,7 @@ def _build_fused(a_cap: int, gather: str, table_cap: int, out_cap: int,
 
 
 def _build_fused_batched(a_cap: int, gather: str, table_cap: int,
-                         out_cap: int) -> Callable:
+                         out_cap: int, remapped: bool = False) -> Callable:
     """Batched fused program: the structural gather and key stream run
     once, the per-member value streams are vmapped through the single-pass
     insert (scan engine — the batch axis rides XLA's vmap, not the Pallas
@@ -998,10 +1102,13 @@ def _build_fused_batched(a_cap: int, gather: str, table_cap: int,
     gat = BATCHED_GATHERS[gather]
 
     @jax.jit
-    def program(a_indptr, a_indices, a_data_b, rows, b_idx, b_val_b):
+    def program(a_indptr, a_indices, a_data_b, rows, b_idx, b_val_b,
+                remap=None):
         cols_a, vals_a_b = phases.gather_group_rows_batched(
             a_indptr, a_indices, a_data_b, rows, a_cap
         )
+        if remapped:
+            cols_a = phases.remap_columns(cols_a, remap)
         bi, bv_b = gat(b_idx, b_val_b, cols_a)
         keys, vals_b = phases.combine_products_batched(
             cols_a, vals_a_b, bi, bv_b)
@@ -1192,6 +1299,49 @@ def partition_plan_cached(
     return items
 
 
+def shard_footprints(items: Sequence[WorkItem], a_indptr: np.ndarray,
+                     a_indices: np.ndarray,
+                     n_shards: int) -> List[np.ndarray]:
+    """Per-shard B-row footprints from the work items' A-support.
+
+    Shard ``s`` will gather exactly the B rows named by the column indices
+    of A restricted to the rows of its work items — the union is computed
+    on host from the same CSR arrays phase 1 already walked
+    (``grouping.support_footprint``).  A shard with no work (or only empty
+    rows) gets a single-row footprint ``[0]`` so its block keeps a valid
+    ELL shape; nothing ever gathers from it.
+    """
+    by_shard: List[list] = [[] for _ in range(n_shards)]
+    for item in items:
+        by_shard[item.shard].append(item.rows)
+    out = []
+    for rows in by_shard:
+        fp = support_footprint(
+            a_indptr, a_indices,
+            np.concatenate(rows) if rows else np.empty(0, np.int64))
+        out.append(fp if fp.size else np.zeros(1, np.int64))
+    return out
+
+
+_FOOTPRINT_CACHE: Dict[tuple, List[np.ndarray]] = {}
+
+
+def _shard_footprints_cached(plan: GroupPlan, items: Sequence[WorkItem],
+                             a: CSR, row_chunk: int, n_shards: int,
+                             group_engines) -> List[np.ndarray]:
+    """Memoized ``shard_footprints``, keyed like the partition cache: a
+    reused plan (same chunking, same shard count) reuses its footprints —
+    iterative workloads derive the B placement once, not per call."""
+    key = (id(plan), int(row_chunk), int(n_shards), group_engines)
+    fps = _FOOTPRINT_CACHE.get(key)
+    if fps is None:
+        fps = shard_footprints(items, np.asarray(a.indptr),
+                               np.asarray(a.indices), n_shards)
+        _FOOTPRINT_CACHE[key] = fps
+        weakref.finalize(plan, _FOOTPRINT_CACHE.pop, key, None)
+    return fps
+
+
 @dataclasses.dataclass
 class _ChunkOut:
     rows: np.ndarray      # (R,) original row ids
@@ -1213,15 +1363,23 @@ def _shard_a_operands(a_arrays: Sequence, devices) -> List[tuple]:
 
 def _setup_execution(a: CSR, b: CSR, plan: GroupPlan, engine: str,
                      gather: Gather, row_chunk: int, mesh,
-                     group_engines: Optional[Tuple[str, ...]] = None):
+                     group_engines: Optional[Tuple[str, ...]] = None,
+                     operands: Operands = "auto"):
     """Shared single-matrix/batched preamble: resolve knobs, derive the
-    exact capacities, and (memoized) partition the plan over the shards.
+    exact capacities, (memoized) partition the plan over the shards, and
+    resolve the per-shard B placement.
 
     When ``group_engines`` is set (``engine="auto"`` resolved, or a forced
     ``plan.group_engines``), every assigned engine is validated and the
     work items come back stamped per bin; the base ``engine`` may then be
-    the string ``"auto"`` and is never dispatched itself."""
+    the string ``"auto"`` and is never dispatched itself.
+
+    The returned ``footprints`` is the resolved ``operands=`` policy:
+    ``None`` for full replication on every shard, else one entry per shard
+    (row selection, or ``None`` for that shard's full-replica fast path).
+    """
     gather = resolve_gather(gather)
+    operands = resolve_operands(operands)
     if group_engines is not None:
         for name in group_engines:
             get_engine(name)  # validate the whole assignment early
@@ -1240,7 +1398,23 @@ def _setup_execution(a: CSR, b: CSR, plan: GroupPlan, engine: str,
     items = partition_plan_cached(plan, a_row_nnz, row_chunk,
                                   n_shards=len(devices),
                                   group_engines=group_engines)
-    return gather, kb_cap, ncol_cap, devices, items
+    footprints = None
+    n_shards = len(devices)
+    # "auto" only engages under real sharding (one shard's footprint is the
+    # whole support — there is no communication to avoid); "footprint"
+    # forces blocks everywhere, including single-device, for A/B tests.
+    if (operands == "footprint"
+            or (operands == "auto" and n_shards > 1)):
+        raw = _shard_footprints_cached(plan, items, a, row_chunk, n_shards,
+                                       group_engines)
+        limit = FOOTPRINT_THRESHOLD * max(b.n_rows, 1)
+        footprints = [
+            fp if operands == "footprint" or len(fp) < limit else None
+            for fp in raw
+        ]
+        if all(fp is None for fp in footprints):
+            footprints = None  # every shard took the replication fast path
+    return gather, kb_cap, ncol_cap, devices, items, footprints
 
 
 def _chunk_rows_padded(chunk: np.ndarray, dev):
@@ -1502,6 +1676,7 @@ def execute_plan(
     pipeline: Pipeline = "two_wave",
     sizing: Sizing = "auto",
     autotune: Optional[AutotuneCache] = None,
+    operands: Operands = "auto",
 ) -> Tuple[CSR, int]:
     """Run the compiled group pipeline; returns (C, nnz_C).
 
@@ -1544,6 +1719,16 @@ def execute_plan(
     call until converged.  Sizing then follows the per-bin rule: planned
     iff every non-empty bin's engine is fused, measured the moment any
     bin picks a non-fused engine.
+
+    ``operands`` selects the B-side placement: ``"auto"`` (default) ships
+    each shard only the footprint-gathered B block its work items'
+    A-support touches (full replica when the footprint covers ≥
+    ``FOOTPRINT_THRESHOLD`` of B's rows, and always on a single shard);
+    ``"footprint"`` forces the block path, ``"replicate"`` the blind full
+    replication.  All three are bit-identical — the remapped gathers read
+    the same B rows from shard-local indices — and the comm saving
+    surfaces in ``cache_stats()``'s ``operand_bytes_placed`` /
+    ``operand_rows_*`` counters.
     """
     if pipeline not in ("two_wave", "legacy"):
         raise ValueError(f"unknown pipeline {pipeline!r}")
@@ -1560,13 +1745,14 @@ def execute_plan(
         mode = "measured"
     else:
         mode = resolve_sizing(sizing, engine, plan, group_engines)
-    gather, kb_cap, ncol_cap, devices, items = _setup_execution(
+    gather, kb_cap, ncol_cap, devices, items, footprints = _setup_execution(
         a, b, plan, engine, gather, row_chunk, mesh,
-        group_engines=group_engines)
+        group_engines=group_engines, operands=operands)
     n = a.n_rows
     dtype = np.dtype(a.data.dtype)  # no host round-trip: dtype is metadata
     dt = dtype.str
-    b_entry = _OPERAND_CACHE.b_operands(b, kb_cap, devices)
+    b_entry = _OPERAND_CACHE.b_operands(b, kb_cap, devices,
+                                        footprints=footprints)
     a_ops = _shard_a_operands((a.indptr, a.indices, a.data), devices)
     shape = (a.n_rows, b.n_cols)
     if pipeline == "legacy":
@@ -1584,12 +1770,13 @@ def execute_plan(
     for item in items:
         dev = devices[item.shard]
         a_ip, a_ix, a_dt = a_ops[item.shard]
-        b_ix, b_vl = b_entry.shards[item.shard]
+        b_ix, b_vl, b_rm = b_entry.shards[item.shard]
+        rmk = b_rm is not None
         padded, rows_j = _chunk_rows_padded(item.rows, dev)
         enum = _get_program(
-            "enumerate", (padded, item.a_cap, kb_cap, gather, dt),
-            item.a_cap, gather)
-        keys, vals = enum(a_ip, a_ix, a_dt, rows_j, b_ix, b_vl)
+            "enumerate", (padded, item.a_cap, kb_cap, gather, dt, rmk),
+            item.a_cap, gather, rmk)
+        keys, vals = enum(a_ip, a_ix, a_dt, rows_j, b_ix, b_vl, b_rm)
         pend.append((item, padded, keys, vals,
                      _alloc_counts(keys, padded, item.table_cap,
                                    item.engine or engine)))
@@ -1650,7 +1837,8 @@ def _run_planned(items, devices, a_ops, b_ops, plan, n, dtype, dt, kb_cap,
         eng = get_engine(eng_name)
         dev = devices[item.shard]
         a_arrs = a_ops[item.shard]
-        b_ix, b_vl = b_ops[item.shard]
+        b_ix, b_vl, b_rm = b_ops[item.shard]
+        rmk = b_rm is not None
         padded, rows_j = _chunk_rows_padded(item.rows, dev)
         out_cap = _planned_out_cap(max_u, item.table_cap, ncol_cap)
         if eng.fused:
@@ -1658,21 +1846,21 @@ def _run_planned(items, devices, a_ops, b_ops, plan, n, dtype, dt, kb_cap,
                 prog = _get_program(
                     "fused",
                     (padded, item.a_cap, kb_cap, item.table_cap, out_cap,
-                     gather, dt, kernel),
-                    item.a_cap, gather, item.table_cap, out_cap, kernel)
+                     gather, dt, kernel, rmk),
+                    item.a_cap, gather, item.table_cap, out_cap, kernel, rmk)
             else:
                 prog = _get_program(
                     "bfused",
                     (batch, padded, item.a_cap, kb_cap, item.table_cap,
-                     out_cap, gather, dt),
-                    item.a_cap, gather, item.table_cap, out_cap)
-            cols_r, vals_r, counts_r = prog(*a_arrs, rows_j, b_ix, b_vl)
+                     out_cap, gather, dt, rmk),
+                    item.a_cap, gather, item.table_cap, out_cap, rmk)
+            cols_r, vals_r, counts_r = prog(*a_arrs, rows_j, b_ix, b_vl, b_rm)
         else:
             enum = _get_program(
                 "enumerate" if batch is None else "benumerate",
-                bkey + (padded, item.a_cap, kb_cap, gather, dt),
-                item.a_cap, gather)
-            keys, vals = enum(*a_arrs, rows_j, b_ix, b_vl)
+                bkey + (padded, item.a_cap, kb_cap, gather, dt, rmk),
+                item.a_cap, gather, rmk)
+            keys, vals = enum(*a_arrs, rows_j, b_ix, b_vl, b_rm)
             accum = _get_program(
                 "accumulate" if batch is None else "baccumulate",
                 bkey + (padded, keys.shape[1], item.table_cap, out_cap,
@@ -1712,12 +1900,14 @@ def _execute_plan_legacy(items, devices, a_ops, b_entry, n, shape, dtype, dt,
         chunk = item.rows
         dev = devices[item.shard]
         a_ip, a_ix, a_dt = a_ops[item.shard]
-        b_ix, b_vl = b_entry.shards[item.shard]
+        b_ix, b_vl, b_rm = b_entry.shards[item.shard]
+        rmk = b_rm is not None
         a_cap, table_cap = item.a_cap, item.table_cap
         padded, rows_j = _chunk_rows_padded(chunk, dev)
-        enum = _get_program("enumerate", (padded, a_cap, kb_cap, gather, dt),
-                            a_cap, gather)
-        keys, vals = enum(a_ip, a_ix, a_dt, rows_j, b_ix, b_vl)
+        enum = _get_program(
+            "enumerate", (padded, a_cap, kb_cap, gather, dt, rmk),
+            a_cap, gather, rmk)
+        keys, vals = enum(a_ip, a_ix, a_dt, rows_j, b_ix, b_vl, b_rm)
         ip_cap = keys.shape[1]
         eng_name = item.engine or engine
         out_cap = _size_out_cap(keys, padded, table_cap, eng_name, ncol_cap)
@@ -1770,22 +1960,25 @@ class _BatchChunkOut:
 
 
 def _batched_operands(a: CSR, b: CSR, a_data_batch, b_data_batch, kb_cap: int,
-                      devices):
+                      devices, footprints=None):
     """Per-shard batched operand placement.  The B-side structural buffers
     (ELL indices + the shared value plane) come from the ``OperandCache``;
-    only per-call value stacks are replicated fresh."""
+    only per-call value stacks are placed fresh — sliced to each shard's
+    footprint rows when the entry carries footprint-gathered blocks."""
     a_data_batch = np.asarray(a_data_batch)
     if a_data_batch.ndim != 2:
         raise ValueError(
             f"a_data_batch must be (batch, capacity), got {a_data_batch.shape}")
     batch = a_data_batch.shape[0]
-    b_entry = _OPERAND_CACHE.b_operands(b, kb_cap, devices)
+    b_entry = _OPERAND_CACHE.b_operands(b, kb_cap, devices,
+                                        footprints=footprints)
     if b_data_batch is None:
-        # shared B values: broadcast each shard's cached replica in place
+        # shared B values: broadcast each shard's cached placement in place
         # (a broadcast of a device-resident array stays on that device)
         b_shards = [
-            (b_ix, jnp.broadcast_to(b_vl[None], (batch,) + tuple(b_vl.shape)))
-            for b_ix, b_vl in b_entry.shards
+            (b_ix, jnp.broadcast_to(b_vl[None], (batch,) + tuple(b_vl.shape)),
+             b_rm)
+            for b_ix, b_vl, b_rm in b_entry.shards
         ]
     else:
         b_data_batch = np.asarray(b_data_batch)
@@ -1797,10 +1990,13 @@ def _batched_operands(a: CSR, b: CSR, a_data_batch, b_data_batch, kb_cap: int,
         to_ell_data = jax.vmap(lambda d: csr_to_ell(
             CSR(b.indptr, b.indices, d, b.shape), kb_cap).data)
         b_val_b = to_ell_data(jnp.asarray(b_data_batch))
-        b_shards = [
-            (b_ix, replicate_to(b_val_b, dev))
-            for (b_ix, _), dev in zip(b_entry.shards, devices)
-        ]
+        entry_fps = b_entry.footprints or [None] * len(devices)
+        b_shards = []
+        for (b_ix, _, b_rm), fp, dev in zip(b_entry.shards, entry_fps,
+                                            devices):
+            vb = b_val_b if fp is None else jnp.take(
+                b_val_b, jnp.asarray(np.asarray(fp, np.int32)), axis=1)
+            b_shards.append((b_ix, replicate_to(vb, dev), b_rm))
     a_shards = _shard_a_operands(
         (a.indptr, a.indices, jnp.asarray(a_data_batch)), devices)
     return a_data_batch, batch, a_shards, b_shards
@@ -1819,6 +2015,7 @@ def execute_plan_batched(
     pipeline: Pipeline = "two_wave",
     sizing: Sizing = "auto",
     autotune: Optional[AutotuneCache] = None,
+    operands: Operands = "auto",
 ) -> Tuple[jax.Array, jax.Array, jax.Array, int]:
     """Run the compiled pipeline once for a whole batch of same-pattern
     operands; returns ``(indptr, indices, data_batch, nnz)``.
@@ -1848,6 +2045,11 @@ def execute_plan_batched(
     ``engine="auto"`` resolves a per-bin assignment exactly as in
     ``execute_plan`` (forced ``plan.group_engines`` wins; otherwise the
     ``AutotuneCache``), and the whole batch rides the one assignment.
+
+    ``operands`` mirrors ``execute_plan``: footprint-gathered B blocks per
+    shard under ``"auto"``/``"footprint"`` (per-member value planes are
+    sliced to the same footprint rows), full replication under
+    ``"replicate"`` — bit-identical either way.
     """
     if pipeline not in ("two_wave", "legacy"):
         raise ValueError(f"unknown pipeline {pipeline!r}")
@@ -1866,12 +2068,13 @@ def execute_plan_batched(
         mode = "measured"
     else:
         mode = resolve_sizing(sizing, engine, plan, group_engines)
-    gather, kb_cap, ncol_cap, devices, items = _setup_execution(
+    gather, kb_cap, ncol_cap, devices, items, footprints = _setup_execution(
         a, b, plan, engine, gather, row_chunk, mesh,
-        group_engines=group_engines)
+        group_engines=group_engines, operands=operands)
     n = a.n_rows
     a_data_batch, batch, a_shards, b_shards = _batched_operands(
-        a, b, a_data_batch, b_data_batch, kb_cap, devices)
+        a, b, a_data_batch, b_data_batch, kb_cap, devices,
+        footprints=footprints)
     dtype = a_data_batch.dtype
     dt = np.dtype(dtype).str
     if pipeline == "legacy":
@@ -1888,12 +2091,14 @@ def execute_plan_batched(
     for item in items:
         dev = devices[item.shard]
         a_ip, a_ix, a_db = a_shards[item.shard]
-        b_ix, b_vb = b_shards[item.shard]
+        b_ix, b_vb, b_rm = b_shards[item.shard]
+        rmk = b_rm is not None
         padded, rows_j = _chunk_rows_padded(item.rows, dev)
         benum = _get_program(
-            "benumerate", (batch, padded, item.a_cap, kb_cap, gather, dt),
-            item.a_cap, gather)
-        keys, vals_b = benum(a_ip, a_ix, a_db, rows_j, b_ix, b_vb)
+            "benumerate",
+            (batch, padded, item.a_cap, kb_cap, gather, dt, rmk),
+            item.a_cap, gather, rmk)
+        keys, vals_b = benum(a_ip, a_ix, a_db, rows_j, b_ix, b_vb, b_rm)
         pend.append((item, padded, keys, vals_b,
                      _alloc_counts(keys, padded, item.table_cap,
                                    item.engine or engine)))
@@ -1943,13 +2148,14 @@ def _execute_plan_batched_legacy(items, devices, a_shards, b_shards, n,
         chunk = item.rows
         dev = devices[item.shard]
         a_ip, a_ix, a_db = a_shards[item.shard]
-        b_ix, b_vb = b_shards[item.shard]
+        b_ix, b_vb, b_rm = b_shards[item.shard]
+        rmk = b_rm is not None
         a_cap, table_cap = item.a_cap, item.table_cap
         padded, rows_j = _chunk_rows_padded(chunk, dev)
         benum = _get_program(
-            "benumerate", (batch, padded, a_cap, kb_cap, gather, dt),
-            a_cap, gather)
-        keys, vals_b = benum(a_ip, a_ix, a_db, rows_j, b_ix, b_vb)
+            "benumerate", (batch, padded, a_cap, kb_cap, gather, dt, rmk),
+            a_cap, gather, rmk)
+        keys, vals_b = benum(a_ip, a_ix, a_db, rows_j, b_ix, b_vb, b_rm)
         ip_cap = keys.shape[1]
         eng_name = item.engine or engine
         out_cap = _size_out_cap(keys, padded, table_cap, eng_name, ncol_cap)

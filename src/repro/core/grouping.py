@@ -130,3 +130,32 @@ def group_rows(a: CSR, b: CSR, pad_quantum: int = 64) -> GroupPlan:
         total_ip=int(ip.sum()),
         row_ip=ip.astype(np.int64),
     )
+
+
+def support_footprint(indptr: np.ndarray, indices: np.ndarray,
+                      rows: np.ndarray) -> np.ndarray:
+    """Sorted unique column ids of A restricted to ``rows`` — i.e. the
+    B-row footprint of the work items that own those rows.
+
+    Phase 1 already walked A's structure to count intermediate products, so
+    the footprint is free host arithmetic on the same arrays: every product
+    of row ``r`` reads B row ``indices[slot]`` for slots in
+    ``[indptr[r], indptr[r+1])``, and nothing else.  The executor's
+    communication-avoiding operand placement unions these per shard to
+    decide which B rows must actually travel to that shard's device.
+    """
+    indptr = np.asarray(indptr, np.int64)
+    indices = np.asarray(indices)
+    rows = np.asarray(rows, np.int64)
+    if rows.size == 0:
+        return np.empty(0, np.int64)
+    starts = indptr[rows]
+    counts = indptr[rows + 1] - starts
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, np.int64)
+    # flat slot ids of every (row, nnz-slot) pair without per-row Python
+    offsets = np.zeros(len(counts), np.int64)
+    np.cumsum(counts[:-1], out=offsets[1:])
+    flat = np.repeat(starts - offsets, counts) + np.arange(total)
+    return np.unique(np.asarray(indices[flat], np.int64))

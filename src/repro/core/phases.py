@@ -85,6 +85,21 @@ def enumerate_products(cols_a, vals_a, b_idx, b_val):
     return combine_products(cols_a, vals_a, bi, bv)
 
 
+def remap_columns(cols, remap):
+    """Translate global A-column ids to block-local B-row ids.
+
+    ``remap`` is the footprint block's (n_rows(B),) int32 map — ``-1`` for
+    rows absent from the block.  Padding entries (``cols < 0``) stay ``-1``,
+    and a valid column that the block does not hold also maps to ``-1``, so
+    downstream masking (``combine_products``'s ``cols_a >= 0``) drops it
+    instead of gathering garbage — by construction a shard's own work items
+    never produce such a column, but the guarantee keeps the remapped
+    gather safe under any footprint.
+    """
+    safe = jnp.clip(cols, 0, remap.shape[0] - 1)
+    return jnp.where(cols >= 0, remap[safe], -1)
+
+
 def gather_group_rows(indptr, indices, data, rows, a_cap):
     """Gather the A entries of ``rows`` (padded with -1) into (R, a_cap)."""
     n_rows = indptr.shape[0] - 1

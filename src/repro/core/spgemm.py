@@ -86,6 +86,7 @@ def spgemm(
     pipeline: executor.Pipeline = "two_wave",
     sizing: executor.Sizing = "auto",
     autotune: Optional[executor.AutotuneCache] = None,
+    operands: executor.Operands = "auto",
 ) -> SpGEMMResult:
     """C = A @ B via the paper's multi-phase pipeline (plan-compiled).
 
@@ -120,6 +121,12 @@ def spgemm(
     ``executor.execute_plan`` directly for a fully non-blocking device
     handle); ``"auto"`` picks planned for fused engines (``"fused_hash"``)
     and measured otherwise.
+    ``operands`` selects the B-side placement under ``mesh=``: ``"auto"``
+    (default) ships each shard only the footprint-gathered B block its
+    work items' A-support touches (full replica when a shard's footprint
+    covers ≥ ~70% of B's rows); ``"footprint"``/``"replicate"`` force
+    either path — all bit-identical, with the comm volume surfaced in
+    ``executor.cache_stats()``.
     """
     assert a.n_cols == b.n_rows, (a.shape, b.shape)
     engine = executor.resolve_engine(engine, method)
@@ -132,6 +139,7 @@ def spgemm(
     c, nnz = executor.execute_plan(
         a, b, run_plan, engine=engine, gather=gather, row_chunk=row_chunk,
         mesh=mesh, pipeline=pipeline, sizing=sizing, autotune=autotune,
+        operands=operands,
     )
     info = spgemm_info(a, b, run_plan, nnz, mesh=mesh)
     return SpGEMMResult(c=c, plan=run_plan, info=info)
@@ -212,6 +220,7 @@ def spgemm_batched(
     pipeline: executor.Pipeline = "two_wave",
     sizing: executor.Sizing = "auto",
     autotune: Optional[executor.AutotuneCache] = None,
+    operands: executor.Operands = "auto",
 ) -> SpGEMMBatchResult:
     """``cs[i] = a_batch[i] @ b_batch[i]`` for same-pattern operand batches.
 
@@ -249,7 +258,7 @@ def spgemm_batched(
     indptr, indices, data_batch, nnz = executor.execute_plan_batched(
         a, b, a_data, b_data, run_plan, engine=engine, gather=gather,
         row_chunk=row_chunk, mesh=mesh, pipeline=pipeline, sizing=sizing,
-        autotune=autotune,
+        autotune=autotune, operands=operands,
     )
     indptr_j = jnp.asarray(indptr)
     indices_j = jnp.asarray(indices)

@@ -118,6 +118,31 @@ def merge_device(devices):
     return devices[0] if devices else None
 
 
+def place_operand_block(b_idx, b_val, rows, device):
+    """Place the footprint-gathered B operand block for one shard.
+
+    ``rows`` are the (sorted, unique) global B-row ids the shard's work
+    items will gather; only those ELL rows travel to ``device``, together
+    with an int32 ``remap`` of length ``n_rows(B)`` translating global row
+    ids to block-local ones (``-1`` = row absent from the block, which the
+    executor's remapped gathers treat exactly like A-column padding).
+    Returns ``(idx_block, val_block, remap)``, all on ``device`` — the
+    communication-avoiding alternative to replicating the full ELL.
+    """
+    import numpy as np
+
+    rows_np = np.asarray(rows, np.int64)
+    n_total = int(b_idx.shape[0])
+    remap = np.full(n_total, -1, np.int32)
+    remap[rows_np] = np.arange(len(rows_np), dtype=np.int32)
+    import jax.numpy as jnp
+
+    sel = jnp.asarray(rows_np.astype(np.int32))
+    return (replicate_to(jnp.take(b_idx, sel, axis=0), device),
+            replicate_to(jnp.take(b_val, sel, axis=0), device),
+            replicate_to(jnp.asarray(remap), device))
+
+
 def row_sharding(mesh, ndim: int = 2):
     """NamedSharding splitting dim 0 (rows) over the mesh's first axis,
     replicating the rest — the layout for SpMM outputs and CSR row work."""

@@ -1,7 +1,14 @@
 """Benchmark-harness correctness: locality simulator, roofline math,
-regression-gate record comparison."""
+regression-gate record comparison, and the CI contract gates."""
+import json
+
+import pytest
+
+from benchmarks import assert_ci
 from benchmarks.bench_locality import simulate
-from benchmarks.check_regression import compare, record_drift
+from benchmarks.check_regression import (
+    compare, record_drift, write_step_summary,
+)
 from benchmarks.roofline import (
     Roofline, model_flops, wire_bytes_per_chip, roofline_from_record,
     PEAK_FLOPS_BF16, HBM_BW,
@@ -123,3 +130,194 @@ def test_roofline_from_record():
     assert r.t_compute == 1e13 / PEAK_FLOPS_BF16
     assert r.t_memory == 1e11 / HBM_BW
     assert r.dominant == "memory"
+
+
+# ---------------------------------------------------------------------------
+# assert_ci: the tested replacement for ci.yml's inline assert heredocs.
+# ---------------------------------------------------------------------------
+
+def _doc(records=None, **meta):
+    return {"records": [{"name": k, "us": v}
+                        for k, v in (records or {}).items()],
+            "meta": meta}
+
+
+def _good_ci_doc():
+    return _doc(
+        records={"ci_batched_sort": 100.0, "ci_batched_loop_sort": 300.0,
+                 "ci_selfprod_pipelined": 50.0, "ci_selfprod_legacy": 80.0,
+                 "ci_selfprod_fused": 40.0, "ci_selfprod_fused_hash": 45.0},
+        cache_stats={"plan_hits": 3},
+        pipeline_probe={"host_syncs_pipelined": 1, "host_syncs_legacy": 4},
+        fused_probe={"host_syncs_fused": 0},
+        operand_probe={"n_shards": 2, "bytes_replicated": 1000,
+                       "bytes_footprint": 400, "rows_footprint": 300,
+                       "rows_total": 512},
+    )
+
+
+def test_assert_ci_all_ci_contracts_pass():
+    names = ["plan_hits", "batched_beats_looped", "sync_budget",
+             "fused_zero_sync", "operand_gate"]
+    assert assert_ci.run_checks(_good_ci_doc(), names) == []
+
+
+def test_assert_ci_plan_hits():
+    assert assert_ci.check_plan_hits(_doc(cache_stats={"plan_hits": 0}))
+    assert assert_ci.check_plan_hits(_doc())  # meta missing entirely
+
+
+def test_assert_ci_batched_beats_looped():
+    ok = _doc(records={"ci_batched_sort": 100.0,
+                       "ci_batched_loop_sort": 101.0})
+    assert assert_ci.check_batched_beats_looped(ok) == []
+    tie = _doc(records={"ci_batched_sort": 100.0,
+                        "ci_batched_loop_sort": 100.0})
+    assert assert_ci.check_batched_beats_looped(tie)
+    assert assert_ci.check_batched_beats_looped(_doc())  # records missing
+
+
+def test_assert_ci_sync_budget():
+    doc = _good_ci_doc()
+    assert assert_ci.check_sync_budget(doc) == []
+    doc["meta"]["pipeline_probe"]["host_syncs_pipelined"] = 3
+    assert any("per wave" in e for e in assert_ci.check_sync_budget(doc))
+    doc["meta"]["pipeline_probe"] = {"host_syncs_pipelined": 1,
+                                     "host_syncs_legacy": 1}
+    assert any("multiple chunks" in e
+               for e in assert_ci.check_sync_budget(doc))
+
+
+def test_assert_ci_fused_zero_sync():
+    doc = _good_ci_doc()
+    assert assert_ci.check_fused_zero_sync(doc) == []
+    doc["meta"]["fused_probe"]["host_syncs_fused"] = 1
+    assert assert_ci.check_fused_zero_sync(doc)
+
+
+def test_assert_ci_operand_gate():
+    doc = _good_ci_doc()
+    assert assert_ci.check_operand_gate(doc) == []
+    # footprint == replicated is a FAIL: placement must be strictly smaller
+    doc["meta"]["operand_probe"]["bytes_footprint"] = 1000
+    assert any("strictly below" in e
+               for e in assert_ci.check_operand_gate(doc))
+    doc = _good_ci_doc()
+    doc["meta"]["operand_probe"]["n_shards"] = 1
+    assert any("2 shards" in e for e in assert_ci.check_operand_gate(doc))
+    assert assert_ci.check_operand_gate(_doc()) == ["operand_probe meta "
+                                                    "missing"]
+
+
+def _good_medium_doc():
+    return _doc(
+        records={"medium_selfprod_sort": 900.0, "medium_selfprod_hash": 700.0,
+                 "medium_selfprod_fused_hash": 600.0,
+                 "medium_selfprod_auto": 650.0,
+                 "medium_selfprod_pipelined": 500.0,
+                 "medium_selfprod_legacy": 520.0},
+        autotune_probe={"autotune_hits_converged": 4,
+                        "autotune_misses_converged": 0},
+        operand_probe={"n_shards": 2, "bytes_replicated": 9000,
+                       "bytes_footprint": 5000, "rows_footprint": 800,
+                       "rows_total": 1024},
+    )
+
+
+def test_assert_ci_autotune():
+    doc = _good_medium_doc()
+    assert assert_ci.check_autotune(doc) == []
+    # auto is 650 vs best 600: a 1.05 tolerance rejects it
+    assert any("not within" in e
+               for e in assert_ci.check_autotune(doc, tolerance=1.05))
+    doc["meta"]["autotune_probe"]["autotune_misses_converged"] = 2
+    assert any("still measuring" in e for e in assert_ci.check_autotune(doc))
+    assert assert_ci.check_autotune(_doc())  # all records missing
+
+
+def test_assert_ci_pipelined_beats_legacy():
+    doc = _good_medium_doc()
+    assert assert_ci.check_pipelined_beats_legacy(doc) == []
+    doc["records"][-2]["us"] = 600.0  # pipelined 600 vs legacy 520 > 1.1x
+    assert assert_ci.check_pipelined_beats_legacy(doc)
+    assert assert_ci.check_pipelined_beats_legacy(doc, tolerance=2.0) == []
+
+
+def test_assert_ci_run_checks_prefixes_and_accumulates():
+    doc = _doc()  # everything missing -> every check fails
+    fails = assert_ci.run_checks(doc, ["plan_hits", "operand_gate"])
+    assert len(fails) >= 2
+    assert fails[0].startswith("[plan_hits]")
+    assert any(f.startswith("[operand_gate]") for f in fails)
+
+
+def test_assert_ci_main_cli(tmp_path, capsys):
+    art = tmp_path / "BENCH_ci.json"
+    art.write_text(json.dumps(_good_ci_doc()))
+    flags = ["--plan-hits", "--batched-beats-looped", "--sync-budget",
+             "--fused-zero-sync", "--operand-gate"]
+    assert assert_ci.main([str(art)] + flags) == 0
+    assert "5 contracts OK" in capsys.readouterr().out
+
+    bad = _good_ci_doc()
+    bad["meta"]["cache_stats"]["plan_hits"] = 0
+    art.write_text(json.dumps(bad))
+    assert assert_ci.main([str(art), "--plan-hits"]) == 1
+    assert "FAIL [plan_hits]" in capsys.readouterr().err
+
+    with pytest.raises(SystemExit):  # no contract flags selected
+        assert_ci.main([str(art)])
+
+
+def test_assert_ci_main_tolerance_flags(tmp_path):
+    art = tmp_path / "BENCH_medium.json"
+    art.write_text(json.dumps(_good_medium_doc()))
+    assert assert_ci.main([str(art), "--autotune",
+                           "--pipelined-beats-legacy"]) == 0
+    # auto (650us) vs best single engine (600us) fails a 1.01x bound
+    assert assert_ci.main([str(art), "--autotune",
+                           "--auto-tolerance", "1.01"]) == 1
+
+
+def test_write_step_summary_markdown_table(tmp_path):
+    base = _recs(a=100.0, b=100.0, gone=50.0)
+    cur = _recs(a=150.0, b=250.0, new=40.0)
+    shared = ["a", "b"]
+    regs = compare(cur, base, max_ratio=2.0)
+    new, missing = record_drift(cur, base)
+    out = tmp_path / "summary.md"
+    out.write_text("previous step content\n")
+    write_step_summary(cur, base, shared, regs, new, missing,
+                       max_ratio=2.0, min_us=0.0, path=str(out))
+    text = out.read_text()
+    assert text.startswith("previous step content\n")  # appended, not clobbered
+    assert "| record | baseline µs | current µs | ratio |" in text
+    assert "| a | 100 | 150 | 1.50x | ✅ |" in text
+    assert "| b | 100 | 250 | 2.50x | ❌ > 2.0x |" in text
+    assert "no baseline" in text and "missing from run" in text
+    assert "**FAIL**" in text
+
+
+def test_hillclimb_append_log_creates_results_dir(tmp_path, monkeypatch):
+    """Regression: --spgemm-bins wrote results/autotune_log.json into a
+    directory that doesn't exist on a fresh checkout."""
+    from benchmarks.hillclimb import append_log
+    path = tmp_path / "results" / "autotune_log.json"
+    assert not path.parent.exists()
+    append_log(str(path), {"run": 1})
+    log = append_log(str(path), {"run": 2})
+    assert log == [{"run": 1}, {"run": 2}]
+    assert json.loads(path.read_text()) == log
+    # bare relative filename: empty dirname must not trip makedirs
+    monkeypatch.chdir(tmp_path)
+    assert append_log("flat.json", {"run": 3}) == [{"run": 3}]
+
+
+def test_write_step_summary_ok_verdict(tmp_path):
+    base = _recs(a=100.0)
+    cur = _recs(a=110.0)
+    out = tmp_path / "summary.md"
+    write_step_summary(cur, base, ["a"], [], [], [],
+                       max_ratio=2.0, min_us=0.0, path=str(out))
+    text = out.read_text()
+    assert "**OK**" in text and "1 record(s)" in text

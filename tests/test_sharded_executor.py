@@ -101,6 +101,52 @@ def test_partition_plan_shrinks_chunks_to_feed_all_shards():
 
 
 # ---------------------------------------------------------------------------
+# Footprint-gathered operand placement: host-side derivation (no devices)
+# ---------------------------------------------------------------------------
+
+def test_support_footprint_unique_sorted_union():
+    from repro.core.grouping import support_footprint
+
+    indptr = np.array([0, 2, 2, 5])
+    indices = np.array([4, 1, 3, 1, 0])
+    np.testing.assert_array_equal(
+        support_footprint(indptr, indices, np.array([0, 2])), [0, 1, 3, 4])
+    np.testing.assert_array_equal(
+        support_footprint(indptr, indices, np.array([2])), [0, 1, 3])
+    assert support_footprint(indptr, indices, np.array([1])).size == 0
+    assert support_footprint(indptr, indices,
+                             np.empty(0, np.int64)).size == 0
+
+
+def test_resolve_operands_validates():
+    for mode in ("auto", "footprint", "replicate"):
+        assert executor.resolve_operands(mode) == mode
+    with pytest.raises(ValueError, match="operands"):
+        executor.resolve_operands("footprnt")
+
+
+def test_shard_footprints_cover_item_support_and_pad_empty_shards():
+    plan, nnz = _plan_fixture()
+    rng = np.random.default_rng(2)
+    a = csr_from_dense(int_sparse(rng, 64, 48, 0.25))
+    items = executor.partition_plan(plan, nnz, 4096, n_shards=8)
+    fps = executor.shard_footprints(items, np.asarray(a.indptr),
+                                    np.asarray(a.indices), n_shards=8)
+    assert len(fps) == 8
+    a_ip, a_ix = np.asarray(a.indptr), np.asarray(a.indices)
+    for s, fp in enumerate(fps):
+        assert fp.size >= 1  # empty shards padded to a valid 1-row block
+        want = set()
+        for it in items:
+            if it.shard != s:
+                continue
+            for r in it.rows:
+                want.update(a_ix[a_ip[r]:a_ip[r + 1]].tolist())
+        assert want <= set(fp.tolist())
+        np.testing.assert_array_equal(fp, np.unique(fp))  # sorted, unique
+
+
+# ---------------------------------------------------------------------------
 # mesh= code path on a single device (runs in the main session)
 # ---------------------------------------------------------------------------
 
@@ -127,6 +173,84 @@ def test_make_spgemm_mesh_rejects_oversubscription():
 
     with pytest.raises(ValueError, match="shard devices"):
         make_spgemm_mesh(len(jax.devices()) + 1)
+
+
+def _half_support_fixture():
+    """A 64x64 self-product whose A-support only names columns < 32: the
+    B footprint is a genuine half-size block even on a single shard."""
+    rng = np.random.default_rng(21)
+    x = np.zeros((64, 64), np.float32)
+    x[:, :32] = int_sparse(rng, 64, 32, 0.3)
+    return csr_from_dense(x)
+
+
+def _operand_stat_delta(fn):
+    before = executor.cache_stats()
+    res = fn()
+    after = executor.cache_stats()
+    keys = ("operand_bytes_placed", "operand_rows_footprint",
+            "operand_rows_total")
+    return res, {k: after[k] - before[k] for k in keys}
+
+
+def test_footprint_forced_single_shard_bit_exact_and_counted():
+    """operands="footprint" forces blocks even on one shard: bit-exact vs
+    the replicated path, with the comm-volume counters showing the
+    half-size placement."""
+    from repro.launch.mesh import make_spgemm_mesh
+
+    a = _half_support_fixture()
+    mesh = make_spgemm_mesh(1)
+    rep, d_rep = _operand_stat_delta(
+        lambda: spgemm(a, a, engine="hash", mesh=mesh, operands="replicate"))
+    fp, d_fp = _operand_stat_delta(
+        lambda: spgemm(a, a, engine="hash", mesh=mesh, operands="footprint"))
+    np.testing.assert_array_equal(
+        np.asarray(csr_to_dense(fp.c)), np.asarray(csr_to_dense(rep.c)))
+    np.testing.assert_array_equal(
+        np.asarray(csr_to_dense(fp.c)), np.asarray(spgemm_dense(a, a)))
+    assert d_rep["operand_rows_footprint"] == d_rep["operand_rows_total"] == 64
+    assert d_fp["operand_rows_footprint"] <= 32 < d_fp["operand_rows_total"]
+    assert 0 < d_fp["operand_bytes_placed"]
+    # the block ships remap (64 x int32) but halves idx+val: still smaller
+    assert d_fp["operand_bytes_placed"] < d_rep["operand_bytes_placed"]
+
+
+def test_auto_operands_keep_full_replica_on_single_shard():
+    """operands="auto" only engages under n_shards > 1 — one shard always
+    takes the replicated fast path regardless of footprint size."""
+    from repro.launch.mesh import make_spgemm_mesh
+
+    a = _half_support_fixture()
+    res, delta = _operand_stat_delta(
+        lambda: spgemm(a, a, engine="sort", mesh=make_spgemm_mesh(1),
+                       operands="auto"))
+    assert res.info["n_shards"] == 1
+    assert delta["operand_rows_footprint"] == delta["operand_rows_total"]
+
+
+def test_footprints_memoized_per_plan():
+    """A PlanCache-served second call reuses the memoized footprints (one
+    _FOOTPRINT_CACHE entry, not one per call)."""
+    from repro.core.spgemm import PlanCache
+    from repro.launch.mesh import make_spgemm_mesh
+
+    rng = np.random.default_rng(23)
+    pattern = rng.random((48, 48)) < 0.2
+    def member():
+        return csr_from_dense(np.where(
+            pattern, rng.integers(1, 5, (48, 48)), 0.0).astype(np.float32))
+    mesh = make_spgemm_mesh(1)
+    cache = PlanCache()
+    executor.clear_program_cache()
+    spgemm(member(), member(), engine="sort", mesh=mesh, plan=cache,
+           operands="footprint")
+    n_entries = len(executor._FOOTPRINT_CACHE)
+    assert n_entries > 0
+    spgemm(member(), member(), engine="sort", mesh=mesh, plan=cache,
+           operands="footprint")
+    assert len(executor._FOOTPRINT_CACHE) == n_entries, (
+        "same-plan call re-derived its shard footprints")
 
 
 # ---------------------------------------------------------------------------
@@ -249,6 +373,115 @@ def test_batched_bit_exact_vs_loop_sharded(n_devices):
     out = run_py(BATCHED_BODY.format(n_devices=n_devices),
                  n_devices=n_devices)
     assert out.count("BOK") == 6
+
+
+FOOTPRINT_BODY = """
+import jax, numpy as np
+from repro.core import executor
+from repro.core.spgemm import spgemm
+from repro.core.ref import spgemm_dense
+from repro.launch.mesh import make_spgemm_mesh
+from repro.sparse.formats import csr_from_dense, csr_to_dense
+
+n_dev = {n_devices}
+assert len(jax.devices()) == n_dev, jax.devices()
+rng = np.random.default_rng(17)
+# banded matrix: each shard's A-support names a partial row band of B, so
+# footprint blocks are genuinely smaller than replicas under n_dev >= 2
+n, w = 96, 6
+x = np.zeros((n, n), np.float32)
+for i in range(n):
+    lo, hi = max(0, i - w), min(n, i + w + 1)
+    x[i, lo:hi] = np.where(rng.random(hi - lo) < 0.7,
+                           rng.integers(-4, 5, hi - lo), 0.0)
+a = csr_from_dense(x)
+oracle = np.asarray(spgemm_dense(a, a))
+mesh = make_spgemm_mesh(n_dev)
+row_chunk = 24  # multi-chunk plan at every shard count
+for engine in ("sort", "hash", "fused_hash"):
+    for gather in ("xla", "aia"):
+        for schedule in ("grouped", "natural"):
+            for pipeline in ("two_wave", "legacy"):
+                kw = dict(engine=engine, gather=gather, schedule=schedule,
+                          pipeline=pipeline, mesh=mesh, row_chunk=row_chunk)
+                rep = spgemm(a, a, operands="replicate", **kw)
+                fp = spgemm(a, a, operands="footprint", **kw)
+                assert fp.info["n_shards"] == n_dev
+                np.testing.assert_array_equal(
+                    np.asarray(fp.c.indptr), np.asarray(rep.c.indptr))
+                np.testing.assert_array_equal(
+                    np.asarray(fp.c.indices), np.asarray(rep.c.indices))
+                np.testing.assert_array_equal(
+                    np.asarray(fp.c.data), np.asarray(rep.c.data))
+                np.testing.assert_array_equal(
+                    np.asarray(csr_to_dense(fp.c)), oracle)
+                print("FOK", engine, gather, schedule, pipeline, n_dev)
+stats = executor.cache_stats()
+assert stats["operand_bytes_placed"] > 0, stats
+if n_dev >= 2:
+    # partial bands: the footprint runs placed strictly fewer rows than
+    # the replicated runs mixed into the same counters would alone
+    assert stats["operand_rows_footprint"] < stats["operand_rows_total"], stats
+print("FSTATS", stats["operand_rows_footprint"], stats["operand_rows_total"])
+"""
+
+
+@pytest.mark.parametrize("n_devices", (1, 2, 4, 8))
+def test_footprint_operands_bit_exact_full_grid(n_devices):
+    """The tentpole acceptance bar: operands="footprint" produces CSR
+    output bit-identical to operands="replicate" (and the dense oracle)
+    for every engine x gather x schedule x pipeline combination at
+    1/2/4/8 forced host devices."""
+    out = run_py(FOOTPRINT_BODY.format(n_devices=n_devices),
+                 n_devices=n_devices)
+    assert out.count("FOK") == 24
+    assert "FSTATS" in out
+
+
+BATCHED_FOOTPRINT_BODY = """
+import jax, numpy as np
+from repro.core.spgemm import spgemm, spgemm_batched
+from repro.core.ref import spgemm_dense
+from repro.launch.mesh import make_spgemm_mesh
+from repro.sparse.formats import csr_from_dense, csr_to_dense
+
+n_dev = {n_devices}
+assert len(jax.devices()) == n_dev, jax.devices()
+rng = np.random.default_rng(19)
+n, w = 72, 5
+pat = np.zeros((n, n), bool)
+for i in range(n):
+    lo, hi = max(0, i - w), min(n, i + w + 1)
+    pat[i, lo:hi] = rng.random(hi - lo) < 0.6
+def members(k):
+    return [csr_from_dense(np.where(
+        pat, rng.integers(1, 5, pat.shape), 0.0).astype(np.float32))
+        for _ in range(k)]
+a_mats, b_mats = members(3), members(3)
+mesh = make_spgemm_mesh(n_dev)
+for operands in ("replicate", "footprint"):
+    batched = spgemm_batched(a_mats, b_mats, engine="sort", mesh=mesh,
+                             operands=operands)
+    assert batched.info["n_shards"] == n_dev
+    for i in range(3):
+        single = spgemm(a_mats[i], b_mats[i], engine="sort")
+        np.testing.assert_array_equal(
+            np.asarray(csr_to_dense(batched.cs[i])),
+            np.asarray(csr_to_dense(single.c)))
+        np.testing.assert_array_equal(
+            np.asarray(csr_to_dense(batched.cs[i])),
+            np.asarray(spgemm_dense(a_mats[i], b_mats[i])))
+    print("BFOK", operands, n_dev)
+"""
+
+
+@pytest.mark.parametrize("n_devices", (2, 4))
+def test_batched_footprint_operands_bit_exact(n_devices):
+    """The batched lane under footprint blocks (vmapped B value planes
+    sliced per footprint): bit-exact vs the unsharded per-matrix loop."""
+    out = run_py(BATCHED_FOOTPRINT_BODY.format(n_devices=n_devices),
+                 n_devices=n_devices)
+    assert out.count("BFOK") == 2
 
 
 AUTO_BODY = """

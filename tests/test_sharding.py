@@ -1,0 +1,98 @@
+"""Direct unit coverage for the SpGEMM shard-placement helpers in
+``repro.launch.sharding`` — shard enumeration, device placement, the merge
+point, and the footprint-gathered operand block (the communication-avoiding
+alternative to full B replication)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.mesh import make_spgemm_mesh
+from repro.launch.sharding import (
+    merge_device, place_operand_block, replicate_to, shard_devices,
+)
+
+
+def test_shard_devices_none_mesh_is_single_logical_shard():
+    assert shard_devices(None) == [None]
+
+
+def test_shard_devices_flattens_mesh():
+    n = jax.device_count()
+    mesh = make_spgemm_mesh(n)
+    devices = shard_devices(mesh)
+    assert len(devices) == n
+    assert set(devices) == set(np.asarray(mesh.devices).reshape(-1))
+
+
+def test_replicate_to_none_is_identity():
+    x = jnp.arange(4)
+    assert replicate_to(x, None) is x
+
+
+def test_replicate_to_places_on_device():
+    dev = jax.devices()[-1]
+    x = replicate_to(jnp.arange(4), dev)
+    assert list(x.devices()) == [dev]
+    np.testing.assert_array_equal(np.asarray(x), np.arange(4))
+
+
+def test_merge_device_first_shard_or_none():
+    assert merge_device([]) is None
+    assert merge_device([None]) is None
+    devs = jax.devices()
+    assert merge_device(devs) is devs[0]
+
+
+@pytest.mark.parametrize("device", [None, "last"])
+def test_place_operand_block_gathers_rows_and_remaps(device):
+    dev = jax.devices()[-1] if device == "last" else None
+    b_idx = jnp.asarray(np.arange(12, dtype=np.int32).reshape(6, 2))
+    b_val = jnp.asarray(np.arange(12, dtype=np.float32).reshape(6, 2) * 10)
+    rows = np.array([1, 3, 4], dtype=np.int64)
+    idx_blk, val_blk, remap = place_operand_block(b_idx, b_val, rows, dev)
+
+    np.testing.assert_array_equal(np.asarray(idx_blk),
+                                  np.asarray(b_idx)[rows])
+    np.testing.assert_array_equal(np.asarray(val_blk),
+                                  np.asarray(b_val)[rows])
+    # remap: global row id -> block-local position, -1 for absent rows
+    expect = np.array([-1, 0, -1, 1, 2, -1], dtype=np.int32)
+    np.testing.assert_array_equal(np.asarray(remap), expect)
+    assert remap.dtype == jnp.int32
+    if dev is not None:
+        for x in (idx_blk, val_blk, remap):
+            assert list(x.devices()) == [dev]
+
+
+def test_place_operand_block_full_footprint_is_permutation_free():
+    """All rows selected in order: the block equals the replica and remap
+    is the identity — the degenerate case the threshold fast path skips."""
+    b_idx = jnp.asarray(np.arange(8, dtype=np.int32).reshape(4, 2))
+    b_val = jnp.ones((4, 2), jnp.float32)
+    idx_blk, val_blk, remap = place_operand_block(
+        b_idx, b_val, np.arange(4, dtype=np.int64), None)
+    np.testing.assert_array_equal(np.asarray(idx_blk), np.asarray(b_idx))
+    np.testing.assert_array_equal(np.asarray(remap), np.arange(4))
+
+
+def test_place_operand_block_remap_feeds_remap_columns():
+    """End-to-end with the executor's column remapping: global A-columns
+    remapped through the block's remap hit the same B rows the full
+    replica would serve, and padding (-1) stays -1."""
+    from repro.core.phases import remap_columns
+
+    b_idx = jnp.asarray(np.arange(10, dtype=np.int32).reshape(5, 2))
+    b_val = jnp.asarray(np.random.default_rng(0)
+                        .random((5, 2)).astype(np.float32))
+    rows = np.array([0, 2, 3], dtype=np.int64)
+    idx_blk, _, remap = place_operand_block(b_idx, b_val, rows, None)
+
+    cols = jnp.asarray(np.array([2, -1, 0, 3], dtype=np.int32))
+    local = remap_columns(cols, remap)
+    np.testing.assert_array_equal(np.asarray(local), [1, -1, 0, 2])
+    # gathering the block at the local ids == gathering B at the globals
+    valid = np.asarray(cols) >= 0
+    np.testing.assert_array_equal(
+        np.asarray(jnp.take(idx_blk, local, axis=0))[valid],
+        np.asarray(b_idx)[np.asarray(cols)[valid]])
