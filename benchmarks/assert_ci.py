@@ -18,6 +18,11 @@ instead of living untested inside ``ci.yml``:
   ``operand_probe`` meta shows footprint bytes strictly below the
   replicated bytes (and footprint rows strictly below the replicated row
   count) on a multi-shard plan.
+* ``--serve-gate`` — the serving layer's contract: the pattern-coalescing
+  service actually coalesced (multi-request ``spgemm_batched`` dispatches
+  with a coalescing ratio > 1), beat the per-request replay of the same
+  Zipf trace within ``--serve-tolerance``, and every tenant's plan cache
+  respected its LRU quota (including the deliberately-tight audit replay).
 * ``--autotune`` — engine="auto" within ``--auto-tolerance`` of the best
   single engine, converged runs pure cache hits (zero re-measurement).
 * ``--pipelined-beats-legacy`` — the fused two-wave lane within
@@ -123,6 +128,35 @@ def check_operand_gate(doc: dict) -> List[str]:
     return errs
 
 
+def check_serve_gate(doc: dict, tolerance: float = 1.0) -> List[str]:
+    """Serving contract: the coalescing service batched same-pattern
+    traffic, beat the per-request replay within ``tolerance`` (1.0 =
+    strictly faster), and per-tenant plan quotas held."""
+    probe = doc.get("meta", {}).get("serve_probe")
+    if probe is None:
+        return ["serve_probe meta missing"]
+    errs = []
+    rec = _records(doc)
+    for name in ("ci_serve_coalesced", "ci_serve_per_request"):
+        if name not in rec:
+            errs.append(f"serve record {name!r} missing: {sorted(rec)}")
+    if probe.get("batched_dispatches", 0) <= 0:
+        errs.append(f"no multi-request spgemm_batched dispatches: {probe}")
+    if probe.get("coalescing_ratio", 0) <= 1.0:
+        errs.append(f"coalescing ratio not above 1 request/dispatch: {probe}")
+    coal = probe.get("coalesced_s", float("inf"))
+    per = probe.get("per_request_s", 0.0)
+    if coal > per * tolerance:
+        errs.append(f"coalesced replay ({coal:.4f}s) did not beat "
+                    f"per-request ({per:.4f}s) within {tolerance}x: {probe}")
+    if not probe.get("quota_respected", False):
+        errs.append(f"a tenant plan cache exceeded its LRU quota: {probe}")
+    if probe.get("requests_shed", 0) != 0:
+        errs.append(f"open-loop replay shed requests (queue bound must "
+                    f"cover the trace): {probe}")
+    return errs
+
+
 def check_autotune(doc: dict, tolerance: float = 1.5) -> List[str]:
     rec = _records(doc)
     engines = ("sort", "hash", "fused_hash")
@@ -172,13 +206,15 @@ CHECKS = {
     "sync_budget": check_sync_budget,
     "fused_zero_sync": check_fused_zero_sync,
     "operand_gate": check_operand_gate,
+    "serve_gate": check_serve_gate,
     "autotune": check_autotune,
     "pipelined_beats_legacy": check_pipelined_beats_legacy,
 }
 
 
 def run_checks(doc: dict, names: List[str], auto_tolerance: float = 1.5,
-               pipeline_tolerance: float = 1.1) -> List[str]:
+               pipeline_tolerance: float = 1.1,
+               serve_tolerance: float = 1.0) -> List[str]:
     """Run the named checks over one parsed artifact; returns every failure
     (prefixed with its check name) instead of stopping at the first."""
     failures = []
@@ -188,6 +224,8 @@ def run_checks(doc: dict, names: List[str], auto_tolerance: float = 1.5,
         elif name == "pipelined_beats_legacy":
             errs = check_pipelined_beats_legacy(
                 doc, tolerance=pipeline_tolerance)
+        elif name == "serve_gate":
+            errs = check_serve_gate(doc, tolerance=serve_tolerance)
         else:
             errs = CHECKS[name](doc)
         failures.extend(f"[{name}] {e}" for e in errs)
@@ -202,12 +240,16 @@ def main(argv=None) -> int:
     ap.add_argument("--sync-budget", action="store_true")
     ap.add_argument("--fused-zero-sync", action="store_true")
     ap.add_argument("--operand-gate", action="store_true")
+    ap.add_argument("--serve-gate", action="store_true")
     ap.add_argument("--autotune", action="store_true")
     ap.add_argument("--pipelined-beats-legacy", action="store_true")
     ap.add_argument("--auto-tolerance", type=float, default=1.5,
                     help="engine='auto' vs best-single-engine ratio bound")
     ap.add_argument("--pipeline-tolerance", type=float, default=1.1,
                     help="fused two-wave vs legacy ratio bound")
+    ap.add_argument("--serve-tolerance", type=float, default=1.0,
+                    help="coalesced vs per-request replay ratio bound "
+                         "(1.0 = coalesced must be strictly no slower)")
     args = ap.parse_args(argv)
 
     names = [n for n in CHECKS if getattr(args, n)]
@@ -216,7 +258,8 @@ def main(argv=None) -> int:
     with open(args.artifact) as f:
         doc = json.load(f)
     failures = run_checks(doc, names, auto_tolerance=args.auto_tolerance,
-                          pipeline_tolerance=args.pipeline_tolerance)
+                          pipeline_tolerance=args.pipeline_tolerance,
+                          serve_tolerance=args.serve_tolerance)
     if failures:
         for f in failures:
             print(f"FAIL {f}", file=sys.stderr)

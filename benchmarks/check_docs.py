@@ -1,0 +1,127 @@
+"""Docs-vs-code drift gate: knob tables in docs/knobs.md must list exactly
+what the executor's resolvers accept.
+
+For each table-checked knob section in ``docs/knobs.md`` (a ``## `knob` ``
+heading followed by a markdown table whose first column holds backticked
+choice names), the documented choice set is compared against the
+code-derived one:
+
+* ``engine`` — the live ``available_engines()`` registry plus ``"auto"``
+  (so registering a new engine without documenting it fails CI).
+* ``gather`` / ``schedule`` / ``pipeline`` / ``sizing`` / ``operands`` —
+  the executor's ``Literal`` type aliases (the same sets the
+  ``resolve_*`` validators enforce).
+
+Each documented choice is additionally pushed through its resolver
+(``resolve_engine`` / ``resolve_gather`` / ``resolve_sizing`` /
+``resolve_operands``) so a doc entry the code would reject is caught even
+if the alias and validator ever disagree.
+
+Usage (the CI docs-check step)::
+
+    PYTHONPATH=src python benchmarks/check_docs.py docs/knobs.md
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+import typing
+from typing import Dict, List, Set
+
+
+HEADING_RE = re.compile(r"^##\s+`(?P<knob>[a-z_]+)`\s*$")
+ROW_RE = re.compile(r"^\|\s*`(?P<choice>[A-Za-z0-9_]+)`\s*\|")
+
+
+def parse_knob_tables(text: str) -> Dict[str, Set[str]]:
+    """Extract {knob: documented choice set} from knobs.md.
+
+    A knob section is a ``## `name` `` heading; its choices are the
+    backticked first-column entries of every table row until the next
+    heading.
+    """
+    tables: Dict[str, Set[str]] = {}
+    knob = None
+    for line in text.splitlines():
+        m = HEADING_RE.match(line)
+        if m:
+            knob = m.group("knob")
+            tables.setdefault(knob, set())
+            continue
+        if line.startswith("## "):  # non-knob heading ends the section
+            knob = None
+            continue
+        if knob is not None:
+            r = ROW_RE.match(line)
+            if r:
+                tables[knob].add(r.group("choice"))
+    return {k: v for k, v in tables.items() if v}
+
+
+def expected_choices() -> Dict[str, Set[str]]:
+    """The code-derived choice set per knob."""
+    from repro.core import executor
+
+    return {
+        "engine": set(executor.available_engines()) | {executor.AUTO_ENGINE},
+        "gather": set(typing.get_args(executor.Gather)),
+        "pipeline": set(typing.get_args(executor.Pipeline)),
+        "sizing": set(typing.get_args(executor.Sizing)),
+        "operands": set(typing.get_args(executor.Operands)),
+        "schedule": {"grouped", "natural"},
+    }
+
+
+def check(text: str) -> List[str]:
+    """Compare documented vs code-derived choices; returns failures."""
+    from repro.core import executor
+
+    documented = parse_knob_tables(text)
+    expected = expected_choices()
+    errs = []
+    for knob, exp in sorted(expected.items()):
+        doc = documented.get(knob)
+        if doc is None:
+            errs.append(f"knobs.md has no table for `{knob}` "
+                        f"(expected choices: {sorted(exp)})")
+            continue
+        if doc != exp:
+            missing, extra = sorted(exp - doc), sorted(doc - exp)
+            errs.append(f"`{knob}` table drift: missing {missing}, "
+                        f"undocumented-in-code {extra}")
+    # every documented choice must survive its resolver
+    resolvers = {
+        "engine": executor.resolve_engine,
+        "gather": executor.resolve_gather,
+        "operands": executor.resolve_operands,
+        "sizing": lambda s: executor.resolve_sizing(s, "sort"),
+    }
+    for knob, resolve in resolvers.items():
+        for choice in sorted(documented.get(knob, ())):
+            try:
+                resolve(choice)
+            except ValueError as e:
+                errs.append(f"`{knob}` documents {choice!r} but the "
+                            f"resolver rejects it: {e}")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("knobs_md", nargs="?", default="docs/knobs.md")
+    args = ap.parse_args(argv)
+    with open(args.knobs_md) as f:
+        text = f.read()
+    errs = check(text)
+    if errs:
+        for e in errs:
+            print(f"FAIL {e}", file=sys.stderr)
+        return 1
+    n = len(parse_knob_tables(text))
+    print(f"{args.knobs_md}: {n} knob tables match the code")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -33,6 +33,13 @@ multi-chunk probe, and writes a ``fused_probe`` into the JSON meta whose
 sizing contract.  ``--sizing`` switches the sizing policy for the full
 suite.
 
+Serving: the CI smoke replays one Zipf-popular multi-tenant trace through
+the pattern-coalescing ``SpGEMMService`` and a per-request service
+(``benchmarks/bench_serve.py``), emitting a ``ci_serve_coalesced`` /
+``ci_serve_per_request`` record pair plus a ``serve_probe`` meta dict
+(coalescing ratio, p50/p99 latency, per-tenant quota audit) gated by
+``assert_ci.py --serve-gate``.
+
 Operand placement: under ``--devices >= 2`` both smoke tiers append an
 ``operand_probe`` to the JSON meta — a banded-graph self-product run under
 ``operands="replicate"`` then ``operands="footprint"``, recording the
@@ -64,6 +71,11 @@ AUTOTUNE_PROBE: dict = {}
 # replication vs footprint-gathered blocks, so CI can gate the
 # communication-avoiding placement saving from the artifact alone.
 OPERAND_PROBE: dict = {}
+# Filled by the CI smoke's serving probe (benchmarks/bench_serve.py): the
+# same Zipf trace replayed through a coalescing SpGEMMService and a
+# per-request one, plus the per-tenant plan-quota audit, so CI can gate
+# coalesced-beats-per-request and quota isolation from the artifact alone.
+SERVE_PROBE: dict = {}
 
 
 def _emit(name, us, derived):
@@ -277,6 +289,24 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
     _emit("ci_mcl", us, f"iters={r.n_iterations};"
           f"clusters={len(np.unique(r.clusters))};"
           f"plan_hits={r.plan_cache_hits}")
+
+    # Serving probe: one Zipf trace through the pattern-coalescing
+    # SpGEMMService (max_batch=8) and a per-request service (max_batch=1);
+    # both pay the full service path, so the record pair isolates what
+    # coalescing into spgemm_batched buys.  assert_ci --serve-gate reads
+    # the serve_probe meta.
+    from benchmarks import bench_serve
+
+    sv = bench_serve.run(mesh=mesh, requests=24, tenants=3, patterns=3,
+                         n=128, max_batch=8)
+    SERVE_PROBE.update(sv["serve_probe"])
+    _emit("ci_serve_coalesced", sv["coalesced_s"] * 1e6,
+          f"ratio={sv['serve_probe']['coalescing_ratio']:.2f};"
+          f"batched={sv['serve_probe']['batched_dispatches']};"
+          f"p99_ms={sv['serve_probe']['latency_p99_ms']:.1f}")
+    _emit("ci_serve_per_request", sv["per_request_s"] * 1e6,
+          f"dispatches={sv['serve_probe']['per_request_dispatches']};"
+          f"speedup_x={sv['serve_probe']['speedup_x']:.2f}")
 
     _operand_probe(mesh)
 
@@ -559,6 +589,8 @@ def _write_json(path: str, args) -> None:
         meta["autotune_probe"] = dict(AUTOTUNE_PROBE)
     if OPERAND_PROBE:
         meta["operand_probe"] = dict(OPERAND_PROBE)
+    if SERVE_PROBE:
+        meta["serve_probe"] = dict(SERVE_PROBE)
     with open(path, "w") as f:
         json.dump({"meta": meta, "records": RECORDS}, f, indent=2)
     print(f"wrote {len(RECORDS)} records to {path}", file=sys.stderr)

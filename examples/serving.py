@@ -1,0 +1,79 @@
+"""Serving example: the multi-tenant pattern-coalescing SpGEMMService.
+
+    PYTHONPATH=src python examples/serving.py
+
+Two tenants issue same-structure queries (the production shape: per-user
+subgraph inference, repeated MCL steps).  The service fingerprints each
+operand pattern, coalesces same-pattern requests — across tenants — into
+one ``spgemm_batched`` dispatch, and keeps per-tenant plan/operand/
+autotune cache quotas.  See docs/serving.md for the full reference.
+"""
+import numpy as np
+
+from repro.core.spgemm import spgemm
+from repro.serve import QueueFull, SpGEMMService
+from repro.sparse.formats import csr_from_dense
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 128
+    # one shared sparsity pattern, per-request value sets — the
+    # "same-structure queries" traffic the micro-batcher coalesces
+    mask = rng.random((n, n)) < 0.05
+    b = csr_from_dense((mask * rng.standard_normal((n, n)))
+                       .astype(np.float32))
+
+    def query():
+        vals = rng.standard_normal((n, n)).astype(np.float32)
+        return csr_from_dense((mask * vals).astype(np.float32))
+
+    svc = SpGEMMService(max_batch=4, max_wait=0.05, max_queue=64,
+                        tenant_plan_quota=8)
+
+    # 4 same-pattern requests from 2 tenants -> ONE batched dispatch
+    queries = [query() for _ in range(4)]
+    tickets = [svc.submit(f"tenant-{i % 2}", q, b) for i, q in
+               enumerate(queries)]
+    assert all(t.done for t in tickets)  # group hit max_batch -> dispatched
+    print(f"4 requests coalesced into {svc.stats()['dispatches']} "
+          f"dispatch(es), coalescing ratio "
+          f"{svc.stats()['coalescing_ratio']:.1f}")
+
+    # bit-exact vs calling spgemm per request
+    for q, t in zip(queries, tickets):
+        ref = spgemm(q, b).c
+        got = t.result().c
+        np.testing.assert_array_equal(np.asarray(got.data),
+                                      np.asarray(ref.data))
+    print("coalesced results bit-exact vs per-request spgemm: OK")
+
+    # a cold (singleton) pattern falls back to plain spgemm on flush
+    solo_mask = rng.random((n, n)) < 0.05
+    solo = csr_from_dense((solo_mask * rng.standard_normal((n, n)))
+                          .astype(np.float32))
+    tk = svc.submit("tenant-0", solo, b)
+    svc.flush()
+    print(f"singleton pattern dispatched alone "
+          f"(coalesced_with={tk.coalesced_with})")
+
+    # bounded queue: overload sheds loudly instead of silently growing
+    tiny = SpGEMMService(max_batch=100, max_wait=1e9, max_queue=2)
+    tiny.submit("t", query(), b)
+    tiny.submit("t", query(), b)
+    try:
+        tiny.submit("t", query(), b)
+    except QueueFull:
+        print(f"queue bound enforced: "
+              f"{tiny.stats()['requests_shed']} request shed")
+    tiny.flush()
+
+    s = svc.stats()
+    print(f"stats: p50={s['latency_p50_ms']:.1f}ms "
+          f"p99={s['latency_p99_ms']:.1f}ms; per-tenant plan hit rates: "
+          + ", ".join(f"{tid}={t['plan_hit_rate']:.2f}"
+                      for tid, t in s["tenants"].items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -514,14 +514,29 @@ _AUTOTUNE_STATS = {"autotune_hits": 0, "autotune_misses": 0}
 
 
 def cache_stats() -> Dict[str, int]:
-    """Global cache counters: jitted-program ``hits``/``misses``, plan-cache
-    ``plan_hits``/``plan_misses`` (every ``PlanCache`` instance folds its
-    lookups into the same counters), the pipeline's blocking
-    ``host_sync_count``, the B-operand placement cache's
-    ``operand_hits``/``operand_misses`` plus its comm-volume counters
-    (``operand_bytes_placed``, ``operand_rows_footprint``,
-    ``operand_rows_total``), and the per-bin engine autotuner's
-    ``autotune_hits``/``autotune_misses``."""
+    """Global executor counters, one flat dict.  Every field:
+
+    * ``hits`` / ``misses`` — jitted-program cache lookups: a hit reuses a
+      compiled enumerate/allocate/accumulate/fused/scatter program, a miss
+      traces and compiles a new one.
+    * ``plan_hits`` / ``plan_misses`` — ``PlanCache`` lookups (every
+      instance folds into these): a hit skips Alg. 1 + Table-I binning.
+    * ``host_sync_count`` — blocking host synchronizations paid inside the
+      pipeline: exactly one per measured two-wave call, zero per
+      planned/fused call, one per chunk on ``pipeline="legacy"``.
+    * ``operand_hits`` / ``operand_misses`` — B-side placement cache
+      lookups (every ``OperandCache`` instance folds into these): a hit
+      serves the placed ELL buffers with zero conversions or transfers.
+    * ``operand_bytes_placed`` — bytes of B-side buffers (indices + values
+      + remap) actually shipped to shard devices, accumulated at placement
+      (miss) time.
+    * ``operand_rows_footprint`` / ``operand_rows_total`` — B rows placed
+      (summed over shards) vs what full replication would have placed
+      (``n_shards × n_rows(B)``); their ratio is the comm saving.
+    * ``autotune_hits`` / ``autotune_misses`` — ``engine="auto"`` lookups:
+      a hit serves a converged per-bin assignment with zero
+      re-measurement, a miss covers every round that still measured.
+    """
     return {**_CACHE_STATS, **_PLAN_STATS, **_SYNC_STATS, **_OPERAND_STATS,
             **_AUTOTUNE_STATS}
 
@@ -594,15 +609,29 @@ class PlanCache:
         self.misses = 0
 
     def __len__(self) -> int:
+        """Number of cached plans currently held (bounded by
+        ``max_entries``)."""
         return len(self._entries)
 
-    def plan_for(self, a: "CSR", b: "CSR") -> GroupPlan:
+    def plan_for(self, a: "CSR", b: "CSR",
+                 supplier: Optional[Callable[[], GroupPlan]] = None
+                 ) -> GroupPlan:
+        """Serve (hit) or build (miss) the plan for ``(a, b)``'s pattern.
+
+        ``supplier`` overrides how a miss is filled: instead of running
+        ``group_rows``, the cache stores whatever the callable returns.
+        This is the multi-tenant scoping hook — when one coalesced dispatch
+        spans several tenants' caches, the first cache computes the plan
+        and the others *account* the same plan against their own quota
+        without re-planning (``serve.spgemm_service`` uses exactly this).
+        A supplier-filled miss still counts as a miss.
+        """
         key = pattern_fingerprint(a, b)
         plan = self._entries.get(key)
         if plan is None:
             self.misses += 1
             _PLAN_STATS["plan_misses"] += 1
-            plan = group_rows(a, b)
+            plan = group_rows(a, b) if supplier is None else supplier()
             self._entries[key] = plan
             while len(self._entries) > self.max_entries:
                 self._entries.popitem(last=False)
@@ -613,6 +642,9 @@ class PlanCache:
         return plan
 
     def stats(self) -> Dict[str, int]:
+        """Per-instance counters: ``hits`` (pattern seen before, planning
+        skipped), ``misses`` (``group_rows`` ran — or a ``supplier`` filled
+        the slot), and ``entries`` (current cache occupancy)."""
         return {"hits": self.hits, "misses": self.misses,
                 "entries": len(self._entries)}
 
@@ -1677,6 +1709,7 @@ def execute_plan(
     sizing: Sizing = "auto",
     autotune: Optional[AutotuneCache] = None,
     operands: Operands = "auto",
+    operand_cache: Optional[OperandCache] = None,
 ) -> Tuple[CSR, int]:
     """Run the compiled group pipeline; returns (C, nnz_C).
 
@@ -1729,6 +1762,12 @@ def execute_plan(
     the same B rows from shard-local indices — and the comm saving
     surfaces in ``cache_stats()``'s ``operand_bytes_placed`` /
     ``operand_rows_*`` counters.
+
+    ``operand_cache`` scopes the B-side placement cache: ``None`` (default)
+    uses the module-level cache; a caller-owned ``OperandCache`` isolates
+    placements (and their LRU quota) per scope — the multi-tenant serving
+    layer gives each tenant its own instance so one tenant's traffic can
+    never evict another's placed buffers.
     """
     if pipeline not in ("two_wave", "legacy"):
         raise ValueError(f"unknown pipeline {pipeline!r}")
@@ -1751,8 +1790,8 @@ def execute_plan(
     n = a.n_rows
     dtype = np.dtype(a.data.dtype)  # no host round-trip: dtype is metadata
     dt = dtype.str
-    b_entry = _OPERAND_CACHE.b_operands(b, kb_cap, devices,
-                                        footprints=footprints)
+    ocache = operand_cache if operand_cache is not None else _OPERAND_CACHE
+    b_entry = ocache.b_operands(b, kb_cap, devices, footprints=footprints)
     a_ops = _shard_a_operands((a.indptr, a.indices, a.data), devices)
     shape = (a.n_rows, b.n_cols)
     if pipeline == "legacy":
@@ -1960,18 +1999,19 @@ class _BatchChunkOut:
 
 
 def _batched_operands(a: CSR, b: CSR, a_data_batch, b_data_batch, kb_cap: int,
-                      devices, footprints=None):
+                      devices, footprints=None, operand_cache=None):
     """Per-shard batched operand placement.  The B-side structural buffers
-    (ELL indices + the shared value plane) come from the ``OperandCache``;
-    only per-call value stacks are placed fresh — sliced to each shard's
+    (ELL indices + the shared value plane) come from the ``OperandCache``
+    (``operand_cache`` scopes it; ``None`` = the module cache); only
+    per-call value stacks are placed fresh — sliced to each shard's
     footprint rows when the entry carries footprint-gathered blocks."""
     a_data_batch = np.asarray(a_data_batch)
     if a_data_batch.ndim != 2:
         raise ValueError(
             f"a_data_batch must be (batch, capacity), got {a_data_batch.shape}")
     batch = a_data_batch.shape[0]
-    b_entry = _OPERAND_CACHE.b_operands(b, kb_cap, devices,
-                                        footprints=footprints)
+    ocache = operand_cache if operand_cache is not None else _OPERAND_CACHE
+    b_entry = ocache.b_operands(b, kb_cap, devices, footprints=footprints)
     if b_data_batch is None:
         # shared B values: broadcast each shard's cached placement in place
         # (a broadcast of a device-resident array stays on that device)
@@ -2016,6 +2056,7 @@ def execute_plan_batched(
     sizing: Sizing = "auto",
     autotune: Optional[AutotuneCache] = None,
     operands: Operands = "auto",
+    operand_cache: Optional[OperandCache] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, int]:
     """Run the compiled pipeline once for a whole batch of same-pattern
     operands; returns ``(indptr, indices, data_batch, nnz)``.
@@ -2049,7 +2090,8 @@ def execute_plan_batched(
     ``operands`` mirrors ``execute_plan``: footprint-gathered B blocks per
     shard under ``"auto"``/``"footprint"`` (per-member value planes are
     sliced to the same footprint rows), full replication under
-    ``"replicate"`` — bit-identical either way.
+    ``"replicate"`` — bit-identical either way.  ``operand_cache`` scopes
+    the B placement cache exactly as in ``execute_plan``.
     """
     if pipeline not in ("two_wave", "legacy"):
         raise ValueError(f"unknown pipeline {pipeline!r}")
@@ -2074,7 +2116,7 @@ def execute_plan_batched(
     n = a.n_rows
     a_data_batch, batch, a_shards, b_shards = _batched_operands(
         a, b, a_data_batch, b_data_batch, kb_cap, devices,
-        footprints=footprints)
+        footprints=footprints, operand_cache=operand_cache)
     dtype = a_data_batch.dtype
     dt = np.dtype(dtype).str
     if pipeline == "legacy":

@@ -45,6 +45,11 @@ PlanLike = Union[GroupPlan, PlanCache, None]
 
 @dataclasses.dataclass
 class SpGEMMResult:
+    """One SpGEMM product: the CSR result ``c``, the ``GroupPlan`` that
+    executed it (reusable via ``spgemm(plan=...)``), and the ``info``
+    counter dict (``nnz_c``, ``intermediate_products``, ``flops``,
+    ``compression_ratio``, ``group_sizes``, ``n_shards``...)."""
+
     c: CSR
     plan: GroupPlan
     info: Dict[str, float]
@@ -87,6 +92,7 @@ def spgemm(
     sizing: executor.Sizing = "auto",
     autotune: Optional[executor.AutotuneCache] = None,
     operands: executor.Operands = "auto",
+    operand_cache: Optional[executor.OperandCache] = None,
 ) -> SpGEMMResult:
     """C = A @ B via the paper's multi-phase pipeline (plan-compiled).
 
@@ -127,6 +133,9 @@ def spgemm(
     covers ≥ ~70% of B's rows); ``"footprint"``/``"replicate"`` force
     either path — all bit-identical, with the comm volume surfaced in
     ``executor.cache_stats()``.
+    ``operand_cache`` scopes the B-side placement cache (``None`` = the
+    executor's module cache); the serving layer passes a per-tenant
+    instance so placements are quota'd per tenant.
     """
     assert a.n_cols == b.n_rows, (a.shape, b.shape)
     engine = executor.resolve_engine(engine, method)
@@ -139,7 +148,7 @@ def spgemm(
     c, nnz = executor.execute_plan(
         a, b, run_plan, engine=engine, gather=gather, row_chunk=row_chunk,
         mesh=mesh, pipeline=pipeline, sizing=sizing, autotune=autotune,
-        operands=operands,
+        operands=operands, operand_cache=operand_cache,
     )
     info = spgemm_info(a, b, run_plan, nnz, mesh=mesh)
     return SpGEMMResult(c=c, plan=run_plan, info=info)
@@ -221,6 +230,7 @@ def spgemm_batched(
     sizing: executor.Sizing = "auto",
     autotune: Optional[executor.AutotuneCache] = None,
     operands: executor.Operands = "auto",
+    operand_cache: Optional[executor.OperandCache] = None,
 ) -> SpGEMMBatchResult:
     """``cs[i] = a_batch[i] @ b_batch[i]`` for same-pattern operand batches.
 
@@ -234,6 +244,7 @@ def spgemm_batched(
     engine × gather combination, single- and multi-device (``mesh=``).
     ``sizing`` mirrors ``spgemm``: planned (the fused-engine default)
     sizes the whole batch from Alg. 1 bounds with zero blocking syncs.
+    ``operand_cache`` scopes the B-side placement cache as in ``spgemm``.
     """
     a_members = _as_members(a_batch, "a_batch")
     b_members = _as_members(b_batch, "b_batch")
@@ -258,7 +269,7 @@ def spgemm_batched(
     indptr, indices, data_batch, nnz = executor.execute_plan_batched(
         a, b, a_data, b_data, run_plan, engine=engine, gather=gather,
         row_chunk=row_chunk, mesh=mesh, pipeline=pipeline, sizing=sizing,
-        autotune=autotune, operands=operands,
+        autotune=autotune, operands=operands, operand_cache=operand_cache,
     )
     indptr_j = jnp.asarray(indptr)
     indices_j = jnp.asarray(indices)

@@ -1,4 +1,7 @@
-"""Serving: batched KV-cache decode loop."""
-from repro.serve.engine import ServeEngine, greedy_generate
+"""Serving: batched LM decode loop + multi-tenant SpGEMM service."""
+from repro.serve.engine import Request, ServeEngine, greedy_generate
+from repro.serve.spgemm_service import (
+    QueueFull, ServeKnobs, SpGEMMService, Ticket)
 
-__all__ = ["ServeEngine", "greedy_generate"]
+__all__ = ["ServeEngine", "Request", "greedy_generate",
+           "SpGEMMService", "ServeKnobs", "Ticket", "QueueFull"]

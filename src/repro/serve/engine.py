@@ -23,6 +23,8 @@ from repro.models.transformer import decode_step, init_decode_cache
 
 @dataclasses.dataclass
 class Request:
+    """One queued generation request (prompt in, greedy tokens out)."""
+
     prompt: np.ndarray          # (prompt_len,) int32
     max_new_tokens: int = 16
     out_tokens: List[int] = dataclasses.field(default_factory=list)
@@ -30,6 +32,8 @@ class Request:
 
 
 class ServeEngine:
+    """Fixed-slot continuous-batching LM decode engine over ``decode_step``."""
+
     def __init__(self, cfg: ArchConfig, params, batch_slots: int,
                  max_seq: int, sh: Shardings = UNSHARDED):
         self.cfg = cfg
@@ -44,6 +48,7 @@ class ServeEngine:
         self.queue: List[Request] = []
 
     def submit(self, req: Request):
+        """Queue a request; it claims a batch slot as one frees up."""
         self.queue.append(req)
 
     def _fill_slots(self):

@@ -209,6 +209,108 @@ def test_assert_ci_operand_gate():
                                                     "missing"]
 
 
+def _good_serve_doc():
+    return _doc(
+        records={"ci_serve_coalesced": 1000.0,
+                 "ci_serve_per_request": 2500.0},
+        serve_probe={"batched_dispatches": 3, "coalescing_ratio": 4.0,
+                     "coalesced_s": 0.001, "per_request_s": 0.0025,
+                     "quota_respected": True, "requests_shed": 0},
+    )
+
+
+def test_assert_ci_serve_gate_passes_good_doc():
+    assert assert_ci.check_serve_gate(_good_serve_doc()) == []
+
+
+def test_assert_ci_serve_gate_requires_coalescing():
+    doc = _good_serve_doc()
+    doc["meta"]["serve_probe"]["batched_dispatches"] = 0
+    assert any("spgemm_batched" in e
+               for e in assert_ci.check_serve_gate(doc))
+    doc = _good_serve_doc()
+    doc["meta"]["serve_probe"]["coalescing_ratio"] = 1.0
+    assert any("ratio" in e for e in assert_ci.check_serve_gate(doc))
+
+
+def test_assert_ci_serve_gate_speedup_and_tolerance():
+    doc = _good_serve_doc()
+    doc["meta"]["serve_probe"]["coalesced_s"] = 0.003  # slower than 0.0025
+    assert any("did not beat" in e
+               for e in assert_ci.check_serve_gate(doc))
+    assert assert_ci.check_serve_gate(doc, tolerance=1.5) == []
+
+
+def test_assert_ci_serve_gate_quota_shed_and_missing():
+    doc = _good_serve_doc()
+    doc["meta"]["serve_probe"]["quota_respected"] = False
+    assert any("quota" in e for e in assert_ci.check_serve_gate(doc))
+    doc = _good_serve_doc()
+    doc["meta"]["serve_probe"]["requests_shed"] = 2
+    assert any("shed" in e for e in assert_ci.check_serve_gate(doc))
+    assert assert_ci.check_serve_gate(_doc()) == ["serve_probe meta missing"]
+    doc = _good_serve_doc()
+    doc["records"] = []
+    assert any("missing" in e for e in assert_ci.check_serve_gate(doc))
+
+
+def test_assert_ci_main_serve_gate_flag(tmp_path):
+    art = tmp_path / "BENCH_ci.json"
+    art.write_text(json.dumps(_good_serve_doc()))
+    assert assert_ci.main([str(art), "--serve-gate"]) == 0
+    bad = _good_serve_doc()
+    bad["meta"]["serve_probe"]["coalesced_s"] = 0.01
+    art.write_text(json.dumps(bad))
+    assert assert_ci.main([str(art), "--serve-gate"]) == 1
+    assert assert_ci.main([str(art), "--serve-gate",
+                           "--serve-tolerance", "10.0"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# check_docs: the knobs.md docs-vs-code drift gate.
+# ---------------------------------------------------------------------------
+
+def test_check_docs_live_knobs_md_matches_code():
+    from benchmarks import check_docs
+    with open("docs/knobs.md") as f:
+        assert check_docs.check(f.read()) == []
+
+
+def test_check_docs_parses_tables_and_flags_drift():
+    from benchmarks import check_docs
+    text = ("## `engine`\n\n| Choice | x |\n|---|---|\n| `sort` | a |\n"
+            "| `hash` | b |\n\n## not-a-knob heading\n| `zzz` | c |\n")
+    tables = check_docs.parse_knob_tables(text)
+    assert tables == {"engine": {"sort", "hash"}}
+    errs = check_docs.check(text)
+    # fused_hash/auto undocumented + the other five knob tables absent
+    assert any("`engine` table drift" in e and "fused_hash" in e
+               for e in errs)
+    assert any("no table for `sizing`" in e for e in errs)
+
+
+def test_check_docs_rejects_choices_the_resolver_rejects():
+    from benchmarks import check_docs
+    with open("docs/knobs.md") as f:
+        text = f.read()
+    text = text.replace("| `replicate` |", "| `bogus` |")
+    errs = check_docs.check(text)
+    assert any("resolver rejects" in e and "bogus" in e for e in errs)
+    assert any("`operands` table drift" in e for e in errs)
+
+
+def test_check_docs_main_cli(tmp_path, capsys):
+    from benchmarks import check_docs
+    good = tmp_path / "knobs.md"
+    with open("docs/knobs.md") as f:
+        good.write_text(f.read())
+    assert check_docs.main([str(good)]) == 0
+    assert "match the code" in capsys.readouterr().out
+    good.write_text("# nothing here\n")
+    assert check_docs.main([str(good)]) == 1
+    assert "FAIL" in capsys.readouterr().err
+
+
 def _good_medium_doc():
     return _doc(
         records={"medium_selfprod_sort": 900.0, "medium_selfprod_hash": 700.0,

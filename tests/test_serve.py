@@ -1,0 +1,164 @@
+"""SpGEMMService: coalescing, shedding, tenant isolation, bit-exactness."""
+import numpy as np
+import pytest
+
+from repro.core.spgemm import spgemm
+from repro.serve import QueueFull, ServeKnobs, SpGEMMService
+from repro.sparse.formats import csr_from_dense
+
+
+def _pattern(seed, shape=(20, 20), density=0.25):
+    return np.random.default_rng(seed).random(shape) < density
+
+
+def _csr(mask, seed):
+    vals = np.random.default_rng(seed).standard_normal(mask.shape)
+    return csr_from_dense((mask * vals).astype(np.float32))
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _service(**kw):
+    clock = FakeClock()
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait", 1.0)
+    kw.setdefault("max_queue", 64)
+    return SpGEMMService(clock=clock, **kw), clock
+
+
+def test_coalesced_batch_bit_exact_vs_per_request():
+    svc, _ = _service(max_batch=4)
+    mask_a, mask_b = _pattern(1), _pattern(2)
+    b_mats = [_csr(mask_b, 100 + i) for i in range(4)]
+    a_mats = [_csr(mask_a, 200 + i) for i in range(4)]
+    tickets = [svc.submit(f"t{i % 2}", a_mats[i], b_mats[i])
+               for i in range(4)]
+    stats = svc.stats()
+    assert stats["batched_dispatches"] == 1
+    assert stats["singleton_dispatches"] == 0
+    assert stats["coalescing_ratio"] == 4.0
+    for i, tk in enumerate(tickets):
+        assert tk.done and tk.coalesced_with == 4
+        ref = spgemm(a_mats[i], b_mats[i]).c
+        got = tk.result().c
+        np.testing.assert_array_equal(np.asarray(got.indptr),
+                                      np.asarray(ref.indptr))
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(ref.indices))
+        np.testing.assert_array_equal(np.asarray(got.data),
+                                      np.asarray(ref.data))
+
+
+def test_singleton_pattern_falls_back_to_single_spgemm():
+    svc, clock = _service(max_batch=8, max_wait=0.5)
+    tk = svc.submit("solo", _csr(_pattern(3), 1), _csr(_pattern(4), 2))
+    assert not tk.done and svc.queue_depth() == 1
+    clock.t = 1.0
+    assert svc.poll() == 1
+    assert tk.done and tk.coalesced_with == 1
+    stats = svc.stats()
+    assert stats["singleton_dispatches"] == 1
+    assert stats["batched_dispatches"] == 0
+    ref = spgemm(_csr(_pattern(3), 1), _csr(_pattern(4), 2)).c
+    np.testing.assert_array_equal(np.asarray(tk.result().c.data),
+                                  np.asarray(ref.data))
+
+
+def test_result_forces_dispatch_of_pending_group():
+    svc, _ = _service(max_batch=8)
+    tk = svc.submit("t", _csr(_pattern(5), 1), _csr(_pattern(6), 2))
+    assert not tk.done
+    res = tk.result()
+    assert tk.done and res is not None and svc.queue_depth() == 0
+
+
+def test_queue_full_sheds_and_counts():
+    svc, _ = _service(max_batch=100, max_queue=3)
+    b = _csr(_pattern(7), 0)
+    for i in range(3):
+        svc.submit("t", _csr(_pattern(10 + i), i), b)
+    with pytest.raises(QueueFull):
+        svc.submit("t", _csr(_pattern(20), 9), b)
+    stats = svc.stats()
+    assert stats["requests_shed"] == 1
+    assert stats["queue_depth"] == 3
+    assert stats["tenants"]["t"]["shed"] == 1
+    # shed request never completes, queued ones still can
+    assert svc.flush() == 3
+    assert svc.stats()["requests_completed"] == 3
+
+
+def test_max_wait_flush_on_submit_path():
+    svc, clock = _service(max_batch=8, max_wait=0.5)
+    tk = svc.submit("t", _csr(_pattern(8), 1), _csr(_pattern(9), 2))
+    clock.t = 0.6
+    # a later submit (different pattern) polls overdue groups on entry
+    svc.submit("t", _csr(_pattern(30), 3), _csr(_pattern(31), 4))
+    assert tk.done
+
+
+def test_per_tenant_quota_eviction_is_isolated():
+    svc, _ = _service(max_batch=1, tenant_plan_quota=2)
+    b = _csr(_pattern(40), 0)
+    # tenant A warms two patterns, tenant B churns through four
+    for i in range(2):
+        svc.submit("A", _csr(_pattern(50 + i), i), b)
+    for i in range(4):
+        svc.submit("B", _csr(_pattern(60 + i), i), b)
+    ten = svc.stats()["tenants"]
+    assert ten["B"]["plan_entries"] == 2  # quota enforced on B
+    assert ten["A"]["plan_entries"] == 2  # A untouched by B's churn
+    # resubmitting A's patterns hits A's cache
+    for i in range(2):
+        svc.submit("A", _csr(_pattern(50 + i), 100 + i), b)
+    assert svc.stats()["tenants"]["A"]["plan_hits"] == 2
+
+
+def test_cross_tenant_batch_accounts_plan_in_both_caches():
+    svc, _ = _service(max_batch=2)
+    mask_a, mask_b = _pattern(70), _pattern(71)
+    svc.submit("lead", _csr(mask_a, 1), _csr(mask_b, 2))
+    svc.submit("rider", _csr(mask_a, 3), _csr(mask_b, 4))
+    ten = svc.stats()["tenants"]
+    assert ten["lead"]["plan_entries"] == 1
+    assert ten["rider"]["plan_entries"] == 1
+    assert svc.stats()["batched_dispatches"] == 1
+
+
+def test_knob_signature_splits_groups_and_validates():
+    svc, _ = _service(max_batch=2)
+    mask_a, mask_b = _pattern(80), _pattern(81)
+    svc.submit("t", _csr(mask_a, 1), _csr(mask_b, 2), engine="sort")
+    svc.submit("t", _csr(mask_a, 3), _csr(mask_b, 4), engine="hash")
+    assert svc.stats()["queued_groups"] == 2  # knobs differ -> no coalesce
+    with pytest.raises(ValueError):
+        svc.submit("t", _csr(mask_a, 5), _csr(mask_b, 6), engine="nope")
+    with pytest.raises(ValueError):
+        svc.submit("t", _csr(mask_a, 5), _csr(mask_b, 6), sizing="nope")
+    svc.flush()
+
+
+def test_stats_latency_percentiles_use_injected_clock():
+    svc, clock = _service(max_batch=4)
+    mask_a, mask_b = _pattern(90), _pattern(91)
+    b = _csr(mask_b, 0)
+    for i in range(3):
+        svc.submit("t", _csr(mask_a, i), b)
+        clock.t += 0.1
+    svc.flush()
+    s = svc.stats()
+    assert s["latency_p50_ms"] >= 100.0  # oldest waited 0.3s, median 0.2s
+    assert s["latency_p99_ms"] >= s["latency_p50_ms"]
+    assert s["requests_completed"] == 3
+
+
+def test_serve_knobs_signature_stable():
+    k1, k2 = ServeKnobs(engine="hash"), ServeKnobs(engine="hash")
+    assert k1.signature() == k2.signature()
+    assert ServeKnobs(engine="sort").signature() != k1.signature()
