@@ -23,6 +23,11 @@ instead of living untested inside ``ci.yml``:
   with a coalescing ratio > 1), beat the per-request replay of the same
   Zipf trace within ``--serve-tolerance``, and every tenant's plan cache
   respected its LRU quota (including the deliberately-tight audit replay).
+* ``--stream-gate`` — out-of-core contract: the streamed row-block lane
+  reproduced the monolithic product bit-exactly, actually tiled the work
+  (``tiles_streamed`` >= 2) with at least one prefetch/compute overlap,
+  and its wall time stayed within ``--stream-tolerance`` of the
+  monolithic record.
 * ``--autotune`` — engine="auto" within ``--auto-tolerance`` of the best
   single engine, converged runs pure cache hits (zero re-measurement).
 * ``--pipelined-beats-legacy`` — the fused two-wave lane within
@@ -32,9 +37,9 @@ Usage (exactly what ``.github/workflows/ci.yml`` runs)::
 
     python benchmarks/assert_ci.py BENCH_ci.json \
         --plan-hits --batched-beats-looped --sync-budget \
-        --fused-zero-sync --operand-gate
+        --fused-zero-sync --operand-gate --serve-gate --stream-gate
     python benchmarks/assert_ci.py BENCH_medium.json \
-        --autotune --pipelined-beats-legacy --operand-gate
+        --autotune --pipelined-beats-legacy --operand-gate --stream-gate
 """
 from __future__ import annotations
 
@@ -157,6 +162,40 @@ def check_serve_gate(doc: dict, tolerance: float = 1.0) -> List[str]:
     return errs
 
 
+def check_stream_gate(doc: dict, tolerance: float = 2.5) -> List[str]:
+    """Out-of-core streaming contract: bit-exact vs the monolithic lane,
+    genuinely tiled (>= 2 tiles) with prefetch overlapping compute, and
+    the streamed wall time within ``tolerance``x of the monolithic
+    record's (tiling trades peak device bytes for bounded overhead)."""
+    probe = doc.get("meta", {}).get("stream_probe")
+    if probe is None:
+        return ["stream_probe meta missing"]
+    errs = []
+    if not probe.get("bit_exact", False):
+        errs.append(f"streamed product diverged from monolithic: {probe}")
+    rec = _records(doc)
+    streamed_name = probe.get("streamed_record", "")
+    mono_name = probe.get("monolithic_record", "")
+    missing = [n for n in (streamed_name, mono_name) if n not in rec]
+    if missing:
+        errs.append(f"stream records missing {missing}: {sorted(rec)}")
+        return errs
+    streamed, mono = rec[streamed_name], rec[mono_name]
+    if streamed > mono * tolerance:
+        errs.append(f"streamed lane ({streamed}us) exceeded {tolerance}x "
+                    f"the monolithic record ({mono}us)")
+    if probe.get("tiles_streamed", 0) < 2:
+        errs.append(f"streamed probe did not tile the product "
+                    f"(tiles_streamed < 2): {probe}")
+    if probe.get("prefetch_overlap_hits", 0) <= 0:
+        errs.append(f"no tile was staged while a prior tile computed "
+                    f"(prefetch_overlap_hits == 0): {probe}")
+    if probe.get("tile_bytes_h2d", 0) <= 0:
+        errs.append(f"streamed probe recorded no host-to-device tile "
+                    f"traffic: {probe}")
+    return errs
+
+
 def check_autotune(doc: dict, tolerance: float = 1.5) -> List[str]:
     rec = _records(doc)
     engines = ("sort", "hash", "fused_hash")
@@ -207,6 +246,7 @@ CHECKS = {
     "fused_zero_sync": check_fused_zero_sync,
     "operand_gate": check_operand_gate,
     "serve_gate": check_serve_gate,
+    "stream_gate": check_stream_gate,
     "autotune": check_autotune,
     "pipelined_beats_legacy": check_pipelined_beats_legacy,
 }
@@ -214,7 +254,8 @@ CHECKS = {
 
 def run_checks(doc: dict, names: List[str], auto_tolerance: float = 1.5,
                pipeline_tolerance: float = 1.1,
-               serve_tolerance: float = 1.0) -> List[str]:
+               serve_tolerance: float = 1.0,
+               stream_tolerance: float = 2.5) -> List[str]:
     """Run the named checks over one parsed artifact; returns every failure
     (prefixed with its check name) instead of stopping at the first."""
     failures = []
@@ -226,6 +267,8 @@ def run_checks(doc: dict, names: List[str], auto_tolerance: float = 1.5,
                 doc, tolerance=pipeline_tolerance)
         elif name == "serve_gate":
             errs = check_serve_gate(doc, tolerance=serve_tolerance)
+        elif name == "stream_gate":
+            errs = check_stream_gate(doc, tolerance=stream_tolerance)
         else:
             errs = CHECKS[name](doc)
         failures.extend(f"[{name}] {e}" for e in errs)
@@ -241,6 +284,7 @@ def main(argv=None) -> int:
     ap.add_argument("--fused-zero-sync", action="store_true")
     ap.add_argument("--operand-gate", action="store_true")
     ap.add_argument("--serve-gate", action="store_true")
+    ap.add_argument("--stream-gate", action="store_true")
     ap.add_argument("--autotune", action="store_true")
     ap.add_argument("--pipelined-beats-legacy", action="store_true")
     ap.add_argument("--auto-tolerance", type=float, default=1.5,
@@ -250,6 +294,9 @@ def main(argv=None) -> int:
     ap.add_argument("--serve-tolerance", type=float, default=1.0,
                     help="coalesced vs per-request replay ratio bound "
                          "(1.0 = coalesced must be strictly no slower)")
+    ap.add_argument("--stream-tolerance", type=float, default=2.5,
+                    help="streamed vs monolithic wall-time ratio bound "
+                         "(tiling buys memory headroom, not speed)")
     args = ap.parse_args(argv)
 
     names = [n for n in CHECKS if getattr(args, n)]
@@ -259,7 +306,8 @@ def main(argv=None) -> int:
         doc = json.load(f)
     failures = run_checks(doc, names, auto_tolerance=args.auto_tolerance,
                           pipeline_tolerance=args.pipeline_tolerance,
-                          serve_tolerance=args.serve_tolerance)
+                          serve_tolerance=args.serve_tolerance,
+                          stream_tolerance=args.stream_tolerance)
     if failures:
         for f in failures:
             print(f"FAIL {f}", file=sys.stderr)

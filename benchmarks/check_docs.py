@@ -17,9 +17,22 @@ Each documented choice is additionally pushed through its resolver
 ``resolve_operands``) so a doc entry the code would reject is caught even
 if the alias and validator ever disagree.
 
+Streaming knobs (``tile_rows`` / ``prefetch``) take integers, not an
+enumerable choice set, so their tables are checked differently: every
+documented row value must survive ``resolve_tile_rows`` /
+``resolve_prefetch``, and the code defaults (``DEFAULT_TILE_ROWS`` /
+``DEFAULT_PREFETCH``) must appear among the rows — changing a default
+without re-documenting it fails CI.
+
+When an architecture doc is passed as the second argument, its
+``## Observability`` counter table is compared against the live
+``cache_stats()`` key set in both directions: an undocumented counter
+fails, and so does a documented counter the code no longer exports.
+
 Usage (the CI docs-check step)::
 
-    PYTHONPATH=src python benchmarks/check_docs.py docs/knobs.md
+    PYTHONPATH=src python benchmarks/check_docs.py docs/knobs.md \
+        docs/architecture.md
 """
 from __future__ import annotations
 
@@ -104,22 +117,108 @@ def check(text: str) -> List[str]:
             except ValueError as e:
                 errs.append(f"`{knob}` documents {choice!r} but the "
                             f"resolver rejects it: {e}")
+    errs.extend(check_stream_knobs(documented))
+    return errs
+
+
+def check_stream_knobs(documented: Dict[str, Set[str]]) -> List[str]:
+    """Integer-valued streaming knob tables: every documented row value
+    must survive its resolver, and the code default must be documented."""
+    from repro.core import executor
+
+    specs = {
+        "tile_rows": (executor.resolve_tile_rows,
+                      executor.DEFAULT_TILE_ROWS),
+        "prefetch": (executor.resolve_prefetch, executor.DEFAULT_PREFETCH),
+    }
+    errs = []
+    for knob, (resolve, default) in sorted(specs.items()):
+        doc = documented.get(knob)
+        if doc is None:
+            errs.append(f"knobs.md has no table for `{knob}` (an integer "
+                        f"knob; rows must include the default {default})")
+            continue
+        values = set()
+        for choice in sorted(doc):
+            try:
+                values.add(resolve(int(choice)))
+            except ValueError as e:
+                errs.append(f"`{knob}` documents {choice!r} but the "
+                            f"resolver rejects it: {e}")
+        if default not in values:
+            errs.append(f"`{knob}` table does not document the code "
+                        f"default {default}")
+    return errs
+
+
+COUNTER_HEADING_RE = re.compile(r"^##\s+Observability\s*$")
+COUNTER_ROW_RE = re.compile(r"^\|\s*`(?P<counter>[A-Za-z0-9_]+)`\s*\|")
+
+
+def parse_counter_table(text: str) -> Set[str]:
+    """Extract the counter names from architecture.md's ``## Observability``
+    table (backticked first-column entries until the next heading)."""
+    counters: Set[str] = set()
+    in_section = False
+    for line in text.splitlines():
+        if COUNTER_HEADING_RE.match(line):
+            in_section = True
+            continue
+        if line.startswith("## "):
+            in_section = False
+            continue
+        if in_section:
+            m = COUNTER_ROW_RE.match(line)
+            if m:
+                counters.add(m.group("counter"))
+    return counters
+
+
+def check_observability(text: str) -> List[str]:
+    """architecture.md's Observability table vs the live ``cache_stats()``
+    key set, both directions."""
+    from repro.core import executor
+
+    documented = parse_counter_table(text)
+    if not documented:
+        return ["architecture.md has no `## Observability` counter table"]
+    live = set(executor.cache_stats())
+    errs = []
+    missing, extra = sorted(live - documented), sorted(documented - live)
+    if missing:
+        errs.append(f"cache_stats() counters undocumented in "
+                    f"architecture.md: {missing}")
+    if extra:
+        errs.append(f"architecture.md documents counters cache_stats() "
+                    f"does not export: {extra}")
     return errs
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("knobs_md", nargs="?", default="docs/knobs.md")
+    ap.add_argument("architecture_md", nargs="?", default=None,
+                    help="also check this doc's ## Observability counter "
+                         "table against cache_stats()")
     args = ap.parse_args(argv)
     with open(args.knobs_md) as f:
         text = f.read()
     errs = check(text)
+    if args.architecture_md:
+        with open(args.architecture_md) as f:
+            errs.extend(check_observability(f.read()))
     if errs:
         for e in errs:
             print(f"FAIL {e}", file=sys.stderr)
         return 1
     n = len(parse_knob_tables(text))
-    print(f"{args.knobs_md}: {n} knob tables match the code")
+    msg = f"{args.knobs_md}: {n} knob tables match the code"
+    if args.architecture_md:
+        from repro.core import executor
+
+        msg += (f"; {args.architecture_md}: "
+                f"{len(executor.cache_stats())} counters documented")
+    print(msg)
     return 0
 
 

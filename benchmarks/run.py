@@ -40,6 +40,13 @@ the pattern-coalescing ``SpGEMMService`` and a per-request service
 (coalescing ratio, p50/p99 latency, per-tenant quota audit) gated by
 ``assert_ci.py --serve-gate``.
 
+Streaming: both smoke tiers run the out-of-core row-block lane
+(``spgemm_streamed``) against the monolithic lane on the tier's
+self-product graph, emitting a ``{tier}_selfprod_streamed`` /
+``{tier}_selfprod_stream_mono`` record pair plus a ``stream_probe`` meta
+dict (bit-exactness verdict, tile/H2D/overlap counter deltas) gated by
+``assert_ci.py --stream-gate``.
+
 Operand placement: under ``--devices >= 2`` both smoke tiers append an
 ``operand_probe`` to the JSON meta — a banded-graph self-product run under
 ``operands="replicate"`` then ``operands="footprint"``, recording the
@@ -76,6 +83,11 @@ OPERAND_PROBE: dict = {}
 # per-request one, plus the per-tenant plan-quota audit, so CI can gate
 # coalesced-beats-per-request and quota isolation from the artifact alone.
 SERVE_PROBE: dict = {}
+# Filled by the streaming probe (both smoke tiers): the streamed row-block
+# lane's bit-exactness verdict vs the monolithic lane plus its tile /
+# H2D-bytes / prefetch-overlap counter deltas, so CI can gate the
+# out-of-core contract from the artifact alone (assert_ci --stream-gate).
+STREAM_PROBE: dict = {}
 
 
 def _emit(name, us, derived):
@@ -137,6 +149,74 @@ def _operand_probe(mesh, row_chunk: int = 64) -> None:
         rows_footprint=deltas["footprint"]["operand_rows_footprint"],
         rows_total=deltas["footprint"]["operand_rows_total"],
     )
+
+
+def _stream_probe(mesh, a, prefix: str, tile_rows: int,
+                  reps: int = 3) -> None:
+    """Out-of-core probe: the streamed row-block lane vs the monolithic
+    lane on the tier's self-product graph.
+
+    Emits a ``{prefix}_selfprod_streamed`` / ``{prefix}_selfprod_stream_mono``
+    record pair and fills ``STREAM_PROBE`` with the bit-exactness verdict
+    plus the streamed lane's counter deltas over the timed reps — CI gates
+    bit-exactness, real tiling (>= 2 tiles), prefetch/compute overlap, and
+    the streamed-vs-monolithic overhead ratio from the artifact alone
+    (``assert_ci.py --stream-gate``).  A per-run ``PlanCache`` is warmed
+    first so the timed calls measure the steady-state streaming loop, not
+    tile planning."""
+    import jax
+    import numpy as np
+    from repro.core import executor
+    from repro.core.spgemm import PlanCache, spgemm, spgemm_streamed
+
+    cache = PlanCache()
+    keys = ("tiles_streamed", "tile_bytes_h2d", "prefetch_overlap_hits")
+    # warm both lanes: tile plans + compiled programs
+    res_s = spgemm_streamed(a, a, tile_rows=tile_rows, mesh=mesh, plan=cache)
+    res_m = spgemm(a, a, mesh=mesh)
+
+    ipt_m = np.asarray(res_m.c.indptr)
+    nnz = int(ipt_m[-1])
+    bit_exact = (
+        np.array_equal(np.asarray(res_s.c.indptr), ipt_m)
+        and np.array_equal(np.asarray(res_s.c.indices)[:nnz],
+                           np.asarray(res_m.c.indices)[:nnz])
+        and np.array_equal(np.asarray(res_s.c.data)[:nnz],
+                           np.asarray(res_m.c.data)[:nnz]))
+
+    s0 = {k: executor.cache_stats()[k] for k in keys}
+    best_s = best_m = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        rs = spgemm_streamed(a, a, tile_rows=tile_rows, mesh=mesh,
+                             plan=cache)
+        jax.block_until_ready(rs.c)
+        best_s = min(best_s, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        rm = spgemm(a, a, mesh=mesh)
+        jax.block_until_ready(rm.c)
+        best_m = min(best_m, time.perf_counter() - t0)
+    s1 = {k: executor.cache_stats()[k] for k in keys}
+    # per-call deltas so the probe composes with earlier streamed runs
+    deltas = {k: (s1[k] - s0[k]) // reps for k in keys}
+
+    streamed_name = f"{prefix}_selfprod_streamed"
+    mono_name = f"{prefix}_selfprod_stream_mono"
+    STREAM_PROBE.update(
+        bit_exact=bool(bit_exact),
+        streamed_record=streamed_name, monolithic_record=mono_name,
+        n_tiles=int(res_s.info["n_tiles"]),
+        tile_rows=int(res_s.info["tile_rows"]),
+        prefetch=int(res_s.info["prefetch"]),
+        max_tile_ip=int(res_s.info["max_tile_ip"]),
+        plan_hits=cache.hits,
+        **deltas,
+    )
+    _emit(streamed_name, best_s * 1e6,
+          f"tiles={res_s.info['n_tiles']};tile_rows={tile_rows};"
+          f"bit_exact={int(bit_exact)};overlap={deltas['prefetch_overlap_hits']}")
+    _emit(mono_name, best_m * 1e6,
+          f"nnz_c={res_m.info['nnz_c']};shards={res_m.info['n_shards']}")
 
 
 def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
@@ -308,6 +388,7 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
           f"dispatches={sv['serve_probe']['per_request_dispatches']};"
           f"speedup_x={sv['serve_probe']['speedup_x']:.2f}")
 
+    _stream_probe(mesh, a, "ci", tile_rows=64)
     _operand_probe(mesh)
 
 
@@ -406,6 +487,7 @@ def medium_smoke(mesh, pipeline: str = "two_wave",
           f"nnz_c={res.info['nnz_c']};shards={res.info['n_shards']};"
           f"hits={tuner.hits - hits0};misses={tuner.misses - misses0}")
 
+    _stream_probe(mesh, a, "medium", tile_rows=256)
     _operand_probe(mesh)
 
 
@@ -502,7 +584,8 @@ def main() -> None:
     for r in names:
         _emit(f"selfprod_{r['workload']}", r[f"{eng}_ms"] * 1e3,
               f"gflops={r[f'{eng}_gflops']:.3f};ip={r['intermediate_products']};"
-              f"nnz_c={r['nnz_c']};vs_dense_pct={r[f'{eng}_vs_dense_reduction_pct']:.1f};"
+              f"nnz_c={r['nnz_c']};"
+              f"vs_dense_pct={r[f'{eng}_vs_dense_reduction_pct']:.1f};"
               f"group_sched_pct={r['group_sched_reduction_pct']:.1f}")
 
     # --- Fig 5: locality / cache-hit proxy ---
@@ -591,6 +674,8 @@ def _write_json(path: str, args) -> None:
         meta["operand_probe"] = dict(OPERAND_PROBE)
     if SERVE_PROBE:
         meta["serve_probe"] = dict(SERVE_PROBE)
+    if STREAM_PROBE:
+        meta["stream_probe"] = dict(STREAM_PROBE)
     with open(path, "w") as f:
         json.dump({"meta": meta, "records": RECORDS}, f, indent=2)
     print(f"wrote {len(RECORDS)} records to {path}", file=sys.stderr)

@@ -14,7 +14,7 @@ from typing import List
 import numpy as np
 
 from repro.core import executor
-from repro.core.spgemm import PlanCache, spgemm
+from repro.core.spgemm import PlanCache, spgemm, spgemm_streamed
 from repro.sparse.formats import CSR, csr_from_coo
 from repro.sparse.ops import (
     csr_column_normalize,
@@ -89,6 +89,8 @@ def mcl(
     reuse_plan: bool = True,
     pipeline: str = "two_wave",
     sizing: str = "auto",
+    stream: int = None,
+    prefetch: int = 2,
 ) -> MCLResult:
     """Algorithm 6.  ``e=2`` expansion = one SpGEMM self-product per iter.
 
@@ -111,8 +113,17 @@ def mcl(
     ``method="auto"`` turns on per-bin adaptive dispatch — MCL's repeated
     same-support expansions are the ``AutotuneCache``'s convergence case;
     any method value is validated up front.
+    ``stream`` routes every expansion through the out-of-core streamed
+    lane (``spgemm_streamed``) with ``stream`` rows per tile and
+    ``prefetch`` tiles in flight — bit-identical to the monolithic run,
+    but with a per-tile device working set, so a graph whose monolithic
+    expansion exceeds ``executor.set_device_budget`` still clusters end
+    to end.  ``reuse_plan`` then caches *tile* plans: once the support
+    stabilizes, every tile of every further expansion is a plan hit.
+    ``stream=None`` (default) keeps the monolithic expansion.
     """
     method = executor.resolve_engine(method)
+    stream = None if stream is None else executor.resolve_tile_rows(stream)
     a = add_self_loops(g)
     a = csr_column_normalize(a)
     plan_cache = PlanCache() if reuse_plan else None
@@ -123,9 +134,16 @@ def mcl(
         # Expansion: B <- A^e  (e-1 SpGEMM products)
         b = a
         for _ in range(e - 1):
-            res = spgemm(b, a, engine=method, gather=gather,
-                         schedule=schedule, mesh=mesh, plan=plan_cache,
-                         pipeline=pipeline, sizing=sizing)
+            if stream is not None:
+                res = spgemm_streamed(
+                    b, a, tile_rows=stream, prefetch=prefetch,
+                    engine=method, gather=gather, schedule=schedule,
+                    mesh=mesh, plan=plan_cache, pipeline=pipeline,
+                    sizing=sizing)
+            else:
+                res = spgemm(b, a, engine=method, gather=gather,
+                             schedule=schedule, mesh=mesh, plan=plan_cache,
+                             pipeline=pipeline, sizing=sizing)
             infos.append(res.info)
             b = res.c
         # Prune: drop < theta, keep top-k per column

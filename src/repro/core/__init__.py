@@ -15,11 +15,16 @@ MXU-native block variant used by the LM integration.
 from repro.core.ip_count import intermediate_products, ip_histogram
 from repro.core.grouping import group_rows, GroupPlan, TABLE_I
 from repro.core.executor import (
-    Engine, OperandCache, PlanCache, available_engines, cache_stats,
-    chunk_capacity_bounds, clear_program_cache, execute_plan, get_engine,
-    register_engine, resolve_gather, resolve_operands, resolve_sizing,
+    DeviceBudgetExceeded, Engine, OperandCache, PlanCache,
+    available_engines, cache_stats, chunk_capacity_bounds,
+    clear_program_cache, device_budget, estimated_device_bytes,
+    execute_plan, execute_plan_streamed, get_engine, register_engine,
+    resolve_gather, resolve_operands, resolve_prefetch, resolve_sizing,
+    resolve_tile_rows, set_device_budget, tile_ranges,
 )
-from repro.core.spgemm import spgemm, spgemm_info, SpGEMMResult
+from repro.core.spgemm import (
+    spgemm, spgemm_info, spgemm_streamed, SpGEMMResult, SpGEMMStreamResult,
+)
 from repro.core.spgemm_bsr import bsr_spgemm_dense_rhs
 
 __all__ = [
@@ -29,6 +34,10 @@ __all__ = [
     "execute_plan", "resolve_gather", "resolve_operands", "resolve_sizing",
     "chunk_capacity_bounds", "cache_stats", "clear_program_cache",
     "OperandCache", "PlanCache",
+    "execute_plan_streamed", "tile_ranges", "resolve_tile_rows",
+    "resolve_prefetch", "set_device_budget", "device_budget",
+    "estimated_device_bytes", "DeviceBudgetExceeded",
     "spgemm", "spgemm_info", "SpGEMMResult",
+    "spgemm_streamed", "SpGEMMStreamResult",
     "bsr_spgemm_dense_rhs",
 ]

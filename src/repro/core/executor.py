@@ -162,7 +162,8 @@ import numpy as np
 from repro.core import phases
 from repro.core.grouping import GroupPlan, group_rows, support_footprint
 from repro.launch.sharding import (
-    merge_device, place_operand_block, replicate_to, shard_devices)
+    merge_device, place_operand_block, replicate_to, shard_devices,
+    stage_tile)
 from repro.sparse.formats import CSR, ELL, csr_to_ell
 
 Gather = Literal["auto", "xla", "aia"]
@@ -192,12 +193,112 @@ def resolve_operands(operands: Operands) -> str:
             "'auto', 'footprint', 'replicate'")
     return operands
 
+
+# Streaming-lane defaults (docs/streaming.md): rows per A row-block tile,
+# and how many tiles may be resident on the device at once (1 = no overlap,
+# 2 = classic double buffering — tile k+1's H2D transfer overlaps tile k's
+# compute).
+DEFAULT_TILE_ROWS = 4096
+DEFAULT_PREFETCH = 2
+
+
+def resolve_tile_rows(tile_rows) -> int:
+    """Validate the streamed lane's ``tile_rows=`` knob (rows per tile).
+
+    ``None`` resolves to ``DEFAULT_TILE_ROWS``.  Any positive integer is
+    valid: ``tile_rows >= n_rows(A)`` simply collapses the schedule to a
+    single tile (the monolithic shape), smaller values trade per-tile
+    planning/launch overhead for a smaller peak device working set.
+    """
+    if tile_rows is None:
+        return DEFAULT_TILE_ROWS
+    if isinstance(tile_rows, bool) or not isinstance(tile_rows, (int, np.integer)):
+        raise ValueError(
+            f"tile_rows must be a positive int (or None for the default "
+            f"{DEFAULT_TILE_ROWS}); got {tile_rows!r}")
+    if int(tile_rows) < 1:
+        raise ValueError(f"tile_rows must be >= 1; got {int(tile_rows)}")
+    return int(tile_rows)
+
+
+def resolve_prefetch(prefetch) -> int:
+    """Validate the streamed lane's ``prefetch=`` knob (tiles in flight).
+
+    ``prefetch`` bounds how many staged tiles may be device-resident at
+    once: ``1`` disables overlap (stage, compute, merge, repeat), ``2``
+    (default) double-buffers so tile *k+1*'s host→device transfer overlaps
+    tile *k*'s compute, larger values deepen the pipeline at the cost of
+    ``prefetch`` tiles of operand memory.
+    """
+    if prefetch is None:
+        return DEFAULT_PREFETCH
+    if isinstance(prefetch, bool) or not isinstance(prefetch, (int, np.integer)):
+        raise ValueError(
+            f"prefetch must be a positive int; got {prefetch!r}")
+    if int(prefetch) < 1:
+        raise ValueError(f"prefetch must be >= 1; got {int(prefetch)}")
+    return int(prefetch)
+
+
+# ---------------------------------------------------------------------------
+# Device-memory budget — the streamed lane's raison d'être made testable
+# ---------------------------------------------------------------------------
+
+# Optional cap (bytes) on the estimated device working set a single
+# execute_plan call may allocate.  ``None`` (default) disables the check.
+_DEVICE_BUDGET = {"bytes": None}
+
+
+class DeviceBudgetExceeded(RuntimeError):
+    """A plan's estimated device working set exceeds ``set_device_budget``.
+
+    Raised by ``execute_plan`` before any device allocation happens, so an
+    over-memory monolithic call fails fast and cleanly; the streamed lane
+    (``execute_plan_streamed``) runs the same check per *tile*, which is
+    how a graph that exceeds the budget monolithically still completes —
+    pick ``tile_rows`` small enough that every tile's estimate fits.
+    """
+
+
+def set_device_budget(nbytes: Optional[int]) -> None:
+    """Set (or clear, with ``None``) the device working-set budget in bytes.
+
+    The budget models the accelerator's memory ceiling: ``execute_plan``
+    raises ``DeviceBudgetExceeded`` when ``estimated_device_bytes`` of the
+    plan it was handed exceeds it.  Tests and the over-memory MCL path use
+    this to make "does not fit" an observable, hardware-independent event.
+    """
+    _DEVICE_BUDGET["bytes"] = None if nbytes is None else int(nbytes)
+
+
+def device_budget() -> Optional[int]:
+    """The configured device working-set budget in bytes (None = off)."""
+    return _DEVICE_BUDGET["bytes"]
+
+
+def estimated_device_bytes(plan: "GroupPlan", itemsize: int) -> int:
+    """Upper-bound estimate of a plan's device working set, in bytes.
+
+    The memory model documented in docs/streaming.md: the two-wave
+    pipeline keeps every chunk's enumerated key/value streams device-
+    resident until wave 2 consumes them, so the peak is dominated by the
+    intermediate products — ``total_ip × (4 + itemsize)`` bytes (an int32
+    key plus one value per product).  Operands and the output CSR are
+    deliberately excluded: they are shared across tiles (B) or bounded by
+    the same IP term.  For the streamed lane the bound applies per tile,
+    so it shrinks roughly linearly with ``tile_rows``.
+    """
+    return int(plan.total_ip) * (4 + int(itemsize))
+
+
 # Rows per program dispatch are padded to a multiple of this so repeated
 # calls with slightly different group sizes reuse compiled programs.
 ROW_QUANTUM = 8
 
 
 def next_pow2(x: int) -> int:
+    """Smallest power of two >= ``x`` (and >= 1) — the capacity quantum
+    that keeps compiled-program signatures coarse enough to reuse."""
     return 1 << int(np.ceil(np.log2(max(int(x), 1))))
 
 
@@ -233,11 +334,13 @@ ENGINES: Dict[str, Engine] = {}
 
 
 def register_engine(engine: Engine) -> Engine:
+    """Add an ``Engine`` to the registry (keyed by name) and return it."""
     ENGINES[engine.name] = engine
     return engine
 
 
 def get_engine(name: str) -> Engine:
+    """Look up a registered engine by name (ValueError when unknown)."""
     try:
         return ENGINES[name]
     except KeyError:
@@ -247,6 +350,8 @@ def get_engine(name: str) -> Engine:
 
 
 def available_engines() -> Tuple[str, ...]:
+    """Sorted names of every registered engine (the ``engine=`` choices
+    besides ``"auto"``)."""
     return tuple(sorted(ENGINES))
 
 
@@ -511,6 +616,14 @@ _OPERAND_STATS = {"operand_hits": 0, "operand_misses": 0,
 # sighting of a (pattern, backend, bin-signature) key and every incremental
 # measurement round until the per-bin candidates are exhausted.
 _AUTOTUNE_STATS = {"autotune_hits": 0, "autotune_misses": 0}
+# Streamed (out-of-core) lane: ``tiles_streamed`` counts row-block tiles
+# dispatched through the tile scheduler; ``tile_bytes_h2d`` accumulates the
+# bytes of tile operand arrays (indptr + indices + data) staged host→device;
+# ``prefetch_overlap_hits`` counts tiles whose staging was issued while an
+# earlier tile's compute was still in flight — i.e. transfers the double
+# buffering actually overlapped with compute (0 whenever ``prefetch=1``).
+_STREAM_STATS = {"tiles_streamed": 0, "tile_bytes_h2d": 0,
+                 "prefetch_overlap_hits": 0}
 
 
 def cache_stats() -> Dict[str, int]:
@@ -536,12 +649,21 @@ def cache_stats() -> Dict[str, int]:
     * ``autotune_hits`` / ``autotune_misses`` — ``engine="auto"`` lookups:
       a hit serves a converged per-bin assignment with zero
       re-measurement, a miss covers every round that still measured.
+    * ``tiles_streamed`` — row-block tiles dispatched by the streamed
+      (out-of-core) lane's tile scheduler.
+    * ``tile_bytes_h2d`` — bytes of streamed tile operands (indptr +
+      indices + data) staged host→device.
+    * ``prefetch_overlap_hits`` — streamed tiles whose staging was issued
+      while an earlier tile's compute was still in flight (the double
+      buffering actually overlapped; 0 under ``prefetch=1``).
     """
     return {**_CACHE_STATS, **_PLAN_STATS, **_SYNC_STATS, **_OPERAND_STATS,
-            **_AUTOTUNE_STATS}
+            **_AUTOTUNE_STATS, **_STREAM_STATS}
 
 
 def clear_program_cache() -> None:
+    """Drop every executor-level cache and zero the ``cache_stats()``
+    counters (tests and benchmarks use this to isolate measurements)."""
     _PROGRAM_CACHE.clear()
     _PARTITION_CACHE.clear()
     _FOOTPRINT_CACHE.clear()
@@ -556,6 +678,8 @@ def clear_program_cache() -> None:
         _OPERAND_STATS[k] = 0
     _AUTOTUNE_STATS["autotune_hits"] = 0
     _AUTOTUNE_STATS["autotune_misses"] = 0
+    for k in _STREAM_STATS:
+        _STREAM_STATS[k] = 0
 
 
 def _coalesced_sync(arrays: Sequence[jax.Array]) -> List[np.ndarray]:
@@ -728,6 +852,7 @@ class OperandCache:
         return len(self._entries)
 
     def clear(self) -> None:
+        """Drop every cached placement (does not touch the counters)."""
         self._entries.clear()
 
     @staticmethod
@@ -760,6 +885,11 @@ class OperandCache:
 
     def b_operands(self, b: CSR, kb_cap: int, devices,
                    footprints=None) -> _OperandEntry:
+        """Serve (hit) or build+place (miss) B's per-shard operand entry.
+
+        The key is the identity of B's buffers + ``kb_cap`` + the device
+        set + the footprint fingerprint; NumPy-backed CSRs are never
+        cached (mutable buffers can be edited in place)."""
         if not all(isinstance(x, jax.Array)
                    for x in (b.indptr, b.indices, b.data)):
             _OPERAND_STATS["operand_misses"] += 1
@@ -855,6 +985,7 @@ class AutotuneCache:
         return len(self._entries)
 
     def clear(self) -> None:
+        """Drop every cached assignment (does not touch the counters)."""
         self._entries.clear()
 
     def _candidate_order(self, seed_engine: str) -> List[str]:
@@ -880,6 +1011,8 @@ class AutotuneCache:
         return entry
 
     def converged(self, key: tuple) -> bool:
+        """True when ``key``'s per-bin assignment has no candidates left
+        to measure (every further lookup is a pure hit)."""
         entry = self._entries.get(key)
         return entry is not None and entry.converged
 
@@ -918,6 +1051,7 @@ class AutotuneCache:
         entry._recompute()
 
     def stats(self) -> Dict[str, int]:
+        """Per-instance counters: ``hits`` / ``misses`` / ``entries``."""
         return {"hits": self.hits, "misses": self.misses,
                 "entries": len(self._entries)}
 
@@ -1784,6 +1918,16 @@ def execute_plan(
         mode = "measured"
     else:
         mode = resolve_sizing(sizing, engine, plan, group_engines)
+    budget = _DEVICE_BUDGET["bytes"]
+    if budget is not None:
+        need = estimated_device_bytes(plan, np.dtype(a.data.dtype).itemsize)
+        if need > budget:
+            raise DeviceBudgetExceeded(
+                f"plan needs ~{need} device bytes for its intermediate "
+                f"products (total IP {plan.total_ip}) but the configured "
+                f"device budget is {budget}; stream the call instead — "
+                "spgemm_streamed with tile_rows small enough that every "
+                "tile's estimate fits the budget")
     gather, kb_cap, ncol_cap, devices, items, footprints = _setup_execution(
         a, b, plan, engine, gather, row_chunk, mesh,
         group_engines=group_engines, operands=operands)
@@ -2232,3 +2376,168 @@ def _execute_plan_batched_legacy(items, devices, a_shards, b_shards, n,
 
     return (jnp.asarray(indptr.astype(np.int32)), jnp.asarray(indices),
             jnp.asarray(data_batch), nnz)
+
+
+# ---------------------------------------------------------------------------
+# Streamed (out-of-core) lane — row-block tiles through the same pipeline
+# ---------------------------------------------------------------------------
+
+def tile_ranges(n_rows: int, tile_rows: int) -> List[Tuple[int, int]]:
+    """Row-block tile boundaries: half-open ``[r0, r1)`` ranges of
+    ``tile_rows`` rows covering ``[0, n_rows)``.  The last tile is ragged
+    when ``tile_rows`` does not divide ``n_rows``; ``tile_rows >= n_rows``
+    yields a single (monolithic) tile."""
+    return [(r0, min(r0 + tile_rows, n_rows))
+            for r0 in range(0, n_rows, tile_rows)]
+
+
+def execute_plan_streamed(
+    a: CSR,
+    b: CSR,
+    *,
+    tile_rows: Optional[int] = None,
+    prefetch: Optional[int] = None,
+    plan: Optional[PlanCache] = None,
+    engine: str = "sort",
+    gather: Gather = "auto",
+    row_chunk: int = 4096,
+    schedule: Schedule = "grouped",
+    mesh=None,
+    pipeline: Pipeline = "two_wave",
+    sizing: Sizing = "auto",
+    autotune: Optional[AutotuneCache] = None,
+    operands: Operands = "auto",
+    operand_cache: Optional[OperandCache] = None,
+) -> Tuple[CSR, int, Dict[str, int]]:
+    """Out-of-core SpGEMM: stream A through the pipeline in row-block tiles.
+
+    A is treated as host-resident: its CSR arrays are sliced into
+    ``tile_rows`` row blocks on the host, each tile's operand arrays are
+    staged host→device asynchronously (``launch.sharding.stage_tile``),
+    planned through the lane's fingerprint-keyed ``PlanCache`` (tile
+    patterns repeat across MCL/GNN iterations, so plans amortize), and run
+    through ``execute_plan`` — every knob (engine/gather/mesh/pipeline/
+    sizing/operands) means exactly what it means monolithically, applied
+    per tile.  ``prefetch`` tiles may be device-resident at once: the
+    scheduler stages tile *k+1* (…*k+prefetch−1*) right after dispatching
+    tile *k*'s programs and before blocking on tile *k*'s result, so the
+    H2D transfers overlap wave-1 compute (``prefetch_overlap_hits`` in
+    ``cache_stats()`` counts the tiles that actually overlapped).
+
+    Each completed tile is pulled back as a *compact* CSR segment (exact
+    nnz, no padding) and merged on the host by the same destination-mapped
+    per-segment scatter the sharded device epilogue uses
+    (``phases.merge_segments_host`` — a tile is just another segment).
+    Device memory therefore holds only B, ``prefetch`` tiles of A, and one
+    tile's pipeline intermediates at a time, and the merged C lives in
+    host memory — which is what makes the lane out-of-core: with a
+    ``set_device_budget`` cap that the monolithic plan exceeds, the same
+    product completes here because the per-tile estimate
+    (``estimated_device_bytes`` of the tile plan) shrinks with
+    ``tile_rows``.
+
+    Tiles partition rows disjointly and every row is planned into the same
+    Table-I bin with the same row content it has monolithically, so the
+    merged result is bit-identical to the monolithic lane for every
+    engine × gather × pipeline combination (the bit-exactness grid in
+    tests/test_streaming.py).
+
+    Returns ``(C, nnz_C, stream_info)`` where ``stream_info`` carries the
+    per-call tile counters (``n_tiles``, resolved ``tile_rows`` /
+    ``prefetch``, ``max_tile_ip``, ``total_ip``).
+    """
+    t_rows = resolve_tile_rows(tile_rows)
+    depth = resolve_prefetch(prefetch)
+    if plan is not None and not isinstance(plan, PlanCache):
+        raise TypeError(
+            "the streamed lane plans per tile, so plan= must be a "
+            f"PlanCache (or None for a call-local cache); got {type(plan)!r}")
+    cache = plan if plan is not None else PlanCache()
+    n = a.n_rows
+    # A's home is host memory in this lane; device-backed inputs are
+    # materialized once here (tiny for indptr, and the indices/data pull is
+    # the one-time cost of switching a resident matrix to streaming).
+    a_indptr = np.asarray(a.indptr)
+    a_indices = np.asarray(a.indices)
+    a_data = np.asarray(a.data)
+    dtype = np.dtype(a_data.dtype)
+    stage_dev = merge_device(shard_devices(mesh))
+    tiles = tile_ranges(n, t_rows)
+
+    staged: List[tuple] = []
+    next_tile = [0]
+
+    def _stage(in_flight: bool) -> None:
+        r0, r1 = tiles[next_tile[0]]
+        lo, hi = int(a_indptr[r0]), int(a_indptr[r1])
+        ipt = np.ascontiguousarray(a_indptr[r0:r1 + 1]) - a_indptr[r0]
+        idx_h, dat_h = a_indices[lo:hi], a_data[lo:hi]
+        idx_d, dat_d = stage_tile((idx_h, dat_h), stage_dev)
+        _STREAM_STATS["tile_bytes_h2d"] += int(
+            ipt.nbytes + idx_h.nbytes + dat_h.nbytes)
+        if in_flight:
+            _STREAM_STATS["prefetch_overlap_hits"] += 1
+        staged.append((r0, r1, ipt, idx_h, dat_h, idx_d, dat_d))
+        next_tile[0] += 1
+
+    segments = []
+    max_tile_ip = 0
+    total_ip = 0
+    for _ in range(len(tiles)):
+        if not staged:
+            _stage(in_flight=False)
+        r0, r1, ipt, idx_h, dat_h, idx_d, dat_d = staged.pop(0)
+        shape_t = (r1 - r0, a.n_cols)
+        # plan on the host-side slices (fingerprinting and Alg. 1 are host
+        # arithmetic); compute on the staged device arrays
+        tplan = cache.plan_for(CSR(ipt, idx_h, dat_h, shape_t), b)
+        _STREAM_STATS["tiles_streamed"] += 1
+        max_tile_ip = max(max_tile_ip, int(tplan.total_ip))
+        total_ip += int(tplan.total_ip)
+        run = None
+        if tplan.total_ip > 0:
+            run_plan = ungrouped_plan(tplan) if schedule == "natural" else tplan
+            run = execute_plan(
+                CSR(ipt, idx_d, dat_d, shape_t), b, run_plan, engine=engine,
+                gather=gather, row_chunk=row_chunk, mesh=mesh,
+                pipeline=pipeline, sizing=sizing, autotune=autotune,
+                operands=operands, operand_cache=operand_cache)
+        # double buffering: stage the next tile(s) while this tile's
+        # dispatched programs are still executing, before blocking below
+        while next_tile[0] < len(tiles) and len(staged) < depth - 1:
+            _stage(in_flight=run is not None)
+        if run is None:
+            # a tile with zero intermediate products has only empty C rows
+            segments.append((r0, r1, np.zeros(r1 - r0 + 1, np.int32),
+                             np.empty(0, np.int32), np.empty(0, dtype)))
+        else:
+            c_t, _ = run
+            t_ipt = np.asarray(c_t.indptr)  # blocks on this tile only
+            t_nnz = int(t_ipt[-1])
+            segments.append((r0, r1, t_ipt,
+                             np.asarray(c_t.indices[:t_nnz]),
+                             np.asarray(c_t.data[:t_nnz])))
+
+    # ---- Streamed epilogue: tiles are contiguous disjoint row blocks, so
+    # the merged indptr is their offset-shifted concatenation and each
+    # segment lands with one destination-mapped scatter ----
+    indptr = np.zeros(n + 1, np.int64)
+    for r0, r1, t_ipt, _, _ in segments:
+        indptr[r0 + 1:r1 + 1] = indptr[r0] + np.asarray(t_ipt[1:], np.int64)
+    nnz = int(indptr[-1])
+    _int32_nnz_capacity(nnz)  # int32 CSR index-space guard (raises loudly)
+    idx_buf = np.empty(max(nnz, 1), np.int32)[:nnz]
+    dat_buf = np.empty(max(nnz, 1), dtype)[:nnz]
+    for r0, r1, t_ipt, seg_idx, seg_dat in segments:
+        dest = int(indptr[r0]) + np.arange(len(seg_idx), dtype=np.int64)
+        phases.merge_segments_host(idx_buf, dat_buf, seg_idx, seg_dat, dest)
+    c = CSR(jnp.asarray(indptr.astype(np.int32)), jnp.asarray(idx_buf),
+            jnp.asarray(dat_buf), (n, b.n_cols))
+    stream_info = {
+        "n_tiles": len(tiles),
+        "tile_rows": t_rows,
+        "prefetch": depth,
+        "max_tile_ip": max_tile_ip,
+        "total_ip": total_ip,
+    }
+    return c, nnz, stream_info

@@ -282,13 +282,32 @@ def merge_segments_batched(idx_buf, dat_buf_b, seg_idx, seg_dat_b, dest):
     return idx_buf, dat_buf_b
 
 
+def merge_segments_host(idx_buf, dat_buf, seg_idx, seg_dat, dest):
+    """``merge_segments`` for host-resident final buffers — the streamed
+    lane's inter-tile epilogue.
+
+    A completed tile comes back as a compact CSR segment exactly like a
+    shard's packed segment, and merges the same way: one destination-mapped
+    scatter into the final ``indices``/``data`` buffers (a tile is just
+    another segment).  Same sentinel convention as the device merge —
+    positions at/past the buffer capacity are dropped — but NumPy in-place
+    on the host, where the streamed lane accumulates the out-of-core
+    result.  Mutates and returns ``idx_buf``/``dat_buf``.
+    """
+    keep = dest < idx_buf.shape[0]
+    idx_buf[dest[keep]] = seg_idx[keep]
+    dat_buf[dest[keep]] = seg_dat[keep]
+    return idx_buf, dat_buf
+
+
 # ---------------------------------------------------------------------------
 # Hash engine (Algorithm 2/3 allocation; Algorithm 5 accumulation)
 # ---------------------------------------------------------------------------
 
 def _row_alloc_hash(keys, table_cap):
     tab = ht.make_table(table_cap)
-    tab = ht.insert_stream(tab, keys, jnp.zeros_like(keys, jnp.float32), accumulate=False)
+    tab = ht.insert_stream(tab, keys, jnp.zeros_like(keys, jnp.float32),
+                           accumulate=False)
     return tab.count
 
 

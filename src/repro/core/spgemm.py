@@ -173,6 +173,100 @@ def spgemm_info(a: CSR, b: CSR, plan: GroupPlan, nnz_c: int,
 
 
 # ---------------------------------------------------------------------------
+# Streamed (out-of-core) SpGEMM over row-block tiles of A
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SpGEMMStreamResult:
+    """Streamed product: the merged CSR ``c`` plus ``info`` extended with
+    the lane's tile counters (``n_tiles``, resolved ``tile_rows`` /
+    ``prefetch``, ``max_tile_ip``).  There is no single ``plan`` field:
+    each row-block tile executed its own ``GroupPlan``, served and
+    retained by the lane's ``PlanCache`` (pass ``plan=`` to keep it across
+    calls and iterations)."""
+
+    c: CSR
+    info: Dict[str, float]
+
+
+def spgemm_streamed(
+    a: CSR,
+    b: CSR,
+    *,
+    tile_rows: Optional[int] = None,
+    prefetch: int = 2,
+    method: Optional[Literal["hash", "sort"]] = None,
+    row_chunk: int = 4096,
+    schedule: Literal["grouped", "natural"] = "grouped",
+    engine: Optional[str] = None,
+    gather: executor.Gather = "auto",
+    mesh=None,
+    plan: Optional[PlanCache] = None,
+    pipeline: executor.Pipeline = "two_wave",
+    sizing: executor.Sizing = "auto",
+    autotune: Optional[executor.AutotuneCache] = None,
+    operands: executor.Operands = "auto",
+    operand_cache: Optional[executor.OperandCache] = None,
+) -> SpGEMMStreamResult:
+    """C = A @ B out-of-core: stream A through the pipeline in row-block
+    tiles instead of allocating the whole product's working set at once.
+
+    A is sliced into ``tile_rows`` row blocks on the host; each tile is
+    staged host→device asynchronously, planned through the fingerprint-
+    keyed ``PlanCache`` (tile patterns repeat across MCL/GNN iterations,
+    so planning amortizes exactly like the monolithic ``plan=`` path), run
+    through the same compiled pipeline, and merged back on the host by the
+    sharded epilogue's destination-mapped segment scatter — a tile is just
+    another segment.  The merged result is **bit-identical** to
+    ``spgemm`` for every engine × gather × pipeline combination; what
+    changes is the memory envelope: the device holds only B, ``prefetch``
+    staged tiles of A, and one tile's intermediates at a time (see
+    docs/streaming.md for the peak-bytes model), which is how a graph
+    whose monolithic plan exceeds ``executor.set_device_budget`` still
+    completes.
+
+    ``tile_rows`` (default ``executor.DEFAULT_TILE_ROWS``) sets the tile
+    height; ``tile_rows >= n_rows(A)`` collapses to a single monolithic
+    tile.  ``prefetch`` (default 2: double buffering) bounds the tiles in
+    flight — tile *k+1*'s H2D transfer overlaps tile *k*'s compute, and
+    ``cache_stats()['prefetch_overlap_hits']`` counts the overlaps
+    actually achieved (``tiles_streamed`` / ``tile_bytes_h2d`` accumulate
+    alongside).  ``plan`` must be a ``PlanCache`` (or None for a
+    call-local one): the lane plans per tile, so a single ``GroupPlan``
+    cannot apply.  Every other knob means exactly what it means for
+    ``spgemm``, applied per tile.
+    """
+    assert a.n_cols == b.n_rows, (a.shape, b.shape)
+    engine = executor.resolve_engine(engine, method)
+    # validate the streaming knobs at entry, like every other knob
+    executor.resolve_tile_rows(tile_rows)
+    executor.resolve_prefetch(prefetch)
+    if plan is not None and not isinstance(plan, PlanCache):
+        raise TypeError(
+            "spgemm_streamed plans per tile, so plan= must be a PlanCache "
+            f"(or None for a call-local cache); got {type(plan)!r}")
+    c, nnz, stream = executor.execute_plan_streamed(
+        a, b, tile_rows=tile_rows, prefetch=prefetch, plan=plan,
+        engine=engine, gather=gather, row_chunk=row_chunk,
+        schedule=schedule, mesh=mesh, pipeline=pipeline, sizing=sizing,
+        autotune=autotune, operands=operands, operand_cache=operand_cache,
+    )
+    total_ip = stream["total_ip"]
+    info = {
+        "n_shards": 1 if mesh is None else int(np.prod(
+            np.asarray(mesh.devices).shape)),
+        "nnz_a": int(np.asarray(a.nnz)),
+        "nnz_b": int(np.asarray(b.nnz)),
+        "nnz_c": int(nnz),
+        "intermediate_products": int(total_ip),
+        "flops": 2.0 * total_ip,
+        "compression_ratio": float(total_ip) / max(nnz, 1),
+        **stream,
+    }
+    return SpGEMMStreamResult(c=c, info=info)
+
+
+# ---------------------------------------------------------------------------
 # Batched SpGEMM over same-pattern operands
 # ---------------------------------------------------------------------------
 

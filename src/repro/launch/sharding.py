@@ -143,6 +143,22 @@ def place_operand_block(b_idx, b_val, rows, device):
             replicate_to(jnp.asarray(remap), device))
 
 
+def stage_tile(arrays, device):
+    """Stage one streamed A-tile's operand arrays host→device.
+
+    ``jax.device_put`` is an asynchronous transfer, so staging tile *k+1*
+    while tile *k*'s programs are still executing overlaps the H2D copy
+    with compute — the streamed executor's double buffering
+    (``prefetch=``).  Under a mesh the tile lands on the merge/lead shard
+    device and the per-tile ``execute_plan`` fans it out device-to-device
+    like any other A operand; ``device=None`` (no mesh) targets the
+    default device.  Returns the placed arrays in input order.
+    """
+    if device is None:
+        return tuple(jax.device_put(x) for x in arrays)
+    return tuple(jax.device_put(x, device) for x in arrays)
+
+
 def row_sharding(mesh, ndim: int = 2):
     """NamedSharding splitting dim 0 (rows) over the mesh's first axis,
     replicating the rest — the layout for SpMM outputs and CSR row work."""

@@ -266,6 +266,68 @@ def test_assert_ci_main_serve_gate_flag(tmp_path):
                            "--serve-tolerance", "10.0"]) == 0
 
 
+def _good_stream_doc():
+    return _doc(
+        records={"ci_selfprod_streamed": 220.0,
+                 "ci_selfprod_stream_mono": 100.0},
+        stream_probe={"bit_exact": True,
+                      "streamed_record": "ci_selfprod_streamed",
+                      "monolithic_record": "ci_selfprod_stream_mono",
+                      "tiles_streamed": 4, "tile_bytes_h2d": 123456,
+                      "prefetch_overlap_hits": 3},
+    )
+
+
+def test_assert_ci_stream_gate_passes_good_doc():
+    assert assert_ci.check_stream_gate(_good_stream_doc()) == []
+
+
+def test_assert_ci_stream_gate_requires_bit_exactness():
+    doc = _good_stream_doc()
+    doc["meta"]["stream_probe"]["bit_exact"] = False
+    assert any("diverged" in e for e in assert_ci.check_stream_gate(doc))
+
+
+def test_assert_ci_stream_gate_overhead_tolerance():
+    doc = _good_stream_doc()
+    doc["records"][0]["us"] = 300.0  # 3x the monolithic 100us
+    assert any("exceeded" in e for e in assert_ci.check_stream_gate(doc))
+    assert assert_ci.check_stream_gate(doc, tolerance=4.0) == []
+
+
+def test_assert_ci_stream_gate_requires_real_tiling():
+    doc = _good_stream_doc()
+    doc["meta"]["stream_probe"]["tiles_streamed"] = 1
+    assert any("tile" in e for e in assert_ci.check_stream_gate(doc))
+    doc = _good_stream_doc()
+    doc["meta"]["stream_probe"]["prefetch_overlap_hits"] = 0
+    assert any("overlap" in e for e in assert_ci.check_stream_gate(doc))
+    doc = _good_stream_doc()
+    doc["meta"]["stream_probe"]["tile_bytes_h2d"] = 0
+    assert any("host-to-device" in e
+               for e in assert_ci.check_stream_gate(doc))
+
+
+def test_assert_ci_stream_gate_missing_probe_and_records():
+    assert assert_ci.check_stream_gate(_doc()) == ["stream_probe meta "
+                                                   "missing"]
+    doc = _good_stream_doc()
+    doc["records"] = []
+    assert any("missing" in e for e in assert_ci.check_stream_gate(doc))
+
+
+def test_assert_ci_main_stream_gate_flag(tmp_path):
+    art = tmp_path / "BENCH_ci.json"
+    art.write_text(json.dumps(_good_stream_doc()))
+    assert assert_ci.main([str(art), "--stream-gate"]) == 0
+    bad = _good_stream_doc()
+    bad["records"][0]["us"] = 5000.0
+    art.write_text(json.dumps(bad))
+    assert assert_ci.main([str(art), "--stream-gate"]) == 1
+    assert assert_ci.main([str(art), "--stream-gate",
+                           "--stream-tolerance", "100.0"]) == 0
+
+
 # ---------------------------------------------------------------------------
 # check_docs: the knobs.md docs-vs-code drift gate.
 # ---------------------------------------------------------------------------

@@ -52,7 +52,8 @@ def test_sharded_train_step_matches_single_device():
             lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs)
         b_sharded = jax.tree.map(
             lambda x: jax.device_put(x, NamedSharding(mesh, P("data", None))), batch)
-        l_sharded = float(jax.jit(lambda p: train_loss(cfg, p, b_sharded, sh))(p_sharded))
+        l_sharded = float(
+            jax.jit(lambda p: train_loss(cfg, p, b_sharded, sh))(p_sharded))
     np.testing.assert_allclose(l_sharded, l_single, rtol=2e-4)
     print("SHARDED OK", l_single, l_sharded)
     """)

@@ -48,8 +48,9 @@ def test_gather_rows_manual_dma(dtype):
 # ---------------------------------------------------------------------------
 
 def _random_bsr(rng, n_brows, n_bcols, bs, avg_blocks):
-    rows = [sorted(rng.choice(n_bcols, size=min(n_bcols, 1 + rng.integers(0, 2 * avg_blocks)),
-                              replace=False).tolist()) for _ in range(n_brows)]
+    rows = [sorted(rng.choice(
+        n_bcols, size=min(n_bcols, 1 + rng.integers(0, 2 * avg_blocks)),
+        replace=False).tolist()) for _ in range(n_brows)]
     rowptr = np.concatenate([[0], np.cumsum([len(r) for r in rows])]).astype(np.int32)
     colidx = np.concatenate(rows).astype(np.int32)
     blocks = rng.standard_normal((len(colidx), bs, bs)).astype(np.float32)

@@ -72,7 +72,8 @@ def test_hash_insert_semantics():
 def test_hash_collision_storm():
     """All keys map to the same slot class: linear probing must resolve."""
     cap = 16
-    keys = jnp.asarray(np.arange(0, 8 * cap, cap, dtype=np.int32))  # 8 colliding keys? varies
+    # 8 colliding keys? varies
+    keys = jnp.asarray(np.arange(0, 8 * cap, cap, dtype=np.int32))
     tab = ht.make_table(cap)
     for k in np.asarray(keys):
         tab = ht.insert(tab, jnp.int32(k), jnp.float32(1.0))
