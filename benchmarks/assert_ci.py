@@ -28,6 +28,12 @@ instead of living untested inside ``ci.yml``:
   (``tiles_streamed`` >= 2) with at least one prefetch/compute overlap,
   and its wall time stayed within ``--stream-tolerance`` of the
   monolithic record.
+* ``--resilience-gate`` — the failure-recovery contract
+  (docs/resilience.md): the chaos probe's forced ``capacity_undersize``
+  fault actually triggered a detect-and-retry that reproduced the
+  measured-sizing result bit-exactly, the clean planned path stayed
+  retry-free AND sync-free, and the over-budget ``on_budget="stream"``
+  run degraded to the streamed lane bit-exactly.
 * ``--autotune`` — engine="auto" within ``--auto-tolerance`` of the best
   single engine, converged runs pure cache hits (zero re-measurement).
 * ``--pipelined-beats-legacy`` — the fused two-wave lane within
@@ -37,7 +43,8 @@ Usage (exactly what ``.github/workflows/ci.yml`` runs)::
 
     python benchmarks/assert_ci.py BENCH_ci.json \
         --plan-hits --batched-beats-looped --sync-budget \
-        --fused-zero-sync --operand-gate --serve-gate --stream-gate
+        --fused-zero-sync --operand-gate --serve-gate --stream-gate \
+        --resilience-gate
     python benchmarks/assert_ci.py BENCH_medium.json \
         --autotune --pipelined-beats-legacy --operand-gate --stream-gate
 """
@@ -196,6 +203,37 @@ def check_stream_gate(doc: dict, tolerance: float = 2.5) -> List[str]:
     return errs
 
 
+def check_resilience_gate(doc: dict) -> List[str]:
+    """Failure-recovery contract: every chaos-probe recovery path fired
+    and reproduced its fault-free reference bit-exactly, and the clean
+    planned fast path paid zero retries and zero blocking syncs."""
+    probe = doc.get("meta", {}).get("resilience_probe")
+    if probe is None:
+        return ["resilience_probe meta missing"]
+    errs = []
+    rec = _records(doc)
+    for name in ("ci_chaos_capacity_retry", "ci_chaos_degraded"):
+        if name not in rec:
+            errs.append(f"chaos record {name!r} missing: {sorted(rec)}")
+    if probe.get("capacity_retries_forced", 0) < 1:
+        errs.append(f"forced capacity_undersize fault did not trigger a "
+                    f"retry: {probe}")
+    if not probe.get("capacity_retry_bit_exact", False):
+        errs.append(f"capacity retry diverged from measured sizing: {probe}")
+    if probe.get("capacity_retries_clean", 99) != 0:
+        errs.append(f"clean planned run paid capacity retries: {probe}")
+    if probe.get("host_syncs_clean", 99) != 0:
+        errs.append(f"clean planned run paid blocking host syncs (the "
+                    f"overflow flag must stay unread): {probe}")
+    if probe.get("budget_degradations", 0) < 1:
+        errs.append(f"over-budget on_budget='stream' run did not degrade "
+                    f"to the streamed lane: {probe}")
+    if not probe.get("degraded_bit_exact", False):
+        errs.append(f"degraded-to-stream MCL diverged from the monolithic "
+                    f"clustering: {probe}")
+    return errs
+
+
 def check_autotune(doc: dict, tolerance: float = 1.5) -> List[str]:
     rec = _records(doc)
     engines = ("sort", "hash", "fused_hash")
@@ -247,6 +285,7 @@ CHECKS = {
     "operand_gate": check_operand_gate,
     "serve_gate": check_serve_gate,
     "stream_gate": check_stream_gate,
+    "resilience_gate": check_resilience_gate,
     "autotune": check_autotune,
     "pipelined_beats_legacy": check_pipelined_beats_legacy,
 }
@@ -285,6 +324,7 @@ def main(argv=None) -> int:
     ap.add_argument("--operand-gate", action="store_true")
     ap.add_argument("--serve-gate", action="store_true")
     ap.add_argument("--stream-gate", action="store_true")
+    ap.add_argument("--resilience-gate", action="store_true")
     ap.add_argument("--autotune", action="store_true")
     ap.add_argument("--pipelined-beats-legacy", action="store_true")
     ap.add_argument("--auto-tolerance", type=float, default=1.5,

@@ -22,7 +22,10 @@ enumerable choice set, so their tables are checked differently: every
 documented row value must survive ``resolve_tile_rows`` /
 ``resolve_prefetch``, and the code defaults (``DEFAULT_TILE_ROWS`` /
 ``DEFAULT_PREFETCH``) must appear among the rows — changing a default
-without re-documenting it fails CI.
+without re-documenting it fails CI.  The serving request knobs
+(``deadline`` / ``retries`` / ``backoff``) are checked the same way
+through the serving layer's resolvers, with ``none`` standing for the
+Python ``None`` default and dotted values parsed as floats.
 
 When an architecture doc is passed as the second argument, its
 ``## Observability`` counter table is compared against the live
@@ -44,7 +47,7 @@ from typing import Dict, List, Set
 
 
 HEADING_RE = re.compile(r"^##\s+`(?P<knob>[a-z_]+)`\s*$")
-ROW_RE = re.compile(r"^\|\s*`(?P<choice>[A-Za-z0-9_]+)`\s*\|")
+ROW_RE = re.compile(r"^\|\s*`(?P<choice>[A-Za-z0-9_.]+)`\s*\|")
 
 
 def parse_knob_tables(text: str) -> Dict[str, Set[str]]:
@@ -82,6 +85,7 @@ def expected_choices() -> Dict[str, Set[str]]:
         "pipeline": set(typing.get_args(executor.Pipeline)),
         "sizing": set(typing.get_args(executor.Sizing)),
         "operands": set(typing.get_args(executor.Operands)),
+        "on_budget": set(typing.get_args(executor.OnBudget)),
         "schedule": {"grouped", "natural"},
     }
 
@@ -109,6 +113,7 @@ def check(text: str) -> List[str]:
         "gather": executor.resolve_gather,
         "operands": executor.resolve_operands,
         "sizing": lambda s: executor.resolve_sizing(s, "sort"),
+        "on_budget": executor.resolve_on_budget,
     }
     for knob, resolve in resolvers.items():
         for choice in sorted(documented.get(knob, ())):
@@ -118,6 +123,7 @@ def check(text: str) -> List[str]:
                 errs.append(f"`{knob}` documents {choice!r} but the "
                             f"resolver rejects it: {e}")
     errs.extend(check_stream_knobs(documented))
+    errs.extend(check_serve_knobs(documented))
     return errs
 
 
@@ -148,6 +154,48 @@ def check_stream_knobs(documented: Dict[str, Set[str]]) -> List[str]:
         if default not in values:
             errs.append(f"`{knob}` table does not document the code "
                         f"default {default}")
+    return errs
+
+
+def _parse_serve_value(choice: str):
+    """A serving-knob doc row value: ``none`` → None, dotted → float,
+    else int."""
+    if choice == "none":
+        return None
+    if "." in choice:
+        return float(choice)
+    return int(choice)
+
+
+def check_serve_knobs(documented: Dict[str, Set[str]]) -> List[str]:
+    """Serving request knob tables (``deadline``/``retries``/``backoff``):
+    every documented row value must survive its resolver, and the code
+    default must be documented (``none`` stands for ``None``)."""
+    from repro.serve import spgemm_service as svc
+
+    specs = {
+        "deadline": (svc.resolve_deadline, None),
+        "retries": (svc.resolve_retries, 0),
+        "backoff": (svc.resolve_backoff, svc.DEFAULT_BACKOFF),
+    }
+    errs = []
+    for knob, (resolve, default) in sorted(specs.items()):
+        doc = documented.get(knob)
+        if doc is None:
+            errs.append(f"knobs.md has no table for `{knob}` (a serving "
+                        f"request knob; rows must include the default "
+                        f"{'none' if default is None else default})")
+            continue
+        values = set()
+        for choice in sorted(doc):
+            try:
+                values.add(resolve(_parse_serve_value(choice)))
+            except ValueError as e:
+                errs.append(f"`{knob}` documents {choice!r} but the "
+                            f"resolver rejects it: {e}")
+        if default not in values:
+            errs.append(f"`{knob}` table does not document the code "
+                        f"default {'none' if default is None else default}")
     return errs
 
 

@@ -53,6 +53,14 @@ Operand placement: under ``--devices >= 2`` both smoke tiers append an
 B-side bytes/rows actually placed on shard devices in each mode so CI can
 gate footprint bytes strictly below replicated bytes from the artifact
 alone (``benchmarks/assert_ci.py --operand-gate``).
+
+Resilience: the CI smoke runs a chaos probe (docs/resilience.md) — a
+forced ``capacity_undersize`` fault through the fused planned lane, a
+clean planned run, and an over-budget MCL expansion through the
+``on_budget="stream"`` degradation — emitting ``ci_chaos_capacity_retry``
+/ ``ci_chaos_degraded`` records plus a ``resilience_probe`` meta dict
+(retry counter deltas, bit-exactness verdicts, clean-path sync/retry
+counts) gated by ``assert_ci.py --resilience-gate``.
 """
 from __future__ import annotations
 
@@ -88,6 +96,12 @@ SERVE_PROBE: dict = {}
 # H2D-bytes / prefetch-overlap counter deltas, so CI can gate the
 # out-of-core contract from the artifact alone (assert_ci --stream-gate).
 STREAM_PROBE: dict = {}
+# Filled by the CI smoke's chaos probe (docs/resilience.md): a forced
+# capacity_undersize fault and an over-budget on_budget="stream" MCL,
+# recording retry/degradation counter deltas, bit-exactness verdicts, and
+# the clean planned path's sync/retry counts, so CI can gate every
+# recovery path from the artifact alone (assert_ci --resilience-gate).
+RESILIENCE_PROBE: dict = {}
 
 
 def _emit(name, us, derived):
@@ -217,6 +231,89 @@ def _stream_probe(mesh, a, prefix: str, tile_rows: int,
           f"bit_exact={int(bit_exact)};overlap={deltas['prefetch_overlap_hits']}")
     _emit(mono_name, best_m * 1e6,
           f"nnz_c={res_m.info['nnz_c']};shards={res_m.info['n_shards']}")
+
+
+def _resilience_probe(mesh, a) -> None:
+    """Chaos probe: force every executor recovery path and record that it
+    recovered (docs/resilience.md).
+
+    Three measurements on the CI smoke graph: (1) a ``capacity_undersize``
+    fault through the fused planned lane — the device-side overflow flag
+    must trip, the call must re-execute at measured capacity, and the
+    result must be bit-exact vs ``sizing="measured"``; (2) a clean planned
+    run — zero ``capacity_retries`` and zero blocking host syncs, the
+    fast-path contract the retry machinery must not erode; (3) a
+    self-product whose monolithic estimate exceeds a deliberately halved
+    device budget, run through ``on_budget="stream"`` — the degradation
+    must re-route to the streamed lane and match the un-budgeted product
+    bit-exactly (integer-valued graph, so engines agree to the bit).
+    Emits ``ci_chaos_capacity_retry`` / ``ci_chaos_degraded`` records and
+    fills ``RESILIENCE_PROBE`` for ``assert_ci.py --resilience-gate``.
+    """
+    import jax
+    import numpy as np
+    from repro.core import executor, faults
+    from repro.core.spgemm import spgemm
+    from repro.sparse.formats import csr_to_dense
+
+    # --- forced capacity undersize through the fused planned lane ---
+    ref = spgemm(a, a, engine="fused_hash", mesh=mesh, sizing="measured")
+    dref = csr_to_dense(ref.c)
+    r0 = executor.cache_stats()["capacity_retries"]
+    t0 = time.perf_counter()
+    with faults.fault_injection("capacity_undersize"):
+        res = spgemm(a, a, engine="fused_hash", mesh=mesh)
+        jax.block_until_ready(res.c)
+    retry_s = time.perf_counter() - t0
+    retries_forced = executor.cache_stats()["capacity_retries"] - r0
+    retry_bit_exact = bool(np.array_equal(csr_to_dense(res.c), dref))
+
+    # --- clean planned run: the fast path must stay sync- and retry-free
+    spgemm(a, a, engine="fused_hash", mesh=mesh)  # warm
+    r0 = executor.cache_stats()["capacity_retries"]
+    s0 = executor.cache_stats()["host_sync_count"]
+    clean = spgemm(a, a, engine="fused_hash", mesh=mesh)
+    jax.block_until_ready(clean.c)
+    retries_clean = executor.cache_stats()["capacity_retries"] - r0
+    syncs_clean = executor.cache_stats()["host_sync_count"] - s0
+
+    _emit("ci_chaos_capacity_retry", retry_s * 1e6,
+          f"retries={retries_forced};bit_exact={int(retry_bit_exact)};"
+          f"clean_retries={retries_clean};clean_syncs={syncs_clean}")
+
+    # --- over-budget call through the on_budget="stream" degradation ---
+    # half the monolithic estimate: the call must degrade to the streamed
+    # lane, while the graph's worst single row still fits a tile easily
+    need = executor.estimated_device_bytes(
+        ref.plan, np.dtype(np.float32).itemsize)
+    budget = need // 2
+    d0 = executor.cache_stats()["budget_degradations"]
+    try:
+        executor.set_device_budget(budget)
+        t0 = time.perf_counter()
+        deg = spgemm(a, a, mesh=mesh, on_budget="stream")
+        jax.block_until_ready(deg.c)
+        degraded_s = time.perf_counter() - t0
+    finally:
+        executor.set_device_budget(None)
+    degradations = executor.cache_stats()["budget_degradations"] - d0
+    degraded_bit_exact = bool(
+        deg.info.get("degraded_to_stream") == 1
+        and np.array_equal(csr_to_dense(deg.c), dref))
+
+    _emit("ci_chaos_degraded", degraded_s * 1e6,
+          f"degradations={degradations};"
+          f"bit_exact={int(degraded_bit_exact)};"
+          f"budget_bytes={budget}")
+
+    RESILIENCE_PROBE.update(
+        capacity_retries_forced=int(retries_forced),
+        capacity_retry_bit_exact=bool(retry_bit_exact),
+        capacity_retries_clean=int(retries_clean),
+        host_syncs_clean=int(syncs_clean),
+        budget_degradations=int(degradations),
+        degraded_bit_exact=bool(degraded_bit_exact),
+    )
 
 
 def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
@@ -390,6 +487,7 @@ def ci_smoke(mesh, batch: int = 0, reuse_plan: bool = False,
 
     _stream_probe(mesh, a, "ci", tile_rows=64)
     _operand_probe(mesh)
+    _resilience_probe(mesh, a)
 
 
 def medium_smoke(mesh, pipeline: str = "two_wave",
@@ -676,6 +774,8 @@ def _write_json(path: str, args) -> None:
         meta["serve_probe"] = dict(SERVE_PROBE)
     if STREAM_PROBE:
         meta["stream_probe"] = dict(STREAM_PROBE)
+    if RESILIENCE_PROBE:
+        meta["resilience_probe"] = dict(RESILIENCE_PROBE)
     with open(path, "w") as f:
         json.dump({"meta": meta, "records": RECORDS}, f, indent=2)
     print(f"wrote {len(RECORDS)} records to {path}", file=sys.stderr)

@@ -91,6 +91,7 @@ def mcl(
     sizing: str = "auto",
     stream: int = None,
     prefetch: int = 2,
+    on_budget: str = "error",
 ) -> MCLResult:
     """Algorithm 6.  ``e=2`` expansion = one SpGEMM self-product per iter.
 
@@ -121,9 +122,15 @@ def mcl(
     to end.  ``reuse_plan`` then caches *tile* plans: once the support
     stabilizes, every tile of every further expansion is a plan hit.
     ``stream=None`` (default) keeps the monolithic expansion.
+    ``on_budget="stream"`` makes monolithic expansions degrade gracefully
+    when an iteration's plan exceeds ``executor.set_device_budget``: that
+    expansion re-routes through the streamed lane with auto-derived
+    ``tile_rows`` (bit-identical) instead of raising
+    ``DeviceBudgetExceeded`` — see docs/resilience.md.
     """
     method = executor.resolve_engine(method)
     stream = None if stream is None else executor.resolve_tile_rows(stream)
+    on_budget = executor.resolve_on_budget(on_budget)
     a = add_self_loops(g)
     a = csr_column_normalize(a)
     plan_cache = PlanCache() if reuse_plan else None
@@ -143,7 +150,8 @@ def mcl(
             else:
                 res = spgemm(b, a, engine=method, gather=gather,
                              schedule=schedule, mesh=mesh, plan=plan_cache,
-                             pipeline=pipeline, sizing=sizing)
+                             pipeline=pipeline, sizing=sizing,
+                             on_budget=on_budget)
             infos.append(res.info)
             b = res.c
         # Prune: drop < theta, keep top-k per column

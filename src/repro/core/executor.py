@@ -159,11 +159,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import phases
+from repro.core import faults, phases
 from repro.core.grouping import GroupPlan, group_rows, support_footprint
 from repro.launch.sharding import (
-    merge_device, place_operand_block, replicate_to, shard_devices,
-    stage_tile)
+    SHARDING_STATS, merge_device, place_operand_block, replicate_to,
+    shard_devices, stage_tile)
 from repro.sparse.formats import CSR, ELL, csr_to_ell
 
 Gather = Literal["auto", "xla", "aia"]
@@ -171,6 +171,7 @@ Schedule = Literal["grouped", "natural"]
 Pipeline = Literal["two_wave", "legacy"]
 Sizing = Literal["auto", "planned", "measured"]
 Operands = Literal["auto", "footprint", "replicate"]
+OnBudget = Literal["error", "stream"]
 
 # A shard whose B-row footprint covers at least this fraction of B's rows
 # takes the full-replication fast path under ``operands="auto"``: the
@@ -289,6 +290,65 @@ def estimated_device_bytes(plan: "GroupPlan", itemsize: int) -> int:
     so it shrinks roughly linearly with ``tile_rows``.
     """
     return int(plan.total_ip) * (4 + int(itemsize))
+
+
+def resolve_on_budget(on_budget: OnBudget) -> str:
+    """Validate the ``on_budget=`` over-budget policy (docs/resilience.md).
+
+    Chooses what a monolithic ``spgemm``/``mcl`` call does when
+    ``estimated_device_bytes`` of its plan exceeds ``set_device_budget``:
+    ``"error"`` (default, the compatible behaviour) raises
+    ``DeviceBudgetExceeded``; ``"stream"`` degrades gracefully — the call
+    transparently re-runs through ``spgemm_streamed`` with ``tile_rows``
+    derived so every tile fits the budget, bit-identical to the
+    monolithic result.  With no budget configured the knob is inert.
+    """
+    if on_budget not in ("error", "stream"):
+        raise ValueError(
+            f"unknown on_budget policy {on_budget!r}; valid choices: "
+            "'error', 'stream'")
+    return on_budget
+
+
+def derive_degradation_tile_rows(plan: "GroupPlan", n_rows: int,
+                                 itemsize: int) -> int:
+    """Largest pow2 ``tile_rows`` whose worst row-block tile fits the budget.
+
+    The ``on_budget="stream"`` degradation path needs a ``tile_rows`` such
+    that *every* contiguous row-block tile's intermediate-product estimate
+    (same memory model as ``estimated_device_bytes``, applied to the
+    tile's rows) stays within ``set_device_budget``.  Starting from
+    ``n_rows`` and halving, the first size whose worst tile fits wins —
+    the fewest tiles, hence the least streaming overhead.  Raises
+    ``DeviceBudgetExceeded`` when even a single row exceeds the budget
+    (no tiling can help), ``ValueError`` with no budget configured.
+    """
+    budget = _DEVICE_BUDGET["bytes"]
+    if budget is None:
+        raise ValueError(
+            "derive_degradation_tile_rows needs a device budget; call "
+            "set_device_budget first")
+    row_bytes = np.asarray(plan.row_ip, dtype=np.int64) * (4 + int(itemsize))
+    if row_bytes.size != n_rows:
+        raise ValueError(
+            f"plan has {row_bytes.size} row_ip entries but n_rows={n_rows}")
+    worst_row = int(row_bytes.max()) if row_bytes.size else 0
+    if worst_row > budget:
+        raise DeviceBudgetExceeded(
+            f"a single row's intermediate products need ~{worst_row} device "
+            f"bytes but the configured device budget is {budget}; no "
+            "tile_rows can degrade this call — raise the budget")
+    prefix = np.concatenate(([0], np.cumsum(row_bytes)))
+
+    def worst_tile(t: int) -> int:
+        starts = np.arange(0, n_rows, t)
+        ends = np.minimum(starts + t, n_rows)
+        return int((prefix[ends] - prefix[starts]).max()) if starts.size else 0
+
+    t = max(next_pow2(max(n_rows, 1)), 1)
+    while t > 1 and worst_tile(t) > budget:
+        t //= 2
+    return t
 
 
 # Rows per program dispatch are padded to a multiple of this so repeated
@@ -624,6 +684,15 @@ _AUTOTUNE_STATS = {"autotune_hits": 0, "autotune_misses": 0}
 # buffering actually overlapped with compute (0 whenever ``prefetch=1``).
 _STREAM_STATS = {"tiles_streamed": 0, "tile_bytes_h2d": 0,
                  "prefetch_overlap_hits": 0}
+# Resilience layer (docs/resilience.md): ``capacity_retries`` counts
+# planned/fused chunks whose device-side overflow flag tripped and were
+# re-executed once at measured capacity; ``budget_degradations`` counts
+# monolithic calls that ``on_budget="stream"`` transparently re-routed
+# through the streamed lane.  Both are 0 on every clean path — any nonzero
+# value is a recovery event worth surfacing.  ``sharding_fallbacks`` (owned
+# by launch.sharding to avoid a circular import) counts constrain() calls
+# that degraded to unconstrained placement outside a mesh context.
+_RESILIENCE_STATS = {"capacity_retries": 0, "budget_degradations": 0}
 
 
 def cache_stats() -> Dict[str, int]:
@@ -656,9 +725,18 @@ def cache_stats() -> Dict[str, int]:
     * ``prefetch_overlap_hits`` — streamed tiles whose staging was issued
       while an earlier tile's compute was still in flight (the double
       buffering actually overlapped; 0 under ``prefetch=1``).
+    * ``capacity_retries`` — planned/fused chunks whose device-side
+      overflow flag tripped and were re-executed once at measured
+      capacity (0 on every clean path; see docs/resilience.md).
+    * ``budget_degradations`` — monolithic calls ``on_budget="stream"``
+      transparently re-routed through the streamed lane because their
+      estimate exceeded the device budget.
+    * ``sharding_fallbacks`` — ``constrain()`` calls that degraded to
+      unconstrained placement because no mesh context was active.
     """
     return {**_CACHE_STATS, **_PLAN_STATS, **_SYNC_STATS, **_OPERAND_STATS,
-            **_AUTOTUNE_STATS, **_STREAM_STATS}
+            **_AUTOTUNE_STATS, **_STREAM_STATS, **_RESILIENCE_STATS,
+            **SHARDING_STATS}
 
 
 def clear_program_cache() -> None:
@@ -680,6 +758,10 @@ def clear_program_cache() -> None:
     _AUTOTUNE_STATS["autotune_misses"] = 0
     for k in _STREAM_STATS:
         _STREAM_STATS[k] = 0
+    for k in _RESILIENCE_STATS:
+        _RESILIENCE_STATS[k] = 0
+    for k in SHARDING_STATS:
+        SHARDING_STATS[k] = 0
 
 
 def _coalesced_sync(arrays: Sequence[jax.Array]) -> List[np.ndarray]:
@@ -1935,7 +2017,14 @@ def execute_plan(
     dtype = np.dtype(a.data.dtype)  # no host round-trip: dtype is metadata
     dt = dtype.str
     ocache = operand_cache if operand_cache is not None else _OPERAND_CACHE
-    b_entry = ocache.b_operands(b, kb_cap, devices, footprints=footprints)
+    try:
+        faults.fire("gather_fail")
+        b_entry = ocache.b_operands(b, kb_cap, devices, footprints=footprints)
+    except faults.FaultInjected:
+        # Transient placement failure: B-operand gather/placement is
+        # idempotent (pure function of B + devices), so one re-issue is the
+        # whole recovery (docs/resilience.md).
+        b_entry = ocache.b_operands(b, kb_cap, devices, footprints=footprints)
     a_ops = _shard_a_operands((a.indptr, a.indices, a.data), devices)
     shape = (a.n_rows, b.n_cols)
     if pipeline == "legacy":
@@ -1943,10 +2032,18 @@ def execute_plan(
             items, devices, a_ops, b_entry, n, shape, dtype, dt, kb_cap,
             ncol_cap, gather, engine)
     if mode == "planned":
-        indptr, idx_buf, dat_buf, nnz = _run_planned(
+        indptr, idx_buf, dat_buf, nnz, overflow = _run_planned(
             items, devices, a_ops, b_entry.shards, plan, n, dtype, dt,
             kb_cap, ncol_cap, b.n_cols, gather, engine)
-        return CSR(indptr, idx_buf, dat_buf, shape), nnz
+        if not _capacity_overflow(overflow):
+            return CSR(indptr, idx_buf, dat_buf, shape), nnz
+        # Capacity detect-and-retry (docs/resilience.md): an under-sized
+        # chunk trimmed its cols/vals buffers below the true uniqueCounts,
+        # so the whole planned result is untrustworthy — discard it and
+        # fall through to the measured two-wave path below, which re-sizes
+        # every chunk from its real counts.  A rare miss costs one retry,
+        # never correctness.
+        _RESILIENCE_STATS["capacity_retries"] += 1
 
     # ---- Wave 1: dispatch every chunk's enumerate + allocate, no syncs ----
     pend = []
@@ -2024,6 +2121,11 @@ def _run_planned(items, devices, a_ops, b_ops, plan, n, dtype, dt, kb_cap,
         rmk = b_rm is not None
         padded, rows_j = _chunk_rows_padded(item.rows, dev)
         out_cap = _planned_out_cap(max_u, item.table_cap, ncol_cap)
+        if faults.trigger("capacity_undersize"):
+            # Chaos hook (docs/resilience.md): shrink this chunk's planned
+            # capacity below any real row's uniqueCount so the device-side
+            # overflow flag and the measured-capacity retry are exercised.
+            out_cap = 1
         if eng.fused:
             if batch is None:
                 prog = _get_program(
@@ -2059,6 +2161,18 @@ def _run_planned(items, devices, a_ops, b_ops, plan, n, dtype, dt, kb_cap,
     merge_dev = merge_device(devices)
     indptr, nnz = _device_indptr(runs, n, merge_dev)
 
+    # Device-side capacity-overflow flag: engine counts are TRUE per-row
+    # uniqueCounts (never clipped to out_cap), so ``counts > out_cap``
+    # detects an under-sized chunk whose cols/vals buffers were trimmed.
+    # Computed async here (a handful of scalar reductions, no sync); the
+    # caller decides whether to *read* it — see ``_capacity_overflow``.
+    overflow = None
+    for run in runs:
+        f = replicate_to(
+            jnp.any(run.counts[: len(run.item.rows)] > run.out_cap),
+            merge_dev)
+        overflow = f if overflow is None else jnp.logical_or(overflow, f)
+
     epi = _Epilogue(devices, cap, dtype, dt, batch=batch,
                     seg_caps=_shard_seg_caps(items, len(devices),
                                              [s for _, s in bounds]))
@@ -2070,7 +2184,25 @@ def _run_planned(items, devices, a_ops, b_ops, plan, n, dtype, dt, kb_cap,
         epi.add_chunk(run, _device_chunk_starts(
             indptr_by_dev[dev], run.item.rows, run.padded, dev))
     idx_buf, dat_buf = epi.finish()
-    return indptr, idx_buf, dat_buf, nnz
+    return indptr, idx_buf, dat_buf, nnz, overflow
+
+
+def _capacity_overflow(overflow) -> bool:
+    """Read the planned lane's overflow flag — iff it could have tripped.
+
+    On today's sizing lanes a clean planned call can never overflow:
+    ``_planned_out_cap`` takes a min over terms that each dominate the
+    true uniqueCount (Alg. 1's ``min(IP, ncols)`` bound, the table cap,
+    the column count), so the flag is read **only** while the
+    ``capacity_undersize`` fault point is armed — the clean planned/fused
+    path stays free of blocking host syncs (``host_sync_count == 0``).
+    A future ``sizing="estimated"`` lane (OCEAN, arXiv:2604.19004) sizes
+    from estimates that *can* undershoot; it will read the flag
+    unconditionally and reuse the same measured-capacity retry.
+    """
+    if overflow is None or not faults.armed("capacity_undersize"):
+        return False
+    return bool(np.asarray(overflow))
 
 
 def _execute_plan_legacy(items, devices, a_ops, b_entry, n, shape, dtype, dt,
@@ -2268,9 +2400,14 @@ def execute_plan_batched(
             items, devices, a_shards, b_shards, n, batch, dtype, dt, kb_cap,
             ncol_cap, gather, engine)
     if mode == "planned":
-        return _run_planned(
+        indptr, idx_buf, dat_buf_b, nnz, overflow = _run_planned(
             items, devices, a_shards, b_shards, plan, n, dtype, dt,
             kb_cap, ncol_cap, b.n_cols, gather, engine, batch=batch)
+        if not _capacity_overflow(overflow):
+            return indptr, idx_buf, dat_buf_b, nnz
+        # Same detect-and-retry as execute_plan: discard the under-sized
+        # planned result and fall through to the measured batched waves.
+        _RESILIENCE_STATS["capacity_retries"] += 1
 
     # ---- Wave 1: every chunk's benumerate + allocate, no syncs ----
     pend = []
@@ -2472,7 +2609,14 @@ def execute_plan_streamed(
         lo, hi = int(a_indptr[r0]), int(a_indptr[r1])
         ipt = np.ascontiguousarray(a_indptr[r0:r1 + 1]) - a_indptr[r0]
         idx_h, dat_h = a_indices[lo:hi], a_data[lo:hi]
-        idx_d, dat_d = stage_tile((idx_h, dat_h), stage_dev)
+        try:
+            faults.fire("stage_tile_fail")
+            idx_d, dat_d = stage_tile((idx_h, dat_h), stage_dev)
+        except faults.FaultInjected:
+            # Transient host→device staging failure: staging is idempotent
+            # (pure device_put of host slices), so the tile is simply
+            # re-staged (docs/resilience.md).
+            idx_d, dat_d = stage_tile((idx_h, dat_h), stage_dev)
         _STREAM_STATS["tile_bytes_h2d"] += int(
             ipt.nbytes + idx_h.nbytes + dat_h.nbytes)
         if in_flight:

@@ -1,0 +1,148 @@
+"""Deterministic fault injection for the resilience layer.
+
+A small registry of **named failure points** placed at the real call sites
+the recovery paths protect (``FAULT_POINTS`` below).  Tests and the chaos
+bench probe arm a point with the ``fault_injection(...)`` context manager
+and a deterministic trigger schedule (fail on the Nth hit, a bounded
+number of times), then drive the normal API — the site consults the
+registry, the fault fires exactly where a real failure would, and the
+recovery path (capacity retry, placement/staging retry, batch isolation)
+is exercised end to end instead of being simulated.
+
+Disarmed points cost one dict lookup per consult and can never fire, so
+the hooks are safe to leave in production code paths.
+
+Usage::
+
+    from repro.core import faults
+
+    with faults.fault_injection("capacity_undersize") as fault:
+        res = spgemm(a, a, engine="fused_hash")   # under-sizes one chunk
+    assert fault.triggers == 1                     # ...and recovered
+
+Sites call either ``fire(name)`` (raise ``FaultInjected`` — transient
+failures like a staging or dispatch error) or ``trigger(name)`` (returns
+True — perturbation faults like shrinking a planned capacity, where the
+site corrupts its own state instead of raising).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+
+class FaultInjected(RuntimeError):
+    """The error an armed raise-style fault point throws at its site.
+
+    Recovery code catches exactly this (or the site's natural failure
+    type); tests assert the *recovery*, never the raise itself.
+    """
+
+
+#: Every failure point a site consults, with where it lives.  Arming an
+#: unknown name is a ``ValueError`` — a typo'd chaos test must fail loudly,
+#: not silently test nothing.
+FAULT_POINTS: Dict[str, str] = {
+    "capacity_undersize": (
+        "planned/fused sizing: shrink one chunk's out_cap below its true "
+        "uniqueCount (executor._run_planned) so the device-side overflow "
+        "flag and the measured-capacity retry are exercised"),
+    "gather_fail": (
+        "B-operand placement: fail the gather/placement of B's shard "
+        "buffers once (executor.execute_plan); recovery re-places"),
+    "stage_tile_fail": (
+        "streamed lane: fail one tile's host->device staging "
+        "(executor.execute_plan_streamed); recovery re-stages the tile"),
+    "dispatch_fail": (
+        "serving layer: fail a dispatch (SpGEMMService._dispatch_key); "
+        "recovery replays the micro-batch members individually and "
+        "quarantines a member that fails alone"),
+}
+
+
+@dataclasses.dataclass
+class FaultHandle:
+    """One armed fault point with its deterministic trigger schedule.
+
+    ``on_hit`` is the 1-based hit index of the first trigger; ``times``
+    bounds how many consecutive hits from there trigger (``None`` =
+    every hit from ``on_hit`` on).  ``hits``/``triggers`` are the live
+    counters tests assert on after the context exits.
+    """
+
+    name: str
+    on_hit: int = 1
+    times: Optional[int] = 1
+    hits: int = 0
+    triggers: int = 0
+
+    def consult(self) -> bool:
+        """Record one site hit; True when this hit should fail."""
+        self.hits += 1
+        if self.hits < self.on_hit:
+            return False
+        if self.times is not None and self.triggers >= self.times:
+            return False
+        self.triggers += 1
+        return True
+
+
+_ARMED: Dict[str, FaultHandle] = {}
+
+
+def _validate(name: str) -> None:
+    if name not in FAULT_POINTS:
+        raise ValueError(
+            f"unknown fault point {name!r}; registered points: "
+            f"{', '.join(sorted(FAULT_POINTS))}")
+
+
+def armed(name: str) -> bool:
+    """True when ``name`` is currently armed (schedule aside)."""
+    _validate(name)
+    return name in _ARMED
+
+
+def trigger(name: str) -> bool:
+    """Consult a perturbation-style site: True when the armed schedule
+    says this hit fails (the site then corrupts its own state)."""
+    _validate(name)
+    handle = _ARMED.get(name)
+    return handle.consult() if handle is not None else False
+
+
+def fire(name: str) -> None:
+    """Consult a raise-style site: throws ``FaultInjected`` on a
+    scheduled hit, returns silently otherwise."""
+    if trigger(name):
+        raise FaultInjected(
+            f"injected fault at {name!r} (hit {_ARMED[name].hits})")
+
+
+@contextlib.contextmanager
+def fault_injection(name: str, *, on_hit: int = 1,
+                    times: Optional[int] = 1) -> Iterator[FaultHandle]:
+    """Arm fault point ``name`` for the duration of the ``with`` block.
+
+    ``on_hit`` (1-based) delays the first trigger to the Nth site hit;
+    ``times`` bounds the number of triggers (default 1: fail once, then
+    behave — the transient-fault shape; ``None`` = fail every hit).
+    Yields the live ``FaultHandle`` so the caller can assert
+    ``hits``/``triggers`` afterwards.  Points disarm on exit no matter
+    how the block ends; nesting the same point is an error.
+    """
+    _validate(name)
+    if isinstance(on_hit, bool) or not isinstance(on_hit, int) or on_hit < 1:
+        raise ValueError(f"on_hit must be an int >= 1; got {on_hit!r}")
+    if times is not None and (isinstance(times, bool)
+                              or not isinstance(times, int) or times < 1):
+        raise ValueError(f"times must be None or an int >= 1; got {times!r}")
+    if name in _ARMED:
+        raise RuntimeError(f"fault point {name!r} is already armed")
+    handle = FaultHandle(name=name, on_hit=on_hit, times=times)
+    _ARMED[name] = handle
+    try:
+        yield handle
+    finally:
+        del _ARMED[name]

@@ -93,6 +93,7 @@ def spgemm(
     autotune: Optional[executor.AutotuneCache] = None,
     operands: executor.Operands = "auto",
     operand_cache: Optional[executor.OperandCache] = None,
+    on_budget: executor.OnBudget = "error",
 ) -> SpGEMMResult:
     """C = A @ B via the paper's multi-phase pipeline (plan-compiled).
 
@@ -136,14 +137,33 @@ def spgemm(
     ``operand_cache`` scopes the B-side placement cache (``None`` = the
     executor's module cache); the serving layer passes a per-tenant
     instance so placements are quota'd per tenant.
+    ``on_budget`` picks what happens when the plan's
+    ``estimated_device_bytes`` exceeds ``executor.set_device_budget``:
+    ``"error"`` (default) raises ``DeviceBudgetExceeded``, ``"stream"``
+    degrades gracefully — the call transparently re-routes through
+    ``spgemm_streamed`` with ``tile_rows`` auto-derived so every tile
+    fits the budget, bit-identical to the monolithic result
+    (``cache_stats()['budget_degradations']`` counts the re-routes; see
+    docs/resilience.md).  Inert when no budget is configured.
     """
     assert a.n_cols == b.n_rows, (a.shape, b.shape)
     engine = executor.resolve_engine(engine, method)
+    on_budget = executor.resolve_on_budget(on_budget)
     # ---- Phase 1: row grouping (one host sync, amortized via ``plan``) ----
     plan = _resolve_plan(a, b, plan)
     run_plan = plan
     if schedule == "natural":
         run_plan = executor.ungrouped_plan(plan)
+    budget = executor.device_budget()
+    if on_budget == "stream" and budget is not None:
+        itemsize = np.dtype(np.asarray(a.data).dtype).itemsize
+        if executor.estimated_device_bytes(plan, itemsize) > budget:
+            return _degrade_to_stream(
+                a, b, plan, run_plan, itemsize, method=method,
+                row_chunk=row_chunk, schedule=schedule, engine=engine,
+                gather=gather, mesh=mesh, pipeline=pipeline, sizing=sizing,
+                autotune=autotune, operands=operands,
+                operand_cache=operand_cache)
     # ---- Phases 2+3: compiled group pipeline + device-side reassembly ----
     c, nnz = executor.execute_plan(
         a, b, run_plan, engine=engine, gather=gather, row_chunk=row_chunk,
@@ -170,6 +190,33 @@ def spgemm_info(a: CSR, b: CSR, plan: GroupPlan, nnz_c: int,
         "group_sizes": list(plan.group_sizes),
         "max_ip": plan.max_ip,
     }
+
+
+def _degrade_to_stream(a, b, plan, run_plan, itemsize, *, method, row_chunk,
+                       schedule, engine, gather, mesh, pipeline, sizing,
+                       autotune, operands, operand_cache) -> SpGEMMResult:
+    """``on_budget="stream"``'s graceful-degradation path (docs/resilience.md).
+
+    The monolithic plan's estimate exceeds the device budget, so the call
+    re-routes through ``spgemm_streamed`` with the largest ``tile_rows``
+    whose worst row-block tile still fits (``executor.
+    derive_degradation_tile_rows``) — bit-identical to the monolithic
+    result, just with a tiled memory envelope.  The returned
+    ``SpGEMMResult`` keeps the monolithic ``run_plan`` (it is still the
+    pattern's reusable plan) and marks ``info`` with ``degraded_to_stream``
+    plus the streamed lane's tile counters.
+    """
+    tile_rows = executor.derive_degradation_tile_rows(
+        plan, a.n_rows, itemsize)
+    executor._RESILIENCE_STATS["budget_degradations"] += 1
+    sres = spgemm_streamed(
+        a, b, tile_rows=tile_rows, method=method, row_chunk=row_chunk,
+        schedule=schedule, engine=engine, gather=gather, mesh=mesh,
+        pipeline=pipeline, sizing=sizing, autotune=autotune,
+        operands=operands, operand_cache=operand_cache)
+    info = dict(sres.info)
+    info["degraded_to_stream"] = 1
+    return SpGEMMResult(c=sres.c, plan=run_plan, info=info)
 
 
 # ---------------------------------------------------------------------------

@@ -70,11 +70,29 @@ class Shardings:
         return constrain(x, self.spec("m", "b", "-"))
 
 
+# ``constrain()`` fallback activations, folded into the executor's
+# ``cache_stats()`` (lives here, not in executor.py, because the executor
+# imports from this module — the reverse import would be circular).
+SHARDING_STATS = {"sharding_fallbacks": 0}
+
+
 def constrain(x, spec):
+    """Apply a sharding constraint, degrading to a no-op outside a mesh.
+
+    Only jax's "no mesh context" rejection is the benign single-device
+    case (unit tests on 1 device) — it is counted in
+    ``cache_stats()["sharding_fallbacks"]`` so silent degradation stays
+    observable.  Any other error is a real sharding bug and propagates.
+    """
     try:
         return jax.lax.with_sharding_constraint(x, spec)
-    except (ValueError, RuntimeError):
-        # outside a mesh context (unit tests on 1 device)
+    except (ValueError, RuntimeError) as e:
+        # jax raises RuntimeError ("... requires a non-empty mesh ...") on
+        # current versions, ValueError on some older ones — but always
+        # naming the mesh.  Anything else propagates.
+        if "mesh" not in str(e).lower():
+            raise
+        SHARDING_STATS["sharding_fallbacks"] += 1
         return x
 
 

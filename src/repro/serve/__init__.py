@@ -1,7 +1,8 @@
 """Serving: batched LM decode loop + multi-tenant SpGEMM service."""
 from repro.serve.engine import Request, ServeEngine, greedy_generate
 from repro.serve.spgemm_service import (
-    QueueFull, ServeKnobs, SpGEMMService, Ticket)
+    DeadlineExceeded, QueueFull, ServeKnobs, SpGEMMService, Ticket)
 
 __all__ = ["ServeEngine", "Request", "greedy_generate",
-           "SpGEMMService", "ServeKnobs", "Ticket", "QueueFull"]
+           "SpGEMMService", "ServeKnobs", "Ticket", "QueueFull",
+           "DeadlineExceeded"]

@@ -57,6 +57,7 @@ from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.core import faults
 from repro.core.executor import (
     AutotuneCache, OperandCache, PlanCache, pattern_fingerprint,
     resolve_engine, resolve_gather, resolve_operands)
@@ -68,9 +69,75 @@ class QueueFull(RuntimeError):
     """Raised by ``submit`` when the bounded request queue is at capacity.
 
     The request is *shed*, not queued: the caller decides whether to
-    retry, back off, or drop.  Shed counts surface in
-    ``SpGEMMService.stats()`` (globally and per tenant).
+    retry, back off, or drop — or pass ``submit(..., retries=, backoff=)``
+    to have the service retry with exponential backoff before shedding.
+    Shed counts surface in ``SpGEMMService.stats()`` (globally and per
+    tenant).
     """
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request's ``deadline=`` elapsed before its micro-batch dispatched.
+
+    Raised by ``Ticket.result()`` (the request is expired at dispatch
+    time, never executed) and counted in
+    ``SpGEMMService.stats()['deadline_exceeded']`` — a late answer to a
+    caller that stopped waiting is work the service refuses to do.
+    """
+
+
+# Base backoff (seconds) for submit's shed-retry loop; attempt *k* sleeps
+# ``backoff * 2**k`` through the injectable ``sleep`` hook.
+DEFAULT_BACKOFF = 0.05
+
+
+def resolve_deadline(deadline) -> Optional[float]:
+    """Validate a request's ``deadline=`` (seconds; ``None`` = no deadline).
+
+    The deadline is relative to submit time and enforced at dispatch: a
+    request whose deadline elapsed while queued is expired with
+    ``DeadlineExceeded`` instead of executed.
+    """
+    if deadline is None:
+        return None
+    if isinstance(deadline, bool) or not isinstance(
+            deadline, (int, float, np.integer, np.floating)):
+        raise ValueError(
+            f"deadline must be a positive number of seconds or None; "
+            f"got {deadline!r}")
+    if float(deadline) <= 0:
+        raise ValueError(f"deadline must be > 0 seconds; got {deadline!r}")
+    return float(deadline)
+
+
+def resolve_retries(retries) -> int:
+    """Validate ``submit``'s ``retries=`` (shed-retry attempts; default 0).
+
+    ``0`` (the default) preserves the shed-loudly contract: a full queue
+    raises ``QueueFull`` immediately.  ``k > 0`` lets submit back off and
+    re-poll up to ``k`` times before shedding.
+    """
+    if retries is None:
+        return 0
+    if isinstance(retries, bool) or not isinstance(retries, (int, np.integer)):
+        raise ValueError(f"retries must be an int >= 0; got {retries!r}")
+    if int(retries) < 0:
+        raise ValueError(f"retries must be >= 0; got {int(retries)}")
+    return int(retries)
+
+
+def resolve_backoff(backoff) -> float:
+    """Validate ``submit``'s ``backoff=`` (base seconds; ``None`` = the
+    ``DEFAULT_BACKOFF``).  Retry attempt *k* sleeps ``backoff * 2**k``."""
+    if backoff is None:
+        return DEFAULT_BACKOFF
+    if isinstance(backoff, bool) or not isinstance(
+            backoff, (int, float, np.integer, np.floating)):
+        raise ValueError(
+            f"backoff must be a positive number of seconds; got {backoff!r}")
+    if float(backoff) <= 0:
+        raise ValueError(f"backoff must be > 0 seconds; got {backoff!r}")
+    return float(backoff)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,7 +198,9 @@ class Ticket:
     blocking on a result should not wait out ``max_wait``).  ``done`` is
     True once the batch containing this request has executed;
     ``coalesced_with`` is the number of requests that shared its dispatch
-    (1 = singleton fallback).
+    (1 = singleton fallback).  A request that failed — its ``deadline=``
+    elapsed while queued, or it was quarantined as the poison member of a
+    failed micro-batch — re-raises its recorded error from ``result()``.
     """
 
     tenant_id: str
@@ -139,14 +208,23 @@ class Ticket:
     done: bool = False
     coalesced_with: int = 0
     latency_s: float = -1.0
+    deadline_at: Optional[float] = None
     _result: Optional[SpGEMMResult] = None
+    _error: Optional[Exception] = None
     _service: Optional["SpGEMMService"] = None
     _group_key: Optional[tuple] = None
 
     def result(self) -> SpGEMMResult:
-        """The request's product, dispatching its micro-batch if needed."""
+        """The request's product, dispatching its micro-batch if needed.
+
+        Raises ``DeadlineExceeded`` if the request expired while queued,
+        or the quarantined request's own error if it was the member that
+        failed an isolated replay (docs/resilience.md).
+        """
         if not self.done:
             self._service._dispatch_key(self._group_key)
+        if self._error is not None:
+            raise self._error
         return self._result
 
 
@@ -157,6 +235,7 @@ class _QueuedRequest:
     b: CSR
     ticket: Ticket
     submitted_at: float
+    deadline_at: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -226,6 +305,10 @@ class SpGEMMService:
     clock:
         Injectable time source (seconds, monotonic); tests drive a fake
         clock, production uses ``time.monotonic``.
+    sleep:
+        Injectable sleep used by submit's shed-retry backoff; tests pass
+        a fake that advances the fake clock, production uses
+        ``time.sleep``.
     latency_window:
         How many recent request latencies the p50/p99 estimate keeps.
     """
@@ -235,6 +318,7 @@ class SpGEMMService:
                  tenant_operand_quota: int = 8,
                  tenant_autotune_quota: int = 16,
                  clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep,
                  latency_window: int = 4096):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -246,6 +330,7 @@ class SpGEMMService:
         self._quotas = (tenant_plan_quota, tenant_operand_quota,
                         tenant_autotune_quota)
         self._clock = clock
+        self._sleep = sleep
         self._groups: "OrderedDict[tuple, _PendingGroup]" = OrderedDict()
         self._tenants: Dict[str, _TenantState] = {}
         self._latencies: Deque[float] = deque(maxlen=latency_window)
@@ -256,13 +341,17 @@ class SpGEMMService:
         self._batched_dispatches = 0
         self._singleton_dispatches = 0
         self._coalesced_requests = 0
+        self._deadline_exceeded = 0
+        self._retries = 0
+        self._quarantined = 0
 
     # ------------------------------------------------------------------
     # Request path
     # ------------------------------------------------------------------
 
-    def submit(self, tenant_id: str, a: CSR, b: CSR,
-               **knobs) -> Ticket:
+    def submit(self, tenant_id: str, a: CSR, b: CSR, *,
+               deadline: Optional[float] = None, retries: int = 0,
+               backoff: Optional[float] = None, **knobs) -> Ticket:
         """Enqueue one ``a @ b`` request for ``tenant_id``.
 
         Knobs (``engine=``, ``gather=``, ``sizing=``, ... — see
@@ -273,28 +362,52 @@ class SpGEMMService:
         queue is at capacity.  Overdue groups are flushed on the way in,
         so a steadily-submitting caller honors ``max_wait`` without a
         background thread.
+
+        ``deadline`` (seconds from now, ``None`` = unbounded) expires the
+        request if it is still queued when its micro-batch dispatches:
+        ``result()`` then raises ``DeadlineExceeded`` instead of returning
+        a stale answer.  ``retries``/``backoff`` soften the ``QueueFull``
+        edge: a submit finding the queue full sleeps ``backoff * 2**k``
+        (injectable ``sleep``) and re-polls, up to ``retries`` times,
+        before shedding — each attempt counted in ``stats()['retries']``.
         """
+        deadline_s = resolve_deadline(deadline)
+        n_retries = resolve_retries(retries)
+        backoff_s = resolve_backoff(backoff)
         kn = ServeKnobs(**knobs).validate()
         now = self._clock()
         self.poll(now)
         tenant = self._tenant(tenant_id)
-        if self.queue_depth() >= self.max_queue:
-            self._shed += 1
-            tenant.shed += 1
-            raise QueueFull(
-                f"serving queue at capacity ({self.max_queue} queued "
-                f"requests); request from tenant {tenant_id!r} shed")
+        attempt = 0
+        while self.queue_depth() >= self.max_queue:
+            if attempt >= n_retries:
+                self._shed += 1
+                tenant.shed += 1
+                raise QueueFull(
+                    f"serving queue at capacity ({self.max_queue} queued "
+                    f"requests); request from tenant {tenant_id!r} shed"
+                    + (f" after {attempt} retries" if attempt else ""))
+            # bounded retry-with-backoff: overdue groups may drain on the
+            # re-poll, turning a would-be shed into a served request
+            self._retries += 1
+            self._sleep(backoff_s * (2 ** attempt))
+            attempt += 1
+            now = self._clock()
+            self.poll(now)
         self._submitted += 1
         tenant.submitted += 1
         key = (pattern_fingerprint(a), pattern_fingerprint(b),
                kn.signature())
+        deadline_at = None if deadline_s is None else now + deadline_s
         ticket = Ticket(tenant_id=tenant_id, submitted_at=now,
-                        _service=self, _group_key=key)
+                        deadline_at=deadline_at, _service=self,
+                        _group_key=key)
         group = self._groups.get(key)
         if group is None:
             group = self._groups[key] = _PendingGroup(knobs=kn)
         group.requests.append(
-            _QueuedRequest(tenant_id, a, b, ticket, now))
+            _QueuedRequest(tenant_id, a, b, ticket, now,
+                           deadline_at=deadline_at))
         if len(group.requests) >= self.max_batch:
             self._dispatch_key(key)
         return ticket
@@ -334,11 +447,43 @@ class SpGEMMService:
             st = self._tenants[tenant_id] = _TenantState(*self._quotas)
         return st
 
+    def _run_isolated(self, req: _QueuedRequest, plan, lead: _TenantState,
+                      kwargs: dict):
+        """Execute one request alone; an Exception return means quarantine.
+
+        The batch-isolation replay path: when a coalesced dispatch fails,
+        each member re-runs individually through this, so the poison
+        request collects its own error and every innocent member still
+        completes (docs/resilience.md).
+        """
+        try:
+            faults.fire("dispatch_fail")
+            return spgemm(req.a, req.b, plan=plan, autotune=lead.autotune,
+                          operand_cache=lead.operands, **kwargs)
+        except Exception as e:  # noqa: BLE001 — any member failure isolates
+            return e
+
     def _dispatch_key(self, key: tuple) -> None:
         group = self._groups.pop(key, None)
         if group is None:
             return  # already dispatched (e.g. result() raced a poll)
-        reqs = group.requests
+        now = self._clock()
+        reqs = []
+        for r in group.requests:
+            if r.deadline_at is not None and now > r.deadline_at:
+                # expired while queued: refuse the work, surface the error
+                t = r.ticket
+                t._error = DeadlineExceeded(
+                    f"request from tenant {r.tenant_id!r} queued "
+                    f"{now - r.submitted_at:.3f}s, past its "
+                    f"{r.deadline_at - r.submitted_at:.3f}s deadline")
+                t.done = True
+                t.latency_s = now - r.submitted_at
+                self._deadline_exceeded += 1
+            else:
+                reqs.append(r)
+        if not reqs:
+            return
         lead = self._tenant(reqs[0].tenant_id)
         # Plan once through the lead tenant's cache; every other tenant in
         # the batch accounts the same plan against its own quota without
@@ -356,27 +501,40 @@ class SpGEMMService:
             # Singleton-pattern fallback: no batch to amortize, skip the
             # vmapped value planes entirely.
             self._singleton_dispatches += 1
-            results = [spgemm(a0, b0, plan=plan, autotune=lead.autotune,
-                              operand_cache=lead.operands, **kwargs)]
+            results = [self._run_isolated(reqs[0], plan, lead, kwargs)]
         else:
             self._batched_dispatches += 1
             self._coalesced_requests += len(reqs)
-            batch = spgemm_batched(
-                [r.a for r in reqs], [r.b for r in reqs], plan=plan,
-                autotune=lead.autotune, operand_cache=lead.operands,
-                **kwargs)
-            results = [
-                SpGEMMResult(c=c, plan=batch.plan,
-                             info={**batch.info, "batch": len(reqs)})
-                for c in batch.cs
-            ]
+            try:
+                faults.fire("dispatch_fail")
+                batch = spgemm_batched(
+                    [r.a for r in reqs], [r.b for r in reqs], plan=plan,
+                    autotune=lead.autotune, operand_cache=lead.operands,
+                    **kwargs)
+                results = [
+                    SpGEMMResult(c=c, plan=batch.plan,
+                                 info={**batch.info, "batch": len(reqs)})
+                    for c in batch.cs
+                ]
+            except Exception:  # noqa: BLE001 — isolate, don't fail the batch
+                # Batch-failure isolation: one poison member must never
+                # fail a whole micro-batch.  Replay every member alone;
+                # innocents complete (bit-exact — the per-request loop is
+                # the batched lane's reference), the poison request is
+                # quarantined with its own error.
+                results = [self._run_isolated(r, plan, lead, kwargs)
+                           for r in reqs]
         now = self._clock()
         for req, res in zip(reqs, results):
             t = req.ticket
-            t._result = res
             t.done = True
             t.coalesced_with = len(reqs)
             t.latency_s = now - req.submitted_at
+            if isinstance(res, Exception):
+                t._error = res
+                self._quarantined += 1
+                continue
+            t._result = res
             self._latencies.append(t.latency_s)
             self._completed += 1
             self._tenant(req.tenant_id).completed += 1
@@ -402,6 +560,13 @@ class SpGEMMService:
         * ``latency_p50_ms`` / ``latency_p99_ms`` — percentiles over the
           trailing ``latency_window`` completed requests (queue wait +
           dispatch, by the service clock).
+        * ``deadline_exceeded`` — requests whose ``deadline=`` elapsed
+          while queued (expired at dispatch, never executed).
+        * ``retries`` — shed-retry backoff attempts submit made before
+          queueing or shedding (``submit(..., retries=)``).
+        * ``quarantined`` — requests that failed an isolated replay after
+          a micro-batch dispatch failure and carry their own error
+          (docs/resilience.md).
         * ``tenants`` — ``{tenant_id: per-tenant stats}`` with traffic
           counts, plan hit rates, and cache occupancies (see
           ``_TenantState.stats``).
@@ -425,6 +590,9 @@ class SpGEMMService:
                                    if self._completed else 0.0),
             "latency_p50_ms": p50,
             "latency_p99_ms": p99,
+            "deadline_exceeded": self._deadline_exceeded,
+            "retries": self._retries,
+            "quarantined": self._quarantined,
             "tenants": {tid: st.stats()
                         for tid, st in sorted(self._tenants.items())},
         }

@@ -11,11 +11,14 @@
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Callable, Dict, List, Optional
 
 import jax
 import numpy as np
+
+log = logging.getLogger(__name__)
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.data.pipeline import TokenPipeline
@@ -62,6 +65,10 @@ class Trainer:
         self.monitor = StragglerMonitor()
         self.history: List[Dict[str, float]] = []
         self.restarts = 0
+        # one record per recovered failure: (step, repr(error)) — surfaced
+        # instead of silently discarded, so operators can see what killed
+        # which steps after the run completes
+        self.failures: List[tuple] = []
 
     def _restore_latest(self):
         step = latest_step(self.cfg.checkpoint_dir)
@@ -88,9 +95,17 @@ class Trainer:
                 step += 1
                 if step % self.cfg.checkpoint_every == 0:
                     self.ckpt.save(step, self.state)
-            except Exception:
-                # failure path: restore + replay (deterministic pipeline)
+            except RuntimeError as e:
+                # failure path: restore + replay (deterministic pipeline).
+                # Only RuntimeError is recoverable-by-restart (device loss /
+                # preemption surface as XlaRuntimeError, a RuntimeError
+                # subclass); programming errors (TypeError, ValueError, ...)
+                # propagate immediately instead of burning restarts.
                 self.restarts += 1
+                self.failures.append((step, repr(e)))
+                log.warning(
+                    "step %d failed (%s); restart %d/%d from last checkpoint",
+                    step, e, self.restarts, self.cfg.max_restarts)
                 if self.restarts > self.cfg.max_restarts:
                     raise
                 self.ckpt.wait()

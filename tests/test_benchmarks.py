@@ -328,6 +328,77 @@ def test_assert_ci_main_stream_gate_flag(tmp_path):
                            "--stream-tolerance", "100.0"]) == 0
 
 
+def _good_resilience_doc():
+    return _doc(
+        records={"ci_chaos_capacity_retry": 400.0,
+                 "ci_chaos_degraded": 900.0},
+        resilience_probe={"capacity_retries_forced": 1,
+                          "capacity_retry_bit_exact": True,
+                          "capacity_retries_clean": 0,
+                          "host_syncs_clean": 0,
+                          "budget_degradations": 2,
+                          "degraded_bit_exact": True},
+    )
+
+
+def test_assert_ci_resilience_gate_passes_good_doc():
+    assert assert_ci.check_resilience_gate(_good_resilience_doc()) == []
+
+
+def test_assert_ci_resilience_gate_requires_forced_retry():
+    doc = _good_resilience_doc()
+    doc["meta"]["resilience_probe"]["capacity_retries_forced"] = 0
+    assert any("did not trigger" in e
+               for e in assert_ci.check_resilience_gate(doc))
+
+
+def test_assert_ci_resilience_gate_requires_bit_exact_recovery():
+    doc = _good_resilience_doc()
+    doc["meta"]["resilience_probe"]["capacity_retry_bit_exact"] = False
+    assert any("diverged from measured" in e
+               for e in assert_ci.check_resilience_gate(doc))
+    doc = _good_resilience_doc()
+    doc["meta"]["resilience_probe"]["degraded_bit_exact"] = False
+    assert any("diverged from the monolithic" in e
+               for e in assert_ci.check_resilience_gate(doc))
+
+
+def test_assert_ci_resilience_gate_clean_path_must_stay_free():
+    doc = _good_resilience_doc()
+    doc["meta"]["resilience_probe"]["capacity_retries_clean"] = 1
+    assert any("clean planned run paid capacity retries" in e
+               for e in assert_ci.check_resilience_gate(doc))
+    doc = _good_resilience_doc()
+    doc["meta"]["resilience_probe"]["host_syncs_clean"] = 1
+    assert any("blocking host syncs" in e
+               for e in assert_ci.check_resilience_gate(doc))
+
+
+def test_assert_ci_resilience_gate_requires_degradation():
+    doc = _good_resilience_doc()
+    doc["meta"]["resilience_probe"]["budget_degradations"] = 0
+    assert any("did not degrade" in e
+               for e in assert_ci.check_resilience_gate(doc))
+
+
+def test_assert_ci_resilience_gate_missing_probe_and_records():
+    assert assert_ci.check_resilience_gate(_doc()) == [
+        "resilience_probe meta missing"]
+    doc = _good_resilience_doc()
+    doc["records"] = []
+    assert any("missing" in e for e in assert_ci.check_resilience_gate(doc))
+
+
+def test_assert_ci_main_resilience_gate_flag(tmp_path):
+    art = tmp_path / "BENCH_ci.json"
+    art.write_text(json.dumps(_good_resilience_doc()))
+    assert assert_ci.main([str(art), "--resilience-gate"]) == 0
+    bad = _good_resilience_doc()
+    bad["meta"]["resilience_probe"]["capacity_retry_bit_exact"] = False
+    art.write_text(json.dumps(bad))
+    assert assert_ci.main([str(art), "--resilience-gate"]) == 1
+
+
 # ---------------------------------------------------------------------------
 # check_docs: the knobs.md docs-vs-code drift gate.
 # ---------------------------------------------------------------------------

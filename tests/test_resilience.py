@@ -1,0 +1,467 @@
+"""The resilient-execution layer (docs/resilience.md).
+
+Coverage mirrors the layer's contract:
+
+* **Fault harness** — ``fault_injection`` arms named points with
+  deterministic Nth-hit/`times` schedules, disarms on exit (even on
+  error), and rejects unknown points, double-arming, and bad schedules.
+* **Capacity detect-and-retry** — a forced ``capacity_undersize`` fault
+  through the planned/fused lane trips the device-side overflow flag,
+  discards the trimmed result, and re-executes at measured capacity
+  **bit-exactly** (single and batched lanes); the clean planned path
+  pays zero retries AND zero blocking host syncs (the flag stays
+  unread).
+* **Graceful degradation** — ``on_budget="stream"`` re-routes an
+  over-budget monolithic call through ``spgemm_streamed`` with derived
+  ``tile_rows``, bit-identical; under budget it is inert; a single row
+  beyond the budget still raises ``DeviceBudgetExceeded``; ``mcl``
+  threads the knob.
+* **Transient-site recovery** — ``gather_fail`` / ``stage_tile_fail``
+  faults are absorbed by one idempotent re-issue, results bit-exact.
+* **Serving robustness** — per-request deadlines expire queued work with
+  ``DeadlineExceeded``, shed submits retry with exponential backoff
+  through the injectable ``sleep``, and a poisoned micro-batch replays
+  per member: innocents complete bit-exactly, the poison request is
+  quarantined with its own error.
+* **Satellites** — the int32 nnz-capacity boundary, the budget error
+  naming ``total_ip``, ``constrain``'s counted no-mesh fallback, and the
+  trainer's narrowed recovery (RuntimeError restarts, TypeError
+  propagates, failures recorded).
+"""
+import numpy as np
+import pytest
+
+from repro.core import executor, faults
+from repro.core.spgemm import spgemm, spgemm_batched
+from repro.sparse.formats import csr_from_dense
+
+
+def int_sparse(rng, n, m, density=0.3):
+    """Small-integer sparse block — float32-exact products."""
+    x = rng.integers(-4, 5, (n, m)).astype(np.float32)
+    mask = rng.random((n, m)) < density
+    return np.where(mask, x, 0.0).astype(np.float32)
+
+
+def _pair(seed=7, n=96, k=64, m=80, density=0.25):
+    rng = np.random.default_rng(seed)
+    a = csr_from_dense(int_sparse(rng, n, k, density))
+    b = csr_from_dense(int_sparse(rng, k, m, density))
+    return a, b
+
+
+@pytest.fixture(autouse=True)
+def _clean_state():
+    executor.clear_program_cache()
+    executor.set_device_budget(None)
+    yield
+    executor.set_device_budget(None)
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection harness semantics
+# ---------------------------------------------------------------------------
+
+def test_fault_registry_names_and_validation():
+    with pytest.raises(ValueError, match="unknown fault point"):
+        with faults.fault_injection("no_such_point"):
+            pass
+    for bad in (0, -1, 1.5, True):
+        with pytest.raises(ValueError):
+            with faults.fault_injection("gather_fail", on_hit=bad):
+                pass
+    with pytest.raises(ValueError):
+        with faults.fault_injection("gather_fail", times=0):
+            pass
+
+
+def test_fault_nth_hit_schedule_and_exhaustion():
+    with faults.fault_injection("gather_fail", on_hit=2, times=2):
+        assert not faults.trigger("gather_fail")   # hit 1: before on_hit
+        assert faults.trigger("gather_fail")       # hit 2: fires
+        assert faults.trigger("gather_fail")       # hit 3: times=2
+        assert not faults.trigger("gather_fail")   # exhausted
+    assert not faults.armed("gather_fail")
+    assert not faults.trigger("gather_fail")       # disarmed = never fires
+
+
+def test_fault_fire_raises_and_disarms_on_error():
+    with pytest.raises(faults.FaultInjected):
+        with faults.fault_injection("gather_fail"):
+            faults.fire("gather_fail")
+    assert not faults.armed("gather_fail")
+
+
+def test_fault_double_arm_rejected():
+    with faults.fault_injection("gather_fail"):
+        with pytest.raises(RuntimeError, match="already armed"):
+            with faults.fault_injection("gather_fail"):
+                pass
+        # the rejected inner arm must not have disarmed the outer one
+        assert faults.armed("gather_fail")
+    assert not faults.armed("gather_fail")
+
+
+# ---------------------------------------------------------------------------
+# Capacity detect-and-retry (planned/fused lane)
+# ---------------------------------------------------------------------------
+
+def assert_bit_exact(c_got, c_ref):
+    ipt_g, ipt_r = np.asarray(c_got.indptr), np.asarray(c_ref.indptr)
+    np.testing.assert_array_equal(ipt_g, ipt_r)
+    nnz = int(ipt_r[-1])
+    np.testing.assert_array_equal(np.asarray(c_got.indices)[:nnz],
+                                  np.asarray(c_ref.indices)[:nnz])
+    np.testing.assert_array_equal(np.asarray(c_got.data)[:nnz],
+                                  np.asarray(c_ref.data)[:nnz])
+
+
+def test_capacity_retry_bit_exact_vs_measured():
+    a, b = _pair()
+    ref = spgemm(a, b, engine="fused_hash", sizing="measured")
+    r0 = executor.cache_stats()["capacity_retries"]
+    with faults.fault_injection("capacity_undersize"):
+        res = spgemm(a, b, engine="fused_hash", sizing="planned")
+    assert executor.cache_stats()["capacity_retries"] - r0 == 1
+    assert_bit_exact(res.c, ref.c)
+
+
+def test_capacity_clean_path_no_retries_no_syncs():
+    a, b = _pair()
+    spgemm(a, b, engine="fused_hash", sizing="planned")  # warm caches
+    r0 = executor.cache_stats()["capacity_retries"]
+    s0 = executor.cache_stats()["host_sync_count"]
+    res = spgemm(a, b, engine="fused_hash", sizing="planned")
+    assert executor.cache_stats()["capacity_retries"] - r0 == 0
+    assert executor.cache_stats()["host_sync_count"] - s0 == 0
+    ref = spgemm(a, b, engine="fused_hash", sizing="measured")
+    assert_bit_exact(res.c, ref.c)
+
+
+def test_capacity_retry_batched_lane_bit_exact():
+    rng = np.random.default_rng(11)
+    mask = rng.random((72, 72)) < 0.2
+    bs = []
+    for i in range(3):
+        # values strictly nonzero so every member keeps the shared pattern
+        vals = rng.integers(1, 5, mask.shape).astype(np.float32)
+        bs.append(csr_from_dense(np.where(mask, vals, 0.0)))
+    refs = [spgemm(bm, bm, engine="fused_hash", sizing="measured").c
+            for bm in bs]
+    r0 = executor.cache_stats()["capacity_retries"]
+    with faults.fault_injection("capacity_undersize"):
+        res = spgemm_batched(bs, bs, engine="fused_hash", sizing="planned")
+    assert executor.cache_stats()["capacity_retries"] - r0 == 1
+    for got, ref in zip(res.cs, refs):
+        assert_bit_exact(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# on_budget graceful degradation
+# ---------------------------------------------------------------------------
+
+def test_resolve_on_budget_validates():
+    assert executor.resolve_on_budget("error") == "error"
+    assert executor.resolve_on_budget("stream") == "stream"
+    with pytest.raises(ValueError, match="on_budget"):
+        executor.resolve_on_budget("retry")
+    a, b = _pair()
+    with pytest.raises(ValueError, match="on_budget"):
+        spgemm(a, b, on_budget="explode")
+
+
+def test_on_budget_stream_degrades_bit_exact():
+    a, b = _pair(n=128)
+    ref = spgemm(a, b)
+    need = executor.estimated_device_bytes(
+        ref.plan, np.dtype(np.float32).itemsize)
+    with pytest.raises(executor.DeviceBudgetExceeded):
+        executor.set_device_budget(need // 3)
+        spgemm(a, b)  # default on_budget="error" keeps the old contract
+    d0 = executor.cache_stats()["budget_degradations"]
+    res = spgemm(a, b, on_budget="stream")
+    assert executor.cache_stats()["budget_degradations"] - d0 == 1
+    assert res.info["degraded_to_stream"] == 1
+    assert res.info["n_tiles"] > 1
+    assert_bit_exact(res.c, ref.c)
+
+
+def test_on_budget_stream_inert_under_budget():
+    a, b = _pair()
+    ref = spgemm(a, b)
+    need = executor.estimated_device_bytes(
+        ref.plan, np.dtype(np.float32).itemsize)
+    executor.set_device_budget(need * 2)
+    d0 = executor.cache_stats()["budget_degradations"]
+    res = spgemm(a, b, on_budget="stream")
+    assert executor.cache_stats()["budget_degradations"] - d0 == 0
+    assert "degraded_to_stream" not in res.info
+    assert_bit_exact(res.c, ref.c)
+
+
+def test_degradation_tile_rows_single_row_too_big_raises():
+    a, b = _pair()
+    plan = spgemm(a, b).plan
+    executor.set_device_budget(1)  # below any row's estimate
+    with pytest.raises(executor.DeviceBudgetExceeded, match="single row"):
+        executor.derive_degradation_tile_rows(plan, a.n_rows, 4)
+    executor.set_device_budget(None)
+    with pytest.raises(ValueError, match="budget"):
+        executor.derive_degradation_tile_rows(plan, a.n_rows, 4)
+
+
+def test_mcl_threads_on_budget():
+    from repro.apps.markov_clustering import mcl
+    rng = np.random.default_rng(5)
+    g = csr_from_dense(np.where(rng.random((64, 64)) < 0.08,
+                                rng.integers(1, 5, (64, 64)), 0)
+                       .astype(np.float32))
+    mref = mcl(g, e=2, max_iters=2, tol=0.0)
+    lo = max(i["max_ip"] for i in mref.spgemm_info) * 8
+    hi = min(i["intermediate_products"] for i in mref.spgemm_info) * 8
+    assert lo < hi, "graph too small to separate worst-row from total"
+    executor.set_device_budget((lo + hi) // 2)
+    with pytest.raises(executor.DeviceBudgetExceeded):
+        mcl(g, e=2, max_iters=2, tol=0.0)
+    d0 = executor.cache_stats()["budget_degradations"]
+    mdeg = mcl(g, e=2, max_iters=2, tol=0.0, on_budget="stream")
+    assert executor.cache_stats()["budget_degradations"] - d0 >= 1
+    assert_bit_exact(mdeg.matrix, mref.matrix)
+    np.testing.assert_array_equal(mdeg.clusters, mref.clusters)
+    with pytest.raises(ValueError, match="on_budget"):
+        mcl(g, on_budget="panic")
+
+
+# ---------------------------------------------------------------------------
+# Transient-site recovery: gather + tile staging
+# ---------------------------------------------------------------------------
+
+def test_gather_fail_recovered_bit_exact():
+    a, b = _pair(seed=9)
+    ref = spgemm(a, b)
+    with faults.fault_injection("gather_fail"):
+        res = spgemm(a, b)
+    assert_bit_exact(res.c, ref.c)
+
+
+def test_stage_tile_fail_recovered_bit_exact():
+    from repro.core.spgemm import spgemm_streamed
+    a, b = _pair(seed=13, n=128)
+    ref = spgemm(a, b)
+    with faults.fault_injection("stage_tile_fail", on_hit=2):
+        res = spgemm_streamed(a, b, tile_rows=32)
+    assert_bit_exact(res.c, ref.c)
+
+
+# ---------------------------------------------------------------------------
+# int32 capacity boundary + budget error detail (satellites)
+# ---------------------------------------------------------------------------
+
+def test_int32_nnz_capacity_boundaries():
+    assert executor._int32_nnz_capacity(0) == 1
+    assert executor._int32_nnz_capacity(5) == 8
+    cap = executor._int32_nnz_capacity(executor._INT32_MAX)
+    assert cap == executor._INT32_MAX  # pow2 would overflow; exact fit
+    with pytest.raises(OverflowError):
+        executor._int32_nnz_capacity(executor._INT32_MAX + 1)
+
+
+def test_device_budget_error_names_total_ip():
+    a, b = _pair()
+    plan = spgemm(a, b).plan
+    executor.set_device_budget(8)
+    with pytest.raises(executor.DeviceBudgetExceeded,
+                       match=str(plan.total_ip)):
+        spgemm(a, b)
+
+
+# ---------------------------------------------------------------------------
+# constrain(): counted no-mesh fallback (satellite)
+# ---------------------------------------------------------------------------
+
+def test_constrain_outside_mesh_counts_fallback():
+    import jax
+    from jax.sharding import PartitionSpec
+    from repro.launch.sharding import constrain
+
+    f0 = executor.cache_stats()["sharding_fallbacks"]
+    x = jax.numpy.ones((4, 4))
+    y = constrain(x, PartitionSpec("x", None))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    assert executor.cache_stats()["sharding_fallbacks"] - f0 == 1
+    executor.clear_program_cache()
+    assert executor.cache_stats()["sharding_fallbacks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Serving robustness: deadlines, retry-with-backoff, quarantine
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _pattern_csr(mask_seed, val_seed, shape=(20, 20), density=0.3):
+    rng = np.random.default_rng(mask_seed)
+    mask = rng.random(shape) < density
+    # values strictly nonzero: same mask seed must mean same CSR pattern
+    vals = np.random.default_rng(val_seed).integers(1, 5, shape)
+    return csr_from_dense(np.where(mask, vals, 0).astype(np.float32))
+
+
+def _service(**kw):
+    from repro.serve import SpGEMMService
+    clock = FakeClock()
+    slept = []
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait", 0.05)
+    kw.setdefault("max_queue", 64)
+    svc = SpGEMMService(clock=clock, sleep=slept.append, **kw)
+    return svc, clock, slept
+
+
+def test_serve_resolvers_validate():
+    from repro.serve.spgemm_service import (
+        DEFAULT_BACKOFF, resolve_backoff, resolve_deadline, resolve_retries)
+    assert resolve_deadline(None) is None
+    assert resolve_deadline(0.5) == 0.5
+    assert resolve_retries(None) == 0
+    assert resolve_retries(3) == 3
+    assert resolve_backoff(None) == DEFAULT_BACKOFF
+    assert resolve_backoff(0.01) == 0.01
+    for bad in (-1, 0, True, "soon"):
+        with pytest.raises(ValueError):
+            resolve_deadline(bad)
+    for bad in (-1, True, 1.5):
+        with pytest.raises(ValueError):
+            resolve_retries(bad)
+    for bad in (-0.1, 0, True):
+        with pytest.raises(ValueError):
+            resolve_backoff(bad)
+
+
+def test_serve_deadline_expires_queued_request():
+    from repro.serve import DeadlineExceeded
+    svc, clock, _ = _service(max_batch=8, max_wait=0.05)
+    a0, b0 = _pattern_csr(1, 10), _pattern_csr(2, 20)
+    t_dead = svc.submit("t", a0, b0, deadline=0.5)
+    t_live = svc.submit("t", a0, _pattern_csr(2, 21))
+    clock.t = 1.0  # past t_dead's deadline, past max_wait
+    svc.poll()
+    assert t_dead.done and t_live.done
+    with pytest.raises(DeadlineExceeded):
+        t_dead.result()
+    ref = spgemm(a0, _pattern_csr(2, 21))
+    assert_bit_exact(t_live.result().c, ref.c)
+    st = svc.stats()
+    assert st["deadline_exceeded"] == 1
+    assert st["requests_completed"] == 1
+
+
+def test_serve_retry_backoff_exhausts_to_queue_full():
+    from repro.serve import QueueFull
+    svc, _, slept = _service(max_batch=8, max_wait=10.0, max_queue=2)
+    svc.submit("t", _pattern_csr(1, 1), _pattern_csr(2, 2))
+    svc.submit("t", _pattern_csr(3, 3), _pattern_csr(4, 4))
+    with pytest.raises(QueueFull):
+        svc.submit("t", _pattern_csr(5, 5), _pattern_csr(6, 6),
+                   retries=2, backoff=0.1)
+    assert slept == [0.1, 0.2]  # exponential: backoff * 2**attempt
+    st = svc.stats()
+    assert st["retries"] == 2 and st["requests_shed"] == 1
+
+
+def test_serve_retry_backoff_succeeds_when_queue_drains():
+    svc, clock, slept = _service(max_batch=8, max_wait=0.05, max_queue=2)
+    svc.submit("t", _pattern_csr(1, 1), _pattern_csr(2, 2))
+    svc.submit("t", _pattern_csr(3, 3), _pattern_csr(4, 4))
+
+    def sleep(s):
+        slept.append(s)
+        clock.t += s  # sleeping past max_wait lets the retry's poll flush
+
+    svc._sleep = sleep
+    tk = svc.submit("t", _pattern_csr(5, 5), _pattern_csr(6, 6),
+                    retries=3, backoff=0.1)
+    assert slept == [0.1]
+    st = svc.stats()
+    assert st["retries"] == 1 and st["requests_shed"] == 0
+    ref = spgemm(_pattern_csr(5, 5), _pattern_csr(6, 6))
+    assert_bit_exact(tk.result().c, ref.c)
+
+
+def test_serve_batch_failure_isolates_poison_member():
+    svc, _, _ = _service(max_batch=3, max_wait=10.0)
+    a_mats = [_pattern_csr(1, 100 + i) for i in range(3)]
+    b_mats = [_pattern_csr(2, 200 + i) for i in range(3)]
+    with faults.fault_injection("dispatch_fail", times=2):
+        # 3rd same-pattern submit dispatches the batch inside the context:
+        # hit 1 fails the coalesced dispatch, hit 2 fails member 0's
+        # isolated replay — exactly one poison member
+        tickets = [svc.submit("t", a_mats[i], b_mats[i]) for i in range(3)]
+    assert all(t.done for t in tickets)
+    with pytest.raises(faults.FaultInjected):
+        tickets[0].result()
+    for i in (1, 2):
+        ref = spgemm(a_mats[i], b_mats[i])
+        assert_bit_exact(tickets[i].result().c, ref.c)
+    st = svc.stats()
+    assert st["quarantined"] == 1
+    assert st["requests_completed"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Trainer: narrowed recovery (satellite)
+# ---------------------------------------------------------------------------
+
+def _tiny_trainer(tmpdir, failure_injector, total_steps=4):
+    from typing import NamedTuple
+
+    from repro.data.pipeline import TokenPipeline
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    class State(NamedTuple):
+        step: np.int64
+        w: np.ndarray
+
+    def step_fn(state, batch):
+        return (State(step=np.int64(state.step) + 1, w=state.w + 1.0),
+                {"loss": 0.0})
+
+    cfg = TrainerConfig(total_steps=total_steps, checkpoint_every=1,
+                        checkpoint_dir=tmpdir, max_restarts=2)
+    pipe = TokenPipeline(vocab=16, seq_len=4, global_batch=1, seed=0)
+    state = State(step=np.int64(0), w=np.zeros(2, np.float32))
+    return Trainer(cfg, step_fn, state, pipe,
+                   failure_injector=failure_injector)
+
+
+def test_trainer_programming_errors_propagate(tmp_path):
+    def inject(step):
+        raise TypeError("not a device failure")
+
+    tr = _tiny_trainer(str(tmp_path), inject)
+    with pytest.raises(TypeError, match="not a device failure"):
+        tr.run()
+    assert tr.restarts == 0 and tr.failures == []
+
+
+def test_trainer_records_and_logs_recovered_failures(tmp_path, caplog):
+    killed = {"done": False}
+
+    def inject(step):
+        if step == 2 and not killed["done"]:
+            killed["done"] = True
+            raise RuntimeError("simulated preemption")
+
+    tr = _tiny_trainer(str(tmp_path), inject)
+    with caplog.at_level("WARNING", logger="repro.train.trainer"):
+        state = tr.run()
+    assert int(np.asarray(state.step)) == 4
+    assert tr.restarts == 1
+    assert tr.failures == [(2, repr(RuntimeError("simulated preemption")))]
+    assert any("restart 1/2" in r.message for r in caplog.records)
